@@ -1,0 +1,57 @@
+"""Histogram-probe scaling: the paper's store at pod scale.
+
+Demonstrates (a) measured single-device scan throughput vs N, and (b) the
+sharded-probe collective cost model: counts/top-k combine is O(k), so probe
+latency stays flat as the store scales across chips (DESIGN.md §2 claim).
+
+CSV: bench,config,us_per_call,derived
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.analysis.roofline import HBM_BW, LINK_BW
+from repro.core.histogram import _local_probe
+
+
+def main() -> list[str]:
+    rows = [csv_row("bench", "config", "us_per_call", "derived")]
+    rng = np.random.default_rng(0)
+    pred = jnp.asarray(rng.standard_normal(1152), jnp.float32)
+    thr = jnp.asarray([0.5], jnp.float32)
+    f = jax.jit(lambda s, p, t: _local_probe(s, p, t, 128))
+    for n in (10_000, 100_000, 500_000):
+        store = jnp.asarray(rng.standard_normal((n, 1152)), jnp.float32)
+        f(store, pred, thr)[0].block_until_ready()
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            jax.block_until_ready(f(store, pred, thr))
+        us = (time.perf_counter() - t0) / iters * 1e6
+        rows.append(csv_row("probe_measured_cpu", f"N={n}", f"{us:.0f}",
+                            f"{n*1152*4/(us/1e6)/1e9:.1f}GB/s"))
+
+    # v5e analytic: per-chip probe time for a pod-scale store
+    for total in (1e8, 1e9):
+        per_chip = total / 256
+        bytes_chip = per_chip * 1152 * 4
+        t_mem = bytes_chip / HBM_BW
+        t_coll = (128 * 4 * 2) / LINK_BW  # all-gather top-k + psum counts
+        rows.append(csv_row(
+            "probe_v5e_analytic", f"N={total:.0e},256chips",
+            f"{(t_mem + t_coll)*1e6:.0f}",
+            f"mem={t_mem*1e6:.0f}us,coll={t_coll*1e6:.2f}us"))
+    rows.append(csv_row("probe_v5e_analytic", "conclusion", "-",
+                        "collective O(k) -> probe scales linearly in N/chips"))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

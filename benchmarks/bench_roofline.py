@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and emits
+the three-term roofline per (arch x shape x mesh) with the dominant
+bottleneck and MODEL_FLOPS/HLO_FLOPS utilization ratio.
+
+CSV: cell,compute_ms,memory_ms,collective_ms,bottleneck,useful_ratio,GB_per_dev
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def main() -> list[str]:
+    rows = [csv_row("cell", "compute_ms", "memory_ms", "collective_ms",
+                    "bottleneck", "useful_ratio", "GB_per_dev")]
+    files = sorted(glob.glob(str(DRYRUN_DIR / "*.json")))
+    if not files:
+        rows.append(csv_row("(no dry-run artifacts — run "
+                            "`python -m repro.launch.dryrun --all` first)",
+                            0, 0, 0, "-", 0, 0))
+        return rows
+    for f in files:
+        r = json.load(open(f))
+        roof = r["roofline"]
+        mem = r["memory"]
+        gb = ((mem.get("argument_size_in_bytes") or 0)
+              + (mem.get("temp_size_in_bytes") or 0)) / 1e9
+        rows.append(csv_row(
+            r["cell"],
+            f"{roof['compute_term']*1e3:.2f}",
+            f"{roof['memory_term']*1e3:.2f}",
+            f"{roof['collective_term']*1e3:.2f}",
+            roof["bottleneck"],
+            f"{roof['useful_ratio']:.3f}",
+            f"{gb:.1f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

@@ -1,0 +1,85 @@
+"""Paper Figure 3: Q-error vs estimation latency, per dataset x method x config.
+
+Methods: sampling (sizes 1..64), specificity model, compressed KV-cache
+batching (32/0.6, 64/0.8, 128/0.9 — the paper's equal-memory configs),
+ensemble. 20 seeds; median + p5/p95 Q-error; latency = measured embedding-side
+seconds + vlm_calls x per-call (DESIGN.md §9.4 latency accounting).
+
+CSV: dataset,method,config,median_q,p5_q,p95_q,lat_s,vlm_calls
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (
+    DATASETS,
+    KV_CONFIGS,
+    N_IMAGES,
+    SAMPLING_SIZES,
+    csv_row,
+    dataset_stack,
+)
+from repro.core.estimators import KVBatchEstimator, SamplingEstimator
+from repro.core.kvbatch import build_compressed_store
+from repro.core.metrics import q_error, summarize_q_errors
+from repro.core.optimizer import DEFAULT_VLM_CALL_S
+from repro.kernels.kmeans.ops import medoid_sample
+
+N_SEEDS = 20
+
+
+def eval_estimator(stack, est, *, seeds=N_SEEDS) -> dict:
+    corpus = stack["corpus"]
+    nodes = corpus.predicate_nodes()
+    qs, lat, calls = [], [], []
+    # warmup (jit)
+    est.estimate(nodes[0], seed=0)
+    for seed in range(seeds):
+        for nid in nodes:
+            e = est.estimate(nid, seed=seed)
+            qs.append(q_error(e.selectivity, corpus.true_selectivity(nid),
+                              N_IMAGES))
+            lat.append(e.measured_s + e.vlm_calls * DEFAULT_VLM_CALL_S)
+            calls.append(e.vlm_calls)
+    s = summarize_q_errors(qs)
+    return {**s, "lat_s": float(np.mean(lat)), "vlm_calls": float(np.mean(calls))}
+
+
+def main(kv_sweep: bool = True, seeds: int = N_SEEDS) -> list[str]:
+    rows = [csv_row("dataset", "method", "config", "median_q", "p5_q", "p95_q",
+                    "lat_s", "vlm_calls")]
+    for ds in DATASETS:
+        stack = dataset_stack(ds)
+        corpus = stack["corpus"]
+        for n in SAMPLING_SIZES:
+            r = eval_estimator(stack, SamplingEstimator(corpus, n), seeds=seeds)
+            rows.append(csv_row(ds, "sampling", n, f"{r['median']:.3f}",
+                                f"{r['p5']:.3f}", f"{r['p95']:.3f}",
+                                f"{r['lat_s']:.4f}", r["vlm_calls"]))
+        for name in ("specificity", "kvbatch", "ensemble"):
+            r = eval_estimator(stack, stack[name], seeds=seeds)
+            cfg = "128/0.9" if name != "specificity" else "-"
+            rows.append(csv_row(ds, name, cfg, f"{r['median']:.3f}",
+                                f"{r['p5']:.3f}", f"{r['p95']:.3f}",
+                                f"{r['lat_s']:.4f}", r["vlm_calls"]))
+        if kv_sweep:
+            for (n, rate) in KV_CONFIGS[:-1]:   # 128/0.9 already covered
+                ids = medoid_sample(corpus.images, n, iters=6, seed=0)
+                store = build_compressed_store(corpus.images, ids, rate=rate,
+                                               seed=0)
+                est = KVBatchEstimator(corpus, stack["hist"], store,
+                                       run_machinery=False)
+                r = eval_estimator(stack, est, seeds=seeds)
+                rows.append(csv_row(ds, "kvbatch", f"{n}/{rate}",
+                                    f"{r['median']:.3f}", f"{r['p5']:.3f}",
+                                    f"{r['p95']:.3f}", f"{r['lat_s']:.4f}",
+                                    r["vlm_calls"]))
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

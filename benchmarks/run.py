@@ -1,0 +1,66 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+
+Sections (one per paper table/figure + the roofline deliverable):
+  fig3      — Q-error vs latency (paper Fig. 3) incl. the KV compression sweep
+  fig4      — end-to-end overhead vs #filters (paper Fig. 4)
+  kernels   — kernel microbenchmarks
+  probe     — histogram-probe scaling (pod-scale store)
+  roofline  — three-term roofline per dry-run cell
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(name: str, rows: list[str]) -> None:
+    print(f"\n##### {name} #####")
+    for r in rows:
+        print(r)
+    sys.stdout.flush()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer seeds/queries (CI mode)")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "fig3", "fig4", "kernels", "probe",
+                             "roofline"])
+    args = ap.parse_args()
+    t0 = time.time()
+
+    want = lambda s: args.only in (None, s)
+
+    if want("fig3"):
+        from benchmarks import fig3_qerror_latency
+
+        _section("fig3_qerror_latency",
+                 fig3_qerror_latency.main(kv_sweep=True,
+                                          seeds=5 if args.fast else 20))
+    if want("fig4"):
+        from benchmarks import fig4_end_to_end
+
+        _section("fig4_end_to_end",
+                 fig4_end_to_end.main(seeds=(0,) if args.fast else (0, 1)))
+    if want("kernels"):
+        from benchmarks import bench_kernels
+
+        _section("bench_kernels", bench_kernels.main())
+    if want("probe"):
+        from benchmarks import bench_probe_scaling
+
+        _section("bench_probe_scaling", bench_probe_scaling.main())
+    if want("roofline"):
+        from benchmarks import bench_roofline
+
+        _section("bench_roofline", bench_roofline.main())
+
+    print(f"\n(total {time.time()-t0:.1f}s)")
+
+
+if __name__ == "__main__":
+    main()

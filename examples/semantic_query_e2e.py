@@ -1,0 +1,49 @@
+"""End-to-end semantic query execution (paper §4.3): build the full stack,
+plan multi-filter queries with every estimator, execute the cascades, and
+report overhead vs the zero-latency oracle.
+
+    PYTHONPATH=src python examples/semantic_query_e2e.py [--dataset ecommerce]
+
+(This is the example-sized version of benchmarks/fig4_end_to_end.py; the
+serving driver `python -m repro.launch.serve` exposes the same flow as a CLI.)
+"""
+
+import argparse
+import pathlib
+import sys
+
+import numpy as np
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.common import dataset_stack
+from repro.core.optimizer import execute_cascade, generate_queries, plan_query
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="wildlife")
+    ap.add_argument("--n-queries", type=int, default=6)
+    args = ap.parse_args()
+
+    stack = dataset_stack(args.dataset)
+    corpus = stack["corpus"]
+    queries = generate_queries(corpus, n_queries=args.n_queries, n_filters=3,
+                               seed=0)
+    print(f"{args.dataset}: {len(queries)} queries x 3 filters, "
+          f"N={len(corpus.images)} images\n")
+
+    totals = {}
+    for q in queries:
+        base = execute_cascade(corpus, plan_query(q, stack["oracle"]), seed=0)
+        for name in ("specificity", "kvbatch", "ensemble"):
+            res = execute_cascade(corpus, plan_query(q, stack[name], seed=0),
+                                  seed=0)
+            totals.setdefault(name, []).append(res.total_s - base.total_s)
+
+    print(f"{'method':>12s} {'mean overhead vs oracle':>26s}")
+    for name, os_ in totals.items():
+        print(f"{name:>12s} {np.mean(os_):>20.2f}s ± {np.std(os_):.2f}")
+
+
+if __name__ == "__main__":
+    main()

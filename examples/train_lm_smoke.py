@@ -1,0 +1,25 @@
+"""Train a reduced LM end-to-end with the full distributed-training substrate
+(data pipeline -> train_step -> watchdog -> async checkpoints), on CPU.
+
+    PYTHONPATH=src python examples/train_lm_smoke.py [--arch jamba-v0.1-52b]
+
+Every assigned arch id works (reduced configs); loss must decrease.
+"""
+
+import argparse
+import sys
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    args, _ = ap.parse_known_args()
+    sys.argv = ["train", "--arch", args.arch, "--steps", "30", "--batch", "8",
+                "--seq", "64", "--ckpt-every", "10"]
+    train.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Train the specificity model end-to-end with the framework's own training
+substrate, with checkpointing and fault tolerance — the 'train a model for a
+few hundred steps' example (deliverable b).
+
+    PYTHONPATH=src python examples/train_specificity.py
+"""
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.paper_stack import SpecificityModelConfig
+from repro.core.specificity import specificity_apply, specificity_specs, train_specificity
+from repro.core.synthetic import make_corpus, specificity_dataset
+
+
+def main():
+    corpus = make_corpus("wildlife", n_images=1000, seed=0)
+    X, y = specificity_dataset(corpus, n_samples=4000, seed=0)
+    cfg = SpecificityModelConfig(embed_dim=X.shape[1], steps=800)
+    model, metrics = train_specificity(X, y, cfg, log_every=100)
+    print(f"\ntrained {cfg.steps} steps in {metrics['train_s']:.1f}s  "
+          f"val_mae={metrics['val_mae']:.4f}")
+
+    ckpt = CheckpointManager("/tmp/repro_spec_ckpt", keep=2)
+    ckpt.save(cfg.steps, model.params)
+    restored = ckpt.restore(None, like=model.params)
+    import jax.numpy as jnp
+
+    p = specificity_apply(restored, jnp.asarray(X[:4]))
+    print("restored-model thresholds for 4 predicates:",
+          np.round(np.asarray(p), 4))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Dev loop: run a reduced forward+train+prefill+decode for every arch on CPU."""
+
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import nn
+from repro.models.steps import (
+    cache_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_state,
+    make_train_step,
+)
+
+B, S = 2, 32
+
+
+def batch_for(cfg, rng):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if cfg.encdec:
+        return {
+            "frames": jax.random.normal(k1, (B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k3, (B, S), 0, cfg.vocab_size),
+        }
+    if cfg.vlm is not None:
+        p = cfg.vlm.num_patch_tokens
+        return {
+            "patch_embeds": jax.random.normal(k1, (B, p, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.random.randint(k2, (B, S - p), 0, cfg.vocab_size),
+            "labels": jax.random.randint(k3, (B, S - p), 0, cfg.vocab_size),
+        }
+    return {
+        "tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(k3, (B, S), 0, cfg.vocab_size),
+    }
+
+
+def prefill_inputs(cfg, rng):
+    b = batch_for(cfg, rng)
+    b.pop("labels")
+    return b
+
+
+def run(arch):
+    cfg = get_config(arch, smoke=True)
+    rng = jax.random.PRNGKey(0)
+    state = make_train_state(cfg, rng)
+    n = nn.count_params(jax.tree.map(
+        lambda x: nn.ParamSpec(x.shape, x.dtype), state["params"]),)
+    batch = batch_for(cfg, rng)
+
+    train = jax.jit(make_train_step(cfg, num_microbatches=2))
+    state2, metrics = train(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: loss NaN"
+
+    prefill = jax.jit(make_prefill_step(cfg, batch=B, max_len=S + 8))
+    logits, cache = prefill(state["params"], prefill_inputs(cfg, rng))
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), f"{arch}: prefill NaN"
+
+    decode = jax.jit(make_decode_step(cfg))
+    tok = jnp.zeros((B, 1), jnp.int32)
+    lg, cache = decode(state["params"], cache, {"tokens": tok},
+                       jnp.asarray(S, jnp.int32))
+    assert lg.shape == (B, cfg.vocab_size), f"{arch}: decode shape {lg.shape}"
+    assert np.isfinite(np.asarray(lg, np.float32)).all(), f"{arch}: decode NaN"
+    print(f"OK  {arch:26s} params={n:,} loss={loss:.3f}")
+
+
+if __name__ == "__main__":
+    archs = sys.argv[1:] or list(ASSIGNED)
+    fails = []
+    for a in archs:
+        try:
+            run(a)
+        except Exception:
+            fails.append(a)
+            print(f"FAIL {a}")
+            traceback.print_exc()
+    sys.exit(1 if fails else 0)

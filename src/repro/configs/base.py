@@ -1,0 +1,194 @@
+"""Config system: typed dataclasses + a registry keyed by ``--arch`` ids.
+
+Every assigned architecture gets one file in this package registering (a) the
+full production config (exercised only abstractly, via the dry-run) and (b) a
+``smoke`` reduction of the same family (runnable on one CPU device).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import pkgutil
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                 # per-expert ffn hidden size
+    num_shared: int = 0           # shared (always-on) experts
+    router_jitter: float = 0.0
+    capacity_factor: float = 1.25  # used by dropping dispatch path
+    dispatch: str = "dense"        # dense (einsum masked) | ragged (sorted)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 = no query compression (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256              # SSD chunk length
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    """Modality frontend STUB: input_specs() provides precomputed embeddings."""
+
+    num_patch_tokens: int = 2880   # anyres 5 tiles x 576
+    patch_embed_dim: int = 0       # 0 -> equals d_model (projector output)
+
+
+@dataclasses.dataclass(frozen=True)
+class AudioConfig:
+    """Speech frontend STUB: precomputed frame embeddings feed the encoder."""
+
+    frame_dim: int = 0             # 0 -> equals d_model
+    dec_len_ratio: float = 1.0     # decoder seq = ratio * shape seq
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    # attention
+    attn_kind: str = "full"        # full | swa
+    window: int = 4096             # swa window
+    rope_theta: float = 500000.0
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # heterogeneous stacks --------------------------------------------------
+    # layer_pattern repeats over the stack; entries: "attn" | "mamba"
+    layer_pattern: tuple[str, ...] = ("attn",)
+    # mlp_pattern repeats in lockstep; entries: "dense" | "moe"
+    mlp_pattern: tuple[str, ...] = ("dense",)
+    first_k_dense: int = 0         # leading layers forced to dense mlp (deepseek)
+    # sub-configs
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    vlm: VLMConfig | None = None
+    audio: AudioConfig | None = None
+    encdec: bool = False
+    num_enc_layers: int = 0        # enc-dec only
+    # numerics / memory policy ----------------------------------------------
+    param_dtype: Any = jnp.bfloat16
+    compute_dtype: Any = jnp.bfloat16
+    optstate_dtype: Any = jnp.float32   # bf16 for the 405B cell (see DESIGN.md)
+    optimizer: str = "adamw"            # adamw | adafactor (405B: adafactor)
+    grad_accum_dtype: Any = jnp.float32  # bf16 for the 405B cell
+    serve_cache_dtype: Any = None        # None -> compute_dtype; fp8 for 405B
+    remat: str = "full"            # full | dots | none
+    remat_group: int = 0           # >1: two-level sqrt(L) scan remat (405B)
+    seq_sharding: bool = False     # Megatron-SP: shard residual stream's seq
+                                   # axis over 'model' between blocks (train)
+    attn_head_dim_sharding: bool = False  # shard attention weights' head_dim
+                                   # over 'model' (for heads % model != 0)
+    microbatch_tokens: int = 1 << 19  # grad-accum target tokens per microbatch
+    fsdp: bool = False             # shard weights' embed axis over data
+    scan_layers: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(1, self.num_heads))
+        if self.num_layers % len(self.layer_pattern):
+            raise ValueError("layer_pattern must tile num_layers")
+
+    @property
+    def attention_free(self) -> bool:
+        return all(k == "mamba" for k in self.layer_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k shape."""
+        if self.attention_free:
+            return True
+        if self.attn_kind == "swa":
+            return True
+        # hybrids qualify when their attention layers use a window
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+    microbatch: int = 0            # 0 -> auto (grad accumulation divisor)
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str, full: Callable[[], ModelConfig], smoke: Callable[[], ModelConfig]):
+    _REGISTRY[arch_id] = full
+    _SMOKE[arch_id] = smoke
+
+
+def _load_all():
+    import repro.configs as pkg
+
+    for mod in pkgutil.iter_modules(pkg.__path__):
+        if mod.name not in ("base", "__init__"):
+            importlib.import_module(f"repro.configs.{mod.name}")
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    _load_all()
+    table = _SMOKE if smoke else _REGISTRY
+    if arch_id not in table:
+        raise KeyError(f"unknown arch '{arch_id}'; have {sorted(table)}")
+    return table[arch_id]()
+
+
+def list_archs() -> list[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def cells(arch_id: str) -> list[str]:
+    """Live (non-skipped) shape names for an arch — see DESIGN.md §7."""
+    cfg = get_config(arch_id)
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue  # pure full-attention arch: skip, documented in DESIGN.md
+        out.append(s.name)
+    return out

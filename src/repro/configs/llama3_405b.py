@@ -1,0 +1,51 @@
+"""llama3-405b [dense]: 126L d=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+
+GQA + 128k vocab [arXiv:2407.21783]. Largest assigned cell: FSDP weight
+sharding + bf16 optimizer states (stochastic rounding on TPU) to fit v5e HBM —
+see DESIGN.md §4.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b",
+        family="dense",
+        num_layers=126,
+        d_model=16384,
+        num_heads=128,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=53248,
+        vocab_size=128256,
+        rope_theta=500000.0,
+        fsdp=True,
+        optimizer="adafactor",   # factored 2nd moment (PaLM recipe): the only
+        optstate_dtype=jnp.bfloat16,  # way 405B optimizer state fits v5e HBM
+        grad_accum_dtype=jnp.bfloat16,
+        remat="full",
+        remat_group=9,           # 126 = 14 groups x 9 layers (sqrt-L remat)
+        microbatch_tokens=1 << 16,
+        serve_cache_dtype=jnp.float8_e4m3fn,  # fp8 KV cache: 4.3TB -> 2.1TB
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        rope_theta=500000.0,
+    )
+
+
+register("llama3-405b", full, smoke)

@@ -1,0 +1,50 @@
+"""llava-next-34b [vlm]: 60L d=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+
+Anyres tiling [hf:llava-hf/llava-v1.6]. Transformer BACKBONE only per the
+assignment — the vision tower / anyres tiling frontend is a STUB:
+``input_specs()`` provides precomputed projector-output patch embeddings
+(B, 2880, d_model). This is the paper's own KV-cache-VLM family (LLaVA-NeXT),
+making it the most representative arch for the compressed-KV-batching cell.
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, VLMConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-34b",
+        family="vlm",
+        num_layers=60,
+        d_model=7168,
+        num_heads=56,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=20480,
+        vocab_size=64000,
+        rope_theta=5000000.0,
+        vlm=VLMConfig(num_patch_tokens=2880),
+        fsdp=True,
+        remat_group=10,          # 60 = 6 groups x 10 layers
+        microbatch_tokens=1 << 16,
+        serve_cache_dtype=jnp.float8_e4m3fn,  # §Perf D1: halves decode reads
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-smoke",
+        family="vlm",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        vlm=VLMConfig(num_patch_tokens=8),
+    )
+
+
+register("llava-next-34b", full, smoke)

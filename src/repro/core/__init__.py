@@ -1,0 +1,2 @@
+from repro.core.metrics import q_error
+from repro.core.synthetic import Corpus, make_corpus, specificity_dataset

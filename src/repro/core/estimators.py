@@ -1,0 +1,149 @@
+"""The four selectivity estimators of the paper, behind one interface.
+
+Latency accounting (DESIGN.md §9.4): every estimate carries
+  * measured_s   — wall time actually measured on this machine for the
+                   estimator's own compute (probe, MLP, batched decode), and
+  * vlm_calls    — equivalent sequential VLM calls the method costs online
+                   (sampling: n; kv-batch: ~1, the paper's headline claim).
+End-to-end figures convert calls -> seconds with a per-call latency constant
+so relative comparisons match the paper's protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core.histogram import SemanticHistogram
+from repro.core.kvbatch import (
+    CompressedCacheStore,
+    batched_prompt_decode,
+    threshold_from_matches,
+)
+from repro.core.specificity import SpecificityModel
+from repro.core.synthetic import Corpus
+
+
+@dataclasses.dataclass
+class Estimate:
+    selectivity: float
+    measured_s: float
+    vlm_calls: float            # sequential-equivalent online VLM calls
+    threshold: float | None = None
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+class SamplingEstimator:
+    """The online-profiling baseline every semantic data system uses."""
+
+    def __init__(self, corpus: Corpus, sample_size: int):
+        self.corpus = corpus
+        self.n = sample_size
+        self.name = f"sampling-{sample_size}"
+
+    def estimate(self, node_id: int, seed: int = 0) -> Estimate:
+        rng = np.random.default_rng(seed)
+        ids = rng.choice(len(self.corpus.images), size=self.n, replace=False)
+        t0 = time.perf_counter()
+        ans = self.corpus.vlm_answer(node_id, ids, seed=seed)
+        dt = time.perf_counter() - t0
+        sel = float(ans.mean())
+        return Estimate(sel, dt, vlm_calls=self.n)
+
+
+class SpecificityEstimator:
+    """Paper §3.1: MLP threshold -> histogram probe. No VLM calls at all."""
+
+    def __init__(self, corpus: Corpus, hist: SemanticHistogram,
+                 model: SpecificityModel):
+        self.corpus, self.hist, self.model = corpus, hist, model
+        self.name = "specificity-model"
+
+    def estimate(self, node_id: int, seed: int = 0) -> Estimate:
+        t0 = time.perf_counter()
+        emb = self.corpus.text_embedding(node_id, seed)
+        thr = self.model.threshold(emb)
+        sel = self.hist.selectivity(emb, thr)
+        return Estimate(sel, time.perf_counter() - t0, vlm_calls=0.0,
+                        threshold=thr)
+
+
+class KVBatchEstimator:
+    """Paper §3.2: one batched decode over compressed caches -> threshold."""
+
+    def __init__(self, corpus: Corpus, hist: SemanticHistogram,
+                 store: CompressedCacheStore, *, prompt_len: int = 6,
+                 run_machinery: bool = True):
+        self.corpus, self.hist, self.store = corpus, hist, store
+        self.prompt_len = prompt_len
+        self.run_machinery = run_machinery
+        self.name = f"kvbatch-{len(store.sample_ids)}"
+        self._machine_s: float | None = None
+
+    def _machinery_latency(self) -> float:
+        """Measured batched prompt-decode latency (cached: prompt length and
+        batch are constant across predicates, per the paper's design)."""
+        if self._machine_s is None:
+            if self.run_machinery:
+                prompt = np.arange(self.prompt_len) % self.store.cfg.vocab_size
+                _, dt = batched_prompt_decode(self.store, prompt)
+                self._machine_s = dt
+            else:
+                self._machine_s = 0.0
+        return self._machine_s
+
+    def estimate(self, node_id: int, seed: int = 0) -> Estimate:
+        machine_s = self._machinery_latency()
+        t0 = time.perf_counter()
+        emb = self.corpus.text_embedding(node_id, seed)
+        ids = self.store.sample_ids
+        # answers: oracle stands in for the (synthetic-weight) VLM's argmax
+        ans = self.corpus.vlm_answer(node_id, ids, seed=seed)
+        m = int(ans.sum())
+        dists = 1.0 - self.corpus.images[ids] @ emb
+        thr = threshold_from_matches(dists, m)
+        sel = self.hist.selectivity(emb, thr)
+        dt = time.perf_counter() - t0
+        # measured_s = embedding-side work only; the batched-decode machinery
+        # cost is modeled by vlm_calls=1 (TPU) and reported raw in extra
+        # (CPU execution of a VLM is not representative — DESIGN.md §9.4)
+        return Estimate(sel, dt, vlm_calls=1.0, threshold=thr,
+                        extra={"sample_matches": m,
+                               "machine_cpu_s": machine_s})
+
+
+class EnsembleEstimator:
+    """Paper §3.3: average the two thresholds; most robust across datasets."""
+
+    def __init__(self, spec: SpecificityEstimator, kvb: KVBatchEstimator):
+        self.spec, self.kvb = spec, kvb
+        self.hist = spec.hist
+        self.corpus = spec.corpus
+        self.name = "ensemble"
+
+    def estimate(self, node_id: int, seed: int = 0) -> Estimate:
+        e1 = self.spec.estimate(node_id, seed)
+        e2 = self.kvb.estimate(node_id, seed)
+        t0 = time.perf_counter()
+        emb = self.corpus.text_embedding(node_id, seed)
+        thr = 0.5 * (e1.threshold + e2.threshold)
+        sel = self.hist.selectivity(emb, thr)
+        dt = time.perf_counter() - t0
+        return Estimate(sel, e1.measured_s + e2.measured_s + dt,
+                        vlm_calls=e2.vlm_calls, threshold=thr,
+                        extra=e2.extra)
+
+
+class OracleEstimator:
+    """Zero-latency perfect selectivity — the paper's Fig.4 baseline."""
+
+    name = "oracle"
+
+    def __init__(self, corpus: Corpus):
+        self.corpus = corpus
+
+    def estimate(self, node_id: int, seed: int = 0) -> Estimate:
+        return Estimate(self.corpus.true_selectivity(node_id), 0.0, 0.0)

@@ -1,0 +1,102 @@
+"""The Semantic Histogram: an embedding store + threshold-probe (paper §2).
+
+No buckets — the paper's design decision is to keep *all* embeddings (§2.1);
+the store is a (N, d) matrix sharded over the data axes at pod scale. The two
+probe primitives are:
+
+  * ``count_within(pred, thr)``     -> selectivity (§2.2 step 5)
+  * ``kth_smallest_distance(pred, k)`` -> threshold calibration (§3.2)
+
+Both are a single fused pass over the store (cosine distances never
+materialize at full precision off-chip): on TPU via the ``cosine_topk`` Pallas
+kernel, on this CPU container via the jnp reference. Distributed: each shard
+counts/top-ks locally, then one tiny ``psum``/gather combines — the probe's
+collective traffic is O(k), independent of N.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+f32 = jnp.float32
+
+
+def _local_probe(store, pred, thresholds, k):
+    """store (n,d) f32/bf16; pred (d,); thresholds (t,). Returns
+    (counts (t,), smallest_k (k,)) — one pass, fused."""
+    sims = jnp.einsum("nd,d->n", store.astype(f32), pred.astype(f32))
+    dists = 1.0 - sims
+    counts = (dists[None, :] <= thresholds[:, None]).sum(axis=1)
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    return counts, -neg_top
+
+
+@dataclasses.dataclass
+class SemanticHistogram:
+    embeddings: jax.Array        # (N, d) unit vectors
+    mesh: object | None = None   # sharded probe when set
+    impl: str = "xla"            # xla | pallas (interpret on CPU)
+
+    def __post_init__(self):
+        self.n = self.embeddings.shape[0]
+        self._probe_jit = jax.jit(partial(self._probe), static_argnames=("k",))
+
+    # -------------------- core fused probe --------------------
+
+    def _probe(self, pred: jax.Array, thresholds: jax.Array, *, k: int):
+        if self.impl == "pallas":
+            from repro.kernels.cosine_topk import ops as ct
+
+            return ct.cosine_probe(self.embeddings, pred, thresholds, k=k)
+        return _local_probe(self.embeddings, pred, thresholds, k)
+
+    # -------------------- public API --------------------
+
+    def count_within(self, pred: np.ndarray, threshold: float) -> int:
+        counts, _ = self._probe_jit(
+            jnp.asarray(pred), jnp.asarray([threshold], f32), k=1
+        )
+        return int(counts[0])
+
+    def selectivity(self, pred: np.ndarray, threshold: float) -> float:
+        return self.count_within(pred, threshold) / self.n
+
+    def kth_smallest_distance(self, pred: np.ndarray, k: int) -> float:
+        k = max(1, min(k, self.n))
+        _, smallest = self._probe_jit(
+            jnp.asarray(pred), jnp.zeros((1,), f32), k=int(k)
+        )
+        return float(smallest[k - 1])
+
+    def distances(self, pred: np.ndarray) -> np.ndarray:
+        """Full distance vector — test/debug only (not the serving path)."""
+        sims = self.embeddings.astype(f32) @ jnp.asarray(pred, f32)
+        return np.asarray(1.0 - sims)
+
+
+def make_sharded_probe(mesh, *, k: int = 128):
+    """shard_map probe over a ('pod','data')-sharded store: local fused pass,
+    psum of counts, all-gather + resort of per-shard top-k. Used by the probe
+    scaling benchmark and the multi-pod serve path."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def probe(store, pred, thresholds):
+        counts, local_top = _local_probe(store, pred, thresholds, k)
+        counts = jax.lax.psum(counts, data_axes)
+        gathered = jax.lax.all_gather(local_top, data_axes, tiled=True)
+        return counts, -jax.lax.top_k(-gathered, k)[0]
+
+    return shard_map(
+        probe, mesh=mesh,
+        in_specs=(P(data_axes), P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )

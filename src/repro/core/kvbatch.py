@@ -1,0 +1,163 @@
+"""Compressed KV-cache batching (paper §3.2) — the full pipeline:
+
+  OFFLINE
+   1. k-means-diverse sample of ``sample_size`` images (kernels/kmeans medoids)
+   2. batched VLM prefill over the sample's (stubbed) patch embeddings
+   3. Expected-Attention compression of each layer's KV cache at ``rate``
+   4. compressed caches pre-loaded (on TPU: pinned in HBM, sharded over data)
+
+  ONLINE (per filter predicate)
+   5. finish prefill: run the short prompt token-by-token as batched decode
+      steps against all caches at once (the paper's "two more VLM passes")
+   6. read a yes/no answer token per image
+   7. calibrate: threshold = m-th smallest predicate<->sample distance where
+      m = #yes; if m == 0, the smallest observed distance (strictly-positive
+      estimates in the low-selectivity regime — the paper's key trick)
+
+Semantics vs systems split (DESIGN.md §5): with synthetic weights the VLM's
+logits carry no meaning, so *answers* come from the corpus oracle (noisy
+ground truth) while *latency and memory* come from executing the real
+machinery above. On a real deployment, step 6's argmax replaces the oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.steps import cache_specs, make_decode_step, make_prefill_step, model_specs
+from repro.serving.compress import QueryStats, calibration_q_stats, compress_cache
+
+f32 = jnp.float32
+
+
+def fabricate_patch_embeds(image_embs: np.ndarray, cfg: ModelConfig,
+                           n_patches: int, seed: int = 0) -> jax.Array:
+    """Modality-frontend STUB: deterministically lift a (B, d_img) image
+    embedding to (B, n_patches, d_model) pseudo projector outputs."""
+    rng = jax.random.PRNGKey(seed)
+    d_img = image_embs.shape[1]
+    lift = jax.random.normal(rng, (n_patches, d_img, cfg.d_model), f32)
+    lift = lift / np.sqrt(d_img)
+    return jnp.einsum("bd,pdm->bpm", jnp.asarray(image_embs, f32), lift).astype(
+        cfg.compute_dtype)
+
+
+@dataclasses.dataclass
+class CompressedCacheStore:
+    """Per-layer compressed (k, v) stacks for the whole sample batch."""
+
+    cfg: ModelConfig
+    params: Any
+    cache: Any                # framework cache pytree, compressed lengths
+    cache_len: int            # compressed length actually valid
+    cache_capacity: int       # allocated length (compressed + prompt room)
+    sample_ids: np.ndarray    # image ids in the sample
+    build_s: float
+    bytes_total: int
+
+
+def build_compressed_store(
+    image_embs: np.ndarray,
+    sample_ids: np.ndarray,
+    *,
+    arch: str = "llava-next-8b",
+    smoke: bool = True,
+    rate: float = 0.9,
+    prompt_room: int = 16,
+    seed: int = 0,
+) -> CompressedCacheStore:
+    """Offline steps 2-4 on the (reduced on CPU) VLM config."""
+    cfg = get_config(arch, smoke=smoke)
+    t0 = time.perf_counter()
+    rng = jax.random.PRNGKey(seed)
+    params = nn.init_params(rng, model_specs(cfg))
+
+    B = len(sample_ids)
+    n_patches = cfg.vlm.num_patch_tokens
+    patches = fabricate_patch_embeds(image_embs[sample_ids], cfg, n_patches, seed)
+
+    keep = max(1, int(np.ceil(n_patches * (1.0 - rate))))
+    capacity = keep + prompt_room
+    prefill = jax.jit(make_prefill_step(cfg, batch=B, max_len=n_patches))
+    _, full_cache = prefill(params, {"patch_embeds": patches})
+
+    # q statistics for the press from a generic calibration prompt
+    calib_tokens = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, 32),
+                                      0, cfg.vocab_size)
+    qstats = calibration_q_stats(params, cfg, calib_tokens)
+
+    # compress every attention layer's cache; re-lay into capacity-sized bufs
+    def compress_layer(c, li):
+        k, v = c["k"], c["v"]
+        mu, var = qstats.mu[li], qstats.var[li]
+        if mu is None:  # non-attention layer (not the case for llava)
+            return c
+        k_c, v_c, _ = compress_cache(k, v, jnp.asarray(mu), jnp.asarray(var),
+                                     rate=rate)
+        pad = capacity - k_c.shape[1]
+        k_c = jnp.pad(k_c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_c = jnp.pad(v_c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        return {"k": k_c, "v": v_c}
+
+    # walk the cache pytree: "first" unstacked layers + "blocks" stacked
+    from repro.models.lm import stack_layout
+
+    first_k, P, R = stack_layout(cfg)
+    new_cache = {"first": [], "blocks": []}
+    li = 0
+    for j in range(first_k):
+        new_cache["first"].append(compress_layer(full_cache["first"][j], li))
+        li += 1
+    for j in range(P):
+        stacked = full_cache["blocks"][j]
+        outs = []
+        for r in range(R):
+            c = jax.tree.map(lambda a: a[r], stacked)
+            outs.append(compress_layer(c, first_k + r * P + j))
+        new_cache["blocks"].append(
+            jax.tree.map(lambda *xs: jnp.stack(xs), *outs))
+
+    nbytes = sum(a.nbytes for a in jax.tree.leaves(new_cache))
+    return CompressedCacheStore(
+        cfg=cfg, params=params, cache=new_cache, cache_len=keep,
+        cache_capacity=capacity, sample_ids=np.asarray(sample_ids),
+        build_s=time.perf_counter() - t0, bytes_total=int(nbytes),
+    )
+
+
+def batched_prompt_decode(
+    store: CompressedCacheStore, prompt_tokens: np.ndarray,
+) -> tuple[np.ndarray, float]:
+    """Online steps 5-6: returns (answer logits (B, V), wall seconds)."""
+    cfg = store.cfg
+    B = len(store.sample_ids)
+    decode = jax.jit(make_decode_step(cfg))
+    cache = store.cache
+    t0 = time.perf_counter()
+    logits = None
+    idx = store.cache_len
+    for t, tok in enumerate(list(prompt_tokens)):
+        toks = jnp.full((B, 1), int(tok), jnp.int32)
+        logits, cache = decode(store.params, cache, {"tokens": toks},
+                               jnp.asarray(idx + t, jnp.int32))
+    logits.block_until_ready()
+    return np.asarray(logits, np.float32), time.perf_counter() - t0
+
+
+def threshold_from_matches(sample_dists: np.ndarray, m: int) -> float:
+    """Paper §3.2 calibration: m-th smallest distance; 0 matches -> min."""
+    order = np.sort(np.asarray(sample_dists, np.float64))
+    if m <= 0:
+        return float(max(order[0] - 1e-6, 0.0))
+    if m >= len(order):
+        return float(order[-1] + 1e-6)
+    return float(0.5 * (order[m - 1] + order[m]))

@@ -1,0 +1,82 @@
+"""Host-side data pipeline: deterministic, shard-aware, prefetching.
+
+Production shape (per MaxText/t5x practice) scaled to this container:
+  * every host materializes ONLY its shard of the global batch
+    (host_id / num_hosts split over the batch dim),
+  * deterministic per-step RNG: batch for step N is reproducible from
+    (seed, N) alone — restart-safe without data-state checkpoints,
+  * double-buffered prefetch on a background thread so host batch assembly
+    overlaps device compute.
+
+Synthetic LM token streams stand in for a tokenized corpus (no external data
+in this container); the Semantic-Histogram image corpus lives in
+repro.core.synthetic.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def synth_lm_batch(cfg: ModelConfig, shape: ShapeConfig, step: int, *,
+                   seed: int = 0, host_id: int = 0, num_hosts: int = 1) -> dict:
+    """Deterministic synthetic next-token batch (local shard of the host)."""
+    B = shape.global_batch // num_hosts
+    S = shape.seq_len
+    rng = np.random.default_rng((seed, step, host_id))
+    if cfg.encdec:
+        dec = max(1, int(S * (cfg.audio.dec_len_ratio if cfg.audio else 1.0)))
+        toks = rng.integers(0, cfg.vocab_size, (B, dec), dtype=np.int32)
+        return {
+            "frames": rng.standard_normal((B, S, cfg.d_model)).astype(np.float32),
+            "tokens": toks,
+            "labels": np.roll(toks, -1, axis=1),
+        }
+    if cfg.vlm is not None:
+        p = cfg.vlm.num_patch_tokens
+        toks = rng.integers(0, cfg.vocab_size, (B, S - p), dtype=np.int32)
+        return {
+            "patch_embeds": rng.standard_normal((B, p, cfg.d_model)).astype(np.float32),
+            "tokens": toks,
+            "labels": np.roll(toks, -1, axis=1),
+        }
+    toks = rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)
+    return {"tokens": toks, "labels": np.roll(toks, -1, axis=1)}
+
+
+class PrefetchIterator:
+    """Double-buffered background prefetch of host batches."""
+
+    def __init__(self, make_batch, num_steps: int, depth: int = 2):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._n = num_steps
+        self._make = make_batch
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _produce(self):
+        for i in range(self._n):
+            self._q.put(self._make(i))
+        self._q.put(None)
+
+    def __iter__(self) -> Iterator:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            yield item
+
+
+def lm_data_iterator(cfg, shape, *, num_steps: int, seed: int = 0,
+                     host_id: int = 0, num_hosts: int = 1) -> PrefetchIterator:
+    return PrefetchIterator(
+        lambda step: synth_lm_batch(cfg, shape, step, seed=seed,
+                                    host_id=host_id, num_hosts=num_hosts),
+        num_steps,
+    )

@@ -1,0 +1,47 @@
+"""Jitted wrapper: pad to TPU tiles, run the kernel, merge block partials."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cosine_topk.kernel import cosine_probe_blocks
+
+f32 = jnp.float32
+
+
+def _pad_to(x, m, axis, value=0.0):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def cosine_probe(
+    store: jax.Array,        # (N, d)
+    pred: jax.Array,         # (d,)
+    thresholds: jax.Array,   # (T,)
+    *,
+    k: int = 128,
+    block_n: int = 2048,
+    interpret: bool = True,  # CPU container; False on real TPU
+) -> tuple[jax.Array, jax.Array]:
+    """Fused probe: (counts (T,) int32, k smallest distances (k,) ascending)."""
+    n = store.shape[0]
+    k = min(k, n)
+    block_n = min(block_n, max(128, 1 << (n - 1).bit_length()))
+    sp = _pad_to(_pad_to(store, 128, 1), block_n, 0)
+    pp = _pad_to(pred[None, :].astype(store.dtype), 128, 1)
+    kk = min(max(k, 1), block_n)
+    counts_b, topk_b = cosine_probe_blocks(
+        sp, pp, thresholds.astype(f32), k=kk, n_total=n, block_n=block_n,
+        interpret=interpret,
+    )
+    counts = counts_b.sum(axis=0)
+    merged = -jax.lax.top_k(-topk_b.reshape(-1), k)[0]
+    return counts, merged

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused semantic-histogram probe."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def cosine_probe_ref(store: jax.Array, pred: jax.Array, thresholds: jax.Array,
+                     k: int) -> tuple[jax.Array, jax.Array]:
+    """store (N, d); pred (d,); thresholds (T,). Returns
+    (counts (T,) int32, k smallest cosine distances (k,) f32 ascending)."""
+    sims = jnp.einsum("nd,d->n", store.astype(f32), pred.astype(f32))
+    dists = 1.0 - sims
+    counts = (dists[None, :] <= thresholds[:, None]).sum(axis=1).astype(jnp.int32)
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    return counts, -neg_top

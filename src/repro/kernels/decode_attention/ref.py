@@ -1,0 +1,9 @@
+"""Oracle: single-token attention against a (possibly low-precision) cache."""
+
+from repro.models.layers import sdpa_reference
+
+
+def decode_attention_oracle(q, k, v, *, kv_valid=None, window=None, scale=None):
+    """q (B, 1, H, D); k/v (B, L, Hkv, D); kv_valid scalar or None."""
+    return sdpa_reference(q, k, v, causal=False, kv_valid=kv_valid,
+                          window=None, scale=scale)

@@ -1,0 +1,8 @@
+"""Oracle: jnp expected-attention scoring (repro.serving.compress)."""
+
+from repro.serving.compress import expected_attention_scores
+
+
+def scores_oracle(k, v, q_mu, q_var):
+    """k/v (B, S, Hkv, D); q_mu/q_var (Hkv, rep, D) -> (B, S, Hkv) f32."""
+    return expected_attention_scores(k, v, q_mu, q_var)

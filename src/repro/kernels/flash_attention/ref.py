@@ -1,0 +1,8 @@
+"""Oracle: direct attention (repro.models.layers.sdpa_reference)."""
+
+from repro.models.layers import sdpa_reference
+
+
+def flash_attention_oracle(q, k, v, *, causal=True, window=None, scale=None):
+    """q (B, Sq, H, D); k/v (B, Sk, Hkv, D)."""
+    return sdpa_reference(q, k, v, causal=causal, window=window, scale=scale)

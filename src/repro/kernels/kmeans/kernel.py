@@ -1,0 +1,47 @@
+"""K-means assignment Pallas kernel (paper §3.2 sample selection).
+
+Fused distance + argmin: streams (block_n, d) tiles of the embedding store,
+keeps the full centroid matrix (C <= 512) resident in VMEM, one MXU matmul
+per tile, emits only int32 assignments. Centroid updates (segment sums over
+<=128 clusters) happen in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+f32 = jnp.float32
+
+
+def _assign_kernel(x_ref, c_ref, c2_ref, out_ref):
+    x = x_ref[...].astype(f32)                 # (block_n, d)
+    c = c_ref[...].astype(f32)                 # (C, d)
+    c2 = c2_ref[...]                           # (1, C)
+    # ||x-c||^2 ranking = -2 x.c + ||c||^2 (||x||^2 constant per row)
+    score = -2.0 * jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=f32) + c2
+    out_ref[...] = jnp.argmin(score, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def assign_blocks(x: jax.Array, centroids: jax.Array, *, block_n: int = 2048,
+                  interpret: bool = True) -> jax.Array:
+    n, d = x.shape
+    C = centroids.shape[0]
+    c2 = jnp.sum(centroids.astype(f32) ** 2, axis=1)[None, :]
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((C, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, C), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(x, centroids, c2)

@@ -1,0 +1,67 @@
+"""Lloyd's k-means built on the assignment kernel; returns medoid sample ids.
+
+The paper selects its KV-batch sample by clustering image embeddings with
+K = sample_size and picking the image nearest each centroid (§3.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.kmeans.kernel import assign_blocks
+from repro.kernels.kmeans.ref import assign_ref
+
+f32 = jnp.float32
+
+
+def _pad_rows(x, m):
+    pad = (-x.shape[0]) % m
+    return jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+
+
+def kmeans(
+    x: np.ndarray, k: int, *, iters: int = 10, seed: int = 0,
+    block_n: int = 2048, impl: str = "pallas", interpret: bool = True,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (centroids (k, d), assignments (N,))."""
+    rng = np.random.default_rng(seed)
+    xd = jnp.asarray(x, f32)
+    n, d = xd.shape
+    block_n = min(block_n, max(128, n))
+    cent = jnp.asarray(x[rng.choice(n, size=k, replace=False)], f32)
+    xp = _pad_rows(xd, block_n)
+
+    for _ in range(iters):
+        if impl == "pallas":
+            assign = assign_blocks(xp, cent, block_n=block_n,
+                                   interpret=interpret)[:n]
+        else:
+            assign = assign_ref(xd, cent)
+        sums = jax.ops.segment_sum(xd, assign, num_segments=k)
+        cnts = jax.ops.segment_sum(jnp.ones((n,), f32), assign, num_segments=k)
+        new = sums / jnp.maximum(cnts, 1.0)[:, None]
+        # re-seed empty clusters at random points
+        empty = cnts < 0.5
+        reseed = jnp.asarray(x[rng.choice(n, size=k)], f32)
+        cent = jnp.where(empty[:, None], reseed, new)
+    if impl == "pallas":
+        assign = assign_blocks(xp, cent, block_n=block_n,
+                               interpret=interpret)[:n]
+    else:
+        assign = assign_ref(xd, cent)
+    return np.asarray(cent), np.asarray(assign)
+
+
+def medoid_sample(x: np.ndarray, k: int, **kw) -> np.ndarray:
+    """Indices of the k images nearest the k centroids (diverse sample)."""
+    cent, _ = kmeans(x, k, **kw)
+    d2 = (
+        np.sum(x ** 2, axis=1)[:, None]
+        - 2.0 * x @ cent.T
+        + np.sum(cent ** 2, axis=1)[None, :]
+    )
+    return np.unique(np.argmin(d2, axis=0))

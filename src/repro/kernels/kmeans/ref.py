@@ -1,0 +1,15 @@
+"""Oracle: jnp distance+argmin assignment step of Lloyd's algorithm."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def assign_ref(x: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """x (N, d), centroids (C, d) -> (N,) int32 nearest-centroid ids."""
+    x2 = jnp.sum(x.astype(f32) ** 2, axis=1, keepdims=True)
+    c2 = jnp.sum(centroids.astype(f32) ** 2, axis=1)
+    d2 = x2 - 2.0 * (x.astype(f32) @ centroids.astype(f32).T) + c2[None, :]
+    return jnp.argmin(d2, axis=1).astype(jnp.int32)

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax-importing statement: jax locks the
+device count at first init, and the production meshes need 512 placeholder
+host devices. (Do not replicate this env var anywhere global — smoke tests and
+benches must see 1 device.)
+
+Per cell this driver:
+  1. builds the production mesh (16x16 single-pod or 2x16x16 multi-pod),
+  2. jits the right step fn with in_/out_shardings from the logical-axis rules,
+  3. ``.lower(**input_specs)`` then ``.compile()`` — failures here (sharding
+     mismatch, OOM at compile, unsupported collective) are bugs in the system,
+  4. prints ``memory_analysis()`` (proves the cell fits HBM) and
+     ``cost_analysis()`` (FLOPs/bytes for §Roofline),
+  5. parses the post-SPMD HLO for the collective schedule and writes a JSON
+     artifact to experiments/dryrun/ that §Roofline and §Perf read.
+
+Resumable: existing artifacts are skipped unless --force.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import roofline as rl
+from repro.configs import ASSIGNED, SHAPES, cells, get_config
+from repro.configs.base import ShapeConfig
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models import nn
+from repro.models.steps import (
+    default_microbatches,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    model_specs,
+)
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return NamedSharding(mesh, P())
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, opts: dict | None = None):
+    """Returns (lowered, compiled, meta) for one cell."""
+    opts = opts or {}
+    cfg = get_config(arch)
+    if opts.get("cfg_override"):
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, **opts["cfg_override"])
+    shape = SHAPES[shape_name]
+    pspecs = nn.param_shardings(model_specs(cfg), mesh)
+
+    if shape.kind == "train":
+        nm = opts.get("num_microbatches") or default_microbatches(cfg, shape)
+        step = make_train_step(cfg, num_microbatches=nm)
+        state_sh = sp.state_shardings(cfg, mesh)
+        batch = sp.train_batch_specs(cfg, shape)
+        batch_sh = sp.batch_shardings(batch, mesh)
+        state = sp.state_specs(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        lowered = jitted.lower(state, batch)
+        meta = {"num_microbatches": nm}
+    elif shape.kind == "prefill":
+        step = make_prefill_step(
+            cfg, batch=shape.global_batch, max_len=shape.seq_len,
+            enc_len=shape.seq_len if cfg.encdec else 0,
+        )
+        inputs = sp.prefill_input_specs(cfg, shape)
+        in_sh = sp.batch_shardings(inputs, mesh)
+        cache_sh = sp.cache_shardings(cfg, mesh, shape.global_batch, shape.seq_len)
+        jitted = jax.jit(step, in_shardings=(pspecs, in_sh),
+                         out_shardings=(None, cache_sh))
+        lowered = jitted.lower(nn.abstract_params(model_specs(cfg)), inputs)
+        meta = {}
+    else:  # decode
+        step = make_decode_step(cfg)
+        d = sp.decode_input_specs(cfg, shape)
+        cache_sh = sp.cache_shardings(cfg, mesh, shape.global_batch, shape.seq_len)
+        tok_sh = sp.batch_shardings({"tokens": d["tokens"]}, mesh)["tokens"]
+        jitted = jax.jit(
+            step,
+            in_shardings=(pspecs, cache_sh, {"tokens": tok_sh}, _replicated(mesh)),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(1,),
+        )
+        lowered = jitted.lower(
+            nn.abstract_params(model_specs(cfg)), d["cache"],
+            {"tokens": d["tokens"]}, d["cache_index"],
+        )
+        meta = {}
+    t0 = time.time()
+    compiled = lowered.compile()
+    meta["compile_s"] = round(time.time() - t0, 1)
+    return lowered, compiled, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, force=False,
+             out_dir: Path = OUT_DIR, tag: str = "", opts=None) -> dict:
+    name = f"{arch}__{shape_name}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{name}.json"
+    if out_path.exists() and not force:
+        print(f"skip (exists): {name}")
+        return json.loads(out_path.read_text())
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    print(f"=== {name}: lowering...", flush=True)
+    with jax.set_mesh(mesh), nn.mesh_context(mesh):
+        lowered, compiled, meta = lower_cell(arch, shape_name, mesh, opts=opts)
+        mem = compiled.memory_analysis()
+        print(mem)          # proves it fits
+        cost = compiled.cost_analysis()
+        print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        hlo = compiled.as_text()
+    mf = rl.model_flops_step(cfg, shape)
+    roof = rl.analyze(hlo, model_flops=mf / mesh.size,
+                      default_group=mesh.size)
+    mem_d = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        mem_d[k] = getattr(mem, k, None)
+    record = {
+        "cell": name, "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": dict(mesh.shape), **meta,
+        "memory": mem_d,
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed",
+                                          "utilization operand 0", "optimal_seconds")},
+        "roofline": roof.to_dict(),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(record, indent=1, default=float))
+    bpd = (mem_d.get("argument_size_in_bytes") or 0) + (mem_d.get("temp_size_in_bytes") or 0)
+    print(f"    ok: compile={meta.get('compile_s')}s  bytes/dev~{bpd/1e9:.2f}GB  "
+          f"flops/dev={roof.flops:.3e}  wire/dev={roof.wire_bytes:.3e}B  "
+          f"bottleneck={roof.bottleneck}", flush=True)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    work: list[tuple[str, str, str]] = []
+    if args.all:
+        for arch in ASSIGNED:
+            for shape in cells(arch):
+                for mk in meshes:
+                    work.append((arch, shape, mk))
+    else:
+        assert args.arch, "--arch required unless --all"
+        shapes = [args.shape] if args.shape else cells(args.arch)
+        for shape in shapes:
+            for mk in meshes:
+                work.append((args.arch, shape, mk))
+
+    failures = []
+    for arch, shape, mk in work:
+        try:
+            run_cell(arch, shape, mk, force=args.force)
+        except Exception as e:  # noqa: BLE001 - report and continue the matrix
+            failures.append((arch, shape, mk, repr(e)))
+            print(f"FAIL {arch} {shape} {mk}: {e}")
+            traceback.print_exc()
+    print(f"\n{len(work) - len(failures)}/{len(work)} cells OK")
+    for f in failures:
+        print("FAILED:", *f[:3], f[3][:200])
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (roofline mesh) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Single-device mesh for smoke tests / examples on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

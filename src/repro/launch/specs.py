@@ -1,0 +1,126 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` never allocates: the dry-run lowers against these abstract
+values. Modality frontends are stubs (DESIGN.md): VLM cells get projector
+patch embeddings, audio cells get encoder frame embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.models import nn
+from repro.models.steps import cache_specs, make_train_state, model_specs
+
+i32 = jnp.int32
+bf16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.encdec:
+        dec = max(1, int(S * (cfg.audio.dec_len_ratio if cfg.audio else 1.0)))
+        return {
+            "frames": _sds((B, S, cfg.d_model), bf16),
+            "tokens": _sds((B, dec), i32),
+            "labels": _sds((B, dec), i32),
+        }
+    if cfg.vlm is not None:
+        ptk = cfg.vlm.num_patch_tokens
+        return {
+            "patch_embeds": _sds((B, ptk, cfg.d_model), bf16),
+            "tokens": _sds((B, S - ptk), i32),
+            "labels": _sds((B, S - ptk), i32),
+        }
+    return {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = train_batch_specs(cfg, shape)
+    b.pop("labels")
+    return b
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """(cache, tokens, index) stand-ins for one-new-token serving."""
+    B, S = shape.global_batch, shape.seq_len
+    cs = cache_specs(cfg, B, S, enc_len=S if cfg.encdec else 0)
+    return {
+        "cache": nn.abstract_params(cs),
+        "tokens": _sds((B, 1), i32),
+        "cache_index": _sds((), i32),
+    }
+
+
+def state_specs(cfg: ModelConfig) -> dict:
+    return make_train_state(cfg, abstract=True)
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_pspec(mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def batch_shardings(tree, mesh):
+    """Shard dim0 (global batch) of every leaf over the data axes, with
+    divisibility fallback (batch=1 long-context cells replicate)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dp = 1
+    for a in axes:
+        dp *= mesh.shape[a]
+
+    def one(x):
+        nd = len(x.shape)
+        if nd == 0 or x.shape[0] % dp:
+            return NamedSharding(mesh, P())
+        bp = axes if len(axes) > 1 else axes[0]
+        return NamedSharding(mesh, P(bp, *([None] * (nd - 1))))
+
+    return jax.tree.map(one, tree)
+
+
+def state_shardings(cfg: ModelConfig, mesh):
+    ms = model_specs(cfg)
+
+    def _axes(s):
+        return s.axes or (None,) * len(s.shape)
+
+    if cfg.optimizer == "adafactor":
+        def vr_spec(s):
+            if len(s.shape) >= 2:
+                return nn.ParamSpec(s.shape[:-1], jnp.float32, _axes(s)[:-1])
+            return nn.ParamSpec(s.shape, jnp.float32, _axes(s))
+
+        def vc_spec(s):
+            if len(s.shape) >= 2:
+                return nn.ParamSpec((*s.shape[:-2], s.shape[-1]), jnp.float32,
+                                    (*_axes(s)[:-2], _axes(s)[-1]))
+            return nn.ParamSpec((0,), jnp.float32, (None,))
+
+        opt = {
+            "m": ms,
+            "vr": jax.tree.map(vr_spec, ms, is_leaf=nn.is_spec),
+            "vc": jax.tree.map(vc_spec, ms, is_leaf=nn.is_spec),
+            "step": nn.ParamSpec((), i32),
+        }
+    else:
+        opt = {"m": ms, "v": ms, "step": nn.ParamSpec((), i32)}
+    specs = {"params": ms, "opt": opt}
+    return nn.param_shardings(specs, mesh)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, batch: int, max_len: int):
+    cs = cache_specs(cfg, batch, max_len, enc_len=max_len if cfg.encdec else 0)
+    return nn.param_shardings(cs, mesh)

@@ -1,0 +1,70 @@
+"""Training driver: ``python -m repro.launch.train --arch smollm-360m --smoke``.
+
+Composes every substrate: config registry -> model -> data pipeline ->
+fault-tolerant runner (watchdog + async checkpointing) -> AdamW/Adafactor.
+On this CPU container use --smoke (reduced config, 1 device); the full configs
+are exercised via the dry-run (launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import lm_data_iterator
+from repro.models.steps import make_train_state, make_train_step
+from repro.runtime.fault_tolerance import FaultTolerantRunner
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    state = make_train_state(cfg, jax.random.PRNGKey(args.seed))
+    step_fn = jax.jit(
+        make_train_step(cfg, num_microbatches=args.microbatches,
+                        peak_lr=1e-3,
+                        total_steps=args.steps, warmup=max(1, args.steps // 10)))
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    runner = FaultTolerantRunner(step_fn, ckpt,
+                                 checkpoint_every=args.ckpt_every)
+    data = lm_data_iterator(cfg, shape, num_steps=args.steps, seed=args.seed)
+
+    losses = []
+
+    def on_metrics(step, metrics, verdict):
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        print(f"step {step:5d} loss {loss:8.4f} lr {float(metrics['lr']):.2e} "
+              f"[{verdict}]", flush=True)
+
+    t0 = time.time()
+    state, final_step = runner.run(state, data, on_metrics=on_metrics)
+    dt = time.time() - t0
+    print(f"done: {final_step} steps in {dt:.1f}s, "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}, "
+          f"stragglers={runner.watchdog.stragglers} retries={runner.retries}")
+    assert losses[-1] < losses[0], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,224 @@
+"""Encoder-decoder family (seamless-m4t-large-v2 backbone).
+
+The speech frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d). Decoder = causal self-attention
+(+KV cache) and cross-attention whose K/V are computed once from the encoder
+output and cached for decode. Both stacks scan over layers.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.layers import (
+    attention_apply,
+    attention_specs,
+    make_attn_cache_specs,
+    mlp_apply,
+    mlp_specs,
+    rmsnorm,
+    rmsnorm_specs,
+    sdpa,
+)
+from repro.models.lm import AUX_KEYS, _zero_aux
+
+f32 = jnp.float32
+
+
+def cross_attn_specs(cfg: ModelConfig) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    dt = cfg.param_dtype
+    return {
+        "wq": nn.dense((d, H, Dh), (emb, "heads", "head_dim"), dt),
+        "wk": nn.dense((d, Hkv, Dh), (emb, "kv_heads", "head_dim"), dt),
+        "wv": nn.dense((d, Hkv, Dh), (emb, "kv_heads", "head_dim"), dt),
+        "wo": nn.dense((H, Dh, d), ("heads", "head_dim", emb), dt),
+    }
+
+
+def cross_attn_apply(
+    p: dict, x: jax.Array, *, enc_out: jax.Array | None, cache: dict | None,
+    impl: str = "xla",
+) -> tuple[jax.Array, dict | None]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if cache is not None and enc_out is None:   # decode: reuse cached enc K/V
+        k, v = cache["k"].astype(x.dtype), cache["v"].astype(x.dtype)
+        new_cache = cache
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(x.dtype))
+        new_cache = None
+        if cache is not None:  # prefill fills the cross cache
+            new_cache = {"k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype)}
+    out = sdpa(q, k, v, causal=False, impl=impl)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype)), new_cache
+
+
+def enc_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "attn": attention_specs(cfg),
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dec_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "self_attn": attention_specs(cfg),
+        "lnx": rmsnorm_specs(cfg.d_model),
+        "cross_attn": cross_attn_specs(cfg),
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def encdec_specs(cfg: ModelConfig) -> dict:
+    n_enc = cfg.num_enc_layers or cfg.num_layers
+    return {
+        "enc_blocks": nn.stack_specs(enc_block_specs(cfg), n_enc),
+        "enc_norm": rmsnorm_specs(cfg.d_model),
+        "dec_embed": nn.embedding((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                                  cfg.param_dtype),
+        "dec_blocks": nn.stack_specs(dec_block_specs(cfg), cfg.num_layers),
+        "final_norm": rmsnorm_specs(cfg.d_model),
+        "head": nn.dense((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                         cfg.param_dtype),
+    }
+
+
+def encdec_cache_specs(cfg: ModelConfig, batch: int, max_len: int, enc_len: int) -> dict:
+    self_c = make_attn_cache_specs(cfg, batch, max_len)
+    cross_c = {
+        "k": nn.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                      ("batch", None, "kv_heads", "head_dim"), cfg.compute_dtype),
+        "v": nn.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim),
+                      ("batch", None, "kv_heads", "head_dim"), cfg.compute_dtype),
+    }
+    return {
+        "self": nn.stack_specs(self_c, cfg.num_layers, "layers"),
+        "cross": nn.stack_specs(cross_c, cfg.num_layers, "layers"),
+    }
+
+
+def encoder_apply(params, cfg: ModelConfig, frames: jax.Array, impl="xla") -> jax.Array:
+    x = frames.astype(cfg.compute_dtype)
+    x = nn.logical_constraint(x, ("batch", "seq", None))
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(x, p):
+        h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+        # bidirectional self-attention
+        from repro.models.layers import apply_rope
+
+        q = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["attn"]["wv"].astype(x.dtype))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        a = sdpa(q, k, v, causal=False, impl=impl)
+        x = x + jnp.einsum("bshk,hkd->bsd", a, p["attn"]["wo"].astype(x.dtype))
+        h = rmsnorm(p["ln2"], x, cfg.rms_eps)
+        return x + mlp_apply(p["mlp"], h), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, prevent_cse=True)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rmsnorm(params["enc_norm"], x, cfg.rms_eps)
+
+
+def decoder_apply(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    enc_out: jax.Array | None,
+    mode: str = "train",
+    cache: dict | None = None,
+    cache_index: Any = None,
+    positions: jax.Array | None = None,
+    impl: str = "xla",
+    logits_slice_last: bool = False,
+    return_hidden: bool = False,
+) -> tuple[jax.Array, dict | None]:
+    x = jnp.take(params["dec_embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    x = nn.logical_constraint(x, ("batch", "seq", None))
+    if positions is None:
+        positions = jnp.arange(tokens.shape[1])
+
+    def body(x, slices):
+        p, c = slices
+        h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+        a, new_self = attention_apply(
+            p["self_attn"], h, cfg=cfg, positions=positions,
+            cache=None if c is None else c["self"],
+            cache_index=cache_index, mode=mode, impl=impl,
+        )
+        x = x + a
+        h = rmsnorm(p["lnx"], x, cfg.rms_eps)
+        ca, new_cross = cross_attn_apply(
+            p["cross_attn"], h, enc_out=enc_out,
+            cache=None if c is None else c["cross"], impl=impl,
+        )
+        x = x + ca
+        h = rmsnorm(p["ln2"], x, cfg.rms_eps)
+        x = x + mlp_apply(p["mlp"], h)
+        if c is None:
+            return x, None
+        return x, {"self": new_self, "cross": new_cross}
+
+    wrapped = body
+    if mode == "train" and cfg.remat != "none":
+        wrapped = jax.checkpoint(body, prevent_cse=True)
+
+    if cache is None:
+        x, _ = jax.lax.scan(lambda x, p: wrapped(x, (p, None)), x,
+                            params["dec_blocks"])
+        new_cache = None
+    else:
+        x, new_cache = jax.lax.scan(wrapped, x,
+                                    (params["dec_blocks"], cache))
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if logits_slice_last:
+        x = x[:, -1:, :]
+    if return_hidden:
+        return (x, params["head"]), new_cache
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+    return nn.logical_constraint(logits, ("batch", "seq", "vocab")), new_cache
+
+
+def encdec_apply(
+    params,
+    cfg: ModelConfig,
+    *,
+    frames: jax.Array | None = None,
+    tokens: jax.Array | None = None,
+    mode: str = "train",
+    cache: dict | None = None,
+    cache_index: Any = None,
+    positions: jax.Array | None = None,
+    impl: str = "xla",
+) -> tuple[jax.Array, dict | None, dict]:
+    logits_slice_last = mode == "prefill"
+    if mode == "decode":
+        logits, new_cache = decoder_apply(
+            params, cfg, tokens, enc_out=None, mode=mode, cache=cache,
+            cache_index=cache_index, positions=positions, impl=impl,
+        )
+    else:
+        enc_out = encoder_apply(params, cfg, frames, impl=impl)
+        logits, new_cache = decoder_apply(
+            params, cfg, tokens, enc_out=enc_out, mode=mode, cache=cache,
+            cache_index=cache_index, positions=positions, impl=impl,
+            logits_slice_last=logits_slice_last,
+        )
+    return logits, new_cache, _zero_aux()

@@ -1,0 +1,191 @@
+"""Flash attention in pure JAX with a hand-written backward (custom_vjp).
+
+Why this exists: differentiating a chunked-attention ``lax.scan`` makes JAX
+save every per-chunk score/prob tensor as a residual — the full (Sq, Sk)
+matrix reappears in the backward pass (observed: 16GB pred/f32 buffers per
+layer on the 4k train cell). The standard fix IS flash attention's backward:
+save only (q, k, v, out, lse), recompute scores chunk-by-chunk in the bwd.
+
+This is simultaneously:
+  * the XLA execution path for long-sequence train/prefill cells, and
+  * the numerical oracle for ``kernels/flash_attention`` (the Pallas TPU
+    kernel mirrors exactly this blocking).
+
+Masking is applied as additive f32 bias computed per chunk-pair from
+iteration indices — never as broadcast boolean tensors (XLA hoists those out
+of the loop as (nq, nk, qc, kc) monsters).
+
+GQA layout: q (B, Sq, H, D) with H = Hkv * rep; k/v (B, Sk, Hkv, D).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+NEG_INF = -1e30  # finite -inf stand-in: keeps exp()=0 without NaN from inf-inf
+
+
+def _chunk_bias(q_pos, k_pos, *, causal: bool, window: int | None,
+                sq: int, sk: int) -> jax.Array:
+    """(qc, kc) additive f32 bias for one chunk pair; positions absolute."""
+    ok = k_pos[None, :] < sk  # kv padding
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(f32)
+
+
+@functools.lru_cache(maxsize=64)
+def _make_flash(causal: bool, window: int | None, scale: float,
+                q_chunk: int, kv_chunk: int, sq: int, sk: int):
+    """Build a custom_vjp flash fn for static (mask, chunking, shapes)."""
+
+    nq = -(-sq // q_chunk)
+    nk = -(-sk // kv_chunk)
+    sq_pad, sk_pad = nq * q_chunk, nk * kv_chunk
+
+    def _forward(q, k, v):
+        B, _, H, D = q.shape
+        Hkv = k.shape[2]
+        Dv = v.shape[-1]
+        rep = H // Hkv
+        qp = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        qk = jnp.moveaxis(qp.reshape(B, sq_pad, Hkv, rep, D), 1, 3)  # B,Hkv,rep,S,D
+        kk = jnp.moveaxis(kp, 1, 2)                                  # B,Hkv,S,D
+        vk = jnp.moveaxis(vp, 1, 2)
+
+        def q_block(qi):
+            q_pos = qi * q_chunk + jnp.arange(q_chunk)
+            qc_data = jax.lax.dynamic_slice_in_dim(qk, qi * q_chunk, q_chunk, 3)
+
+            def kv_step(carry, kj):
+                m, l, acc = carry
+                kc_data = jax.lax.dynamic_slice_in_dim(kk, kj * kv_chunk, kv_chunk, 2)
+                vc_data = jax.lax.dynamic_slice_in_dim(vk, kj * kv_chunk, kv_chunk, 2)
+                k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+                bias = _chunk_bias(q_pos, k_pos, causal=causal, window=window,
+                                   sq=sq, sk=sk)
+                s = jnp.einsum("bhrqd,bhkd->bhrqk", qc_data, kc_data,
+                               preferred_element_type=f32) * scale + bias
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhrqk,bhkd->bhrqd", p.astype(vc_data.dtype), vc_data,
+                    preferred_element_type=f32)
+                return (m_new, l_new, acc_new), None
+
+            shape = (B, Hkv, rep, q_chunk)
+            init = (jnp.full(shape, NEG_INF, f32), jnp.zeros(shape, f32),
+                    jnp.zeros((*shape, Dv), f32))
+            (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+            l_safe = jnp.maximum(l, 1e-30)
+            return acc / l_safe[..., None], m + jnp.log(l_safe)
+
+        _, (outs, lses) = jax.lax.scan(lambda c, qi: (c, q_block(qi)), 0,
+                                       jnp.arange(nq))
+        # outs: (nq, B, Hkv, rep, qc, Dv) -> (B, S, H, Dv)
+        out = jnp.moveaxis(outs, 0, 3).reshape(B, Hkv, rep, sq_pad, Dv)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, sq_pad, H, Dv)[:, :sq]
+        lse = jnp.moveaxis(lses, 0, 3).reshape(B, Hkv, rep, sq_pad)[..., :sq]
+        return out.astype(q.dtype), lse
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        return _forward(q, k, v)[0]
+
+    def flash_fwd(q, k, v):
+        out, lse = _forward(q, k, v)
+        return out, (q, k, v, out, lse)
+
+    def flash_bwd(res, dout):
+        q, k, v, out, lse = res
+        B, _, H, D = q.shape
+        Hkv = k.shape[2]
+        Dv = v.shape[-1]
+        rep = H // Hkv
+        qp = jnp.pad(q, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+        dop = jnp.pad(dout, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+        op = jnp.pad(out, ((0, 0), (0, sq_pad - sq), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0), (0, 0)))
+        lsep = jnp.pad(lse, ((0, 0), (0, 0), (0, 0), (0, sq_pad - sq)),
+                       constant_values=1.0)
+
+        qk = jnp.moveaxis(qp.reshape(B, sq_pad, Hkv, rep, D), 1, 3)
+        dok = jnp.moveaxis(dop.reshape(B, sq_pad, Hkv, rep, Dv), 1, 3).astype(f32)
+        ok_ = jnp.moveaxis(op.reshape(B, sq_pad, Hkv, rep, Dv), 1, 3).astype(f32)
+        kk = jnp.moveaxis(kp, 1, 2)
+        vk = jnp.moveaxis(vp, 1, 2)
+        delta = jnp.sum(dok * ok_, axis=-1)  # (B,Hkv,rep,Sq)
+
+        def kv_block(kj):
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            kc_data = jax.lax.dynamic_slice_in_dim(kk, kj * kv_chunk, kv_chunk, 2)
+            vc_data = jax.lax.dynamic_slice_in_dim(vk, kj * kv_chunk, kv_chunk, 2)
+
+            def q_step(carry, qi):
+                dk_j, dv_j = carry
+                q_pos = qi * q_chunk + jnp.arange(q_chunk)
+                qc_data = jax.lax.dynamic_slice_in_dim(qk, qi * q_chunk, q_chunk, 3)
+                do_c = jax.lax.dynamic_slice_in_dim(dok, qi * q_chunk, q_chunk, 3)
+                lse_c = jax.lax.dynamic_slice_in_dim(lsep, qi * q_chunk, q_chunk, 3)
+                dl_c = jax.lax.dynamic_slice_in_dim(delta, qi * q_chunk, q_chunk, 3)
+                bias = _chunk_bias(q_pos, k_pos, causal=causal, window=window,
+                                   sq=sq, sk=sk)
+                s = jnp.einsum("bhrqd,bhkd->bhrqk", qc_data, kc_data,
+                               preferred_element_type=f32) * scale + bias
+                p = jnp.exp(s - lse_c[..., None])
+                dp = jnp.einsum("bhrqd,bhkd->bhrqk", do_c, vc_data.astype(f32),
+                                preferred_element_type=f32)
+                ds = p * (dp - dl_c[..., None]) * scale
+                dv_j = dv_j + jnp.einsum("bhrqk,bhrqd->bhkd",
+                                         p.astype(f32), do_c,
+                                         preferred_element_type=f32)
+                dk_j = dk_j + jnp.einsum("bhrqk,bhrqd->bhkd", ds,
+                                         qc_data.astype(f32),
+                                         preferred_element_type=f32)
+                dq_c = jnp.einsum("bhrqk,bhkd->bhrqd", ds, kc_data.astype(f32),
+                                  preferred_element_type=f32)
+                return (dk_j, dv_j), dq_c
+
+            init = (jnp.zeros((B, Hkv, kv_chunk, D), f32),
+                    jnp.zeros((B, Hkv, kv_chunk, Dv), f32))
+            (dk_j, dv_j), dq_chunks = jax.lax.scan(q_step, init, jnp.arange(nq))
+            return dk_j, dv_j, dq_chunks  # dq_chunks: (nq,B,Hkv,rep,qc,D)
+
+        _, (dks, dvs, dqs) = jax.lax.scan(lambda c, kj: (c, kv_block(kj)), 0,
+                                          jnp.arange(nk))
+        # dq: sum over kv blocks; reassemble q chunks
+        dq = dqs.sum(axis=0)  # (nq,B,Hkv,rep,qc,D)
+        dq = jnp.moveaxis(dq, 0, 3).reshape(B, Hkv, rep, sq_pad, D)
+        dq = jnp.moveaxis(dq, 3, 1).reshape(B, sq_pad, H, D)[:, :sq]
+        dk = jnp.moveaxis(dks, 0, 2).reshape(B, Hkv, sk_pad, D)
+        dk = jnp.moveaxis(dk, 2, 1)[:, :sk]
+        dv = jnp.moveaxis(dvs, 0, 2).reshape(B, Hkv, sk_pad, Dv)
+        dv = jnp.moveaxis(dv, 2, 1)[:, :sk]
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, scale=None,
+                        q_chunk=1024, kv_chunk=1024):
+    """Entry point: static shapes/mask config; q_offset must be 0 (train and
+    prefill always start at position 0 in this framework)."""
+    sq, sk = q.shape[1], k.shape[1]
+    scale = float(scale if scale is not None else 1.0 / math.sqrt(q.shape[-1]))
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    fn = _make_flash(bool(causal), window, scale, qc, kc, sq, sk)
+    return fn(q, k, v)

@@ -1,0 +1,594 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA/SWA attention, MLA, MLP, MoE.
+
+All layers follow the same convention:
+  * ``*_specs(cfg) -> dict[str, ParamSpec]``  (declarative, stackable for scan)
+  * ``*_apply(params, x, ...) -> y`` pure functions.
+
+Attention supports three execution modes sharing one param set:
+  * train/prefill over a full sequence (optionally writing a KV cache),
+  * single-token decode against a cache (full window or SWA ring buffer),
+  * MLA variants with latent-space "absorbed" decode.
+
+The ``impl`` switch selects the XLA reference path (used by smoke tests, the
+dry-run and ``cost_analysis`` so the roofline sees true FLOPs) or the Pallas
+kernels in :mod:`repro.kernels` (the TPU deployment path).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+from repro.models import nn
+
+f32 = jnp.float32
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": nn.ones((d,), ("embed",), f32)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    h = x.astype(f32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    h = h * jax.lax.rsqrt(var + eps)
+    return (h * p["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=f32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) ; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (D/2,)
+    angles = positions[..., None].astype(f32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]               # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(f32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scaled dot-product attention (XLA path, chunked for long sequences)
+# ---------------------------------------------------------------------------
+
+
+def _causal_mask_bias(q_pos, k_pos, window: int | None) -> jax.Array:
+    """(Q, K) additive bias in f32. window=None -> plain causal."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(f32)
+
+
+def sdpa_reference(
+    q: jax.Array,            # (B, Sq, H, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,            # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: Any = 0,       # absolute position of q[0] (int or traced scalar)
+    kv_valid: Any | None = None,  # number of valid kv positions (decode)
+    scale: float | None = None,
+) -> jax.Array:
+    """Direct attention. Used for short seqs and as the oracle for kernels."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    scale = scale or (1.0 / math.sqrt(D))
+    qf = (q * scale).astype(f32)
+    kf = k.astype(f32)
+    # (B, H, Sq, Sk) via GQA grouping
+    qf = qf.reshape(B, Sq, Hkv, rep, D)
+    logits = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kf)
+    Sk = k.shape[1]
+    k_pos = jnp.arange(Sk)
+    q_pos = jnp.arange(Sq) + q_offset
+    bias = 0.0
+    if causal:
+        bias = _causal_mask_bias(q_pos, k_pos, window)
+    if kv_valid is not None:
+        bias = bias + jnp.where(k_pos[None, :] < kv_valid, 0.0, -jnp.inf)
+    logits = logits + bias
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v.astype(f32))
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
+
+
+def sdpa_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float | None = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp.
+
+    Scans over KV chunks with a running (max, denom, accum) triple so the
+    (Sq, Sk) score matrix is never materialized — this is what keeps the
+    32k-prefill and 500k cells compilable and the memory analysis honest.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    Dv = v.shape[-1]
+    scale = scale or (1.0 / math.sqrt(D))
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // kv_chunk)
+    q_pad = nq * q_chunk - Sq
+    k_pad = nk * kv_chunk - Sk
+    qp = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    qp = (qp * scale).astype(f32).reshape(B, nq, q_chunk, Hkv, rep, D)
+    kp = kp.astype(f32).reshape(B, nk, kv_chunk, Hkv, D)
+    vp = vp.astype(f32).reshape(B, nk, kv_chunk, Hkv, Dv)
+
+    k_valid = jnp.arange(nk * kv_chunk).reshape(nk, kv_chunk) < Sk
+
+    def q_block(qi, qc):
+        # qc: (B, q_chunk, Hkv, rep, D)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kc, vc, kvalid, ki = inputs
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qc, kc)
+            ok = kvalid[None, :]
+            if causal:
+                ok = ok & (k_pos[None, :] <= q_pos[:, None])
+                if window is not None:
+                    ok = ok & (k_pos[None, :] > q_pos[:, None] - window)
+            else:
+                ok = jnp.broadcast_to(ok, (q_chunk, kv_chunk))
+            s = jnp.where(ok, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard rows where everything is masked
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(ok, p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhrqk,bkhd->bhrqd", p, vc
+            )
+            return (m_new, l_new, acc_new), None
+
+        shape = (B, Hkv, rep, q_chunk)
+        init = (
+            jnp.full(shape, -jnp.inf, f32),
+            jnp.zeros(shape, f32),
+            jnp.zeros((*shape, Dv), f32),
+        )
+        ks = jnp.moveaxis(kp, 1, 0)
+        vs = jnp.moveaxis(vp, 1, 0)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (ks, vs, k_valid, jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.moveaxis(out, 3, 1)  # (B, q_chunk, Hkv, rep, Dv)
+
+    outs = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.arange(nq), jnp.moveaxis(qp, 1, 0)),
+    )  # (nq, B, q_chunk, Hkv, rep, Dv)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def sdpa_decode_chunked(
+    q: jax.Array,            # (B, 1, H, D)
+    k: jax.Array,            # (B, Sk, Hkv, D) — may be a low-precision cache
+    v: jax.Array,
+    *,
+    kv_valid: Any = None,
+    kv_chunk: int = 8192,
+    scale: float | None = None,
+) -> jax.Array:
+    """Flash-decode (XLA path): online softmax over KV chunks so a long cache
+    is never dequantized/upcast in one piece (fp8 serve caches stay fp8 in
+    HBM; only one chunk is live in f32)."""
+    B, _, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    Dv = v.shape[-1]
+    scale = scale or (1.0 / math.sqrt(D))
+    nk = -(-Sk // kv_chunk)
+    pad = nk * kv_chunk - Sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qf = (q[:, 0].reshape(B, Hkv, rep, D) * scale).astype(f32)
+    valid = jnp.asarray(Sk if kv_valid is None else kv_valid)
+
+    def step(carry, kj):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(kp, kj * kv_chunk, kv_chunk, 1)
+        vc = jax.lax.dynamic_slice_in_dim(vp, kj * kv_chunk, kv_chunk, 1)
+        pos = kj * kv_chunk + jnp.arange(kv_chunk)
+        bias = jnp.where(pos < valid, 0.0, -1e30).astype(f32)
+        s = jnp.einsum("bhrd,bkhd->bhrk", qf, kc.astype(f32)) + bias
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhrk,bkhd->bhrd", p, vc.astype(f32))
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, Hkv, rep), -1e30, f32),
+            jnp.zeros((B, Hkv, rep), f32),
+            jnp.zeros((B, Hkv, rep, Dv), f32))
+    (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+def sdpa(
+    q, k, v, *, causal=True, window=None, q_offset=0, kv_valid=None,
+    impl: str = "xla", scale=None,
+):
+    """Dispatch: direct for short/decode, chunked for long, pallas on TPU."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if impl == "pallas" and Sq > 1:
+        from repro.kernels.flash_attention import ops as fa
+
+        return fa.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset, scale=scale
+        )
+    if impl == "pallas" and Sq == 1:
+        from repro.kernels.decode_attention import ops as da
+
+        return da.decode_attention(
+            q, k, v, kv_valid=kv_valid, window=window, scale=scale
+        )
+    if Sq == 1 and Sk > 8192:
+        return sdpa_decode_chunked(q, k, v, kv_valid=kv_valid, scale=scale)
+    if Sq == 1 or Sq <= 1024:
+        # decode and short-seq: direct is fine (score tensor is small)
+        return sdpa_reference(
+            q, k, v, causal=causal and Sq > 1, window=window,
+            q_offset=q_offset, kv_valid=kv_valid, scale=scale,
+        )
+    # long-seq train/prefill: flash attention with hand-written backward —
+    # never materializes the (Sq, Sk) score matrix, in fwd OR bwd
+    from repro.models.flash_ref import flash_attention_ref
+
+    return flash_attention_ref(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_chunk=1024, kv_chunk=1024,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (full or sliding-window)
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, H, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    dt = cfg.param_dtype
+    # when heads don't divide the model axis, optionally shard head_dim so
+    # attention still uses tensor parallelism (llava 56H on 16-way TP)
+    hd = "cache_head_dim" if cfg.attn_head_dim_sharding else "head_dim"
+    return {
+        "wq": nn.dense((d, H, Dh), (emb, "heads", hd), dt),
+        "wk": nn.dense((d, Hkv, Dh), (emb, "kv_heads", hd), dt),
+        "wv": nn.dense((d, Hkv, Dh), (emb, "kv_heads", hd), dt),
+        "wo": nn.dense((H, Dh, d), ("heads", hd, emb), dt),
+    }
+
+
+def make_attn_cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+    L = min(max_len, cfg.window) if cfg.attn_kind == "swa" else max_len
+    dt = cfg.serve_cache_dtype or cfg.compute_dtype
+    axes = ("batch", None, "kv_heads", "cache_head_dim")
+    return {
+        "k": nn.zeros((batch, L, Hkv, Dh), axes, dt),
+        "v": nn.zeros((batch, L, Hkv, Dh), axes, dt),
+    }
+
+
+def attention_apply(
+    p: dict,
+    x: jax.Array,                  # (B, S, d)
+    *,
+    cfg: ModelConfig,
+    positions: jax.Array,          # (S,) absolute positions
+    cache: dict | None = None,
+    cache_index: Any = None,       # scalar: #tokens already in cache
+    mode: str = "train",           # train | prefill | decode
+    impl: str = "xla",
+) -> tuple[jax.Array, dict | None]:
+    B, S, d = x.shape
+    window = cfg.window if cfg.attn_kind == "swa" else None
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if S > 1:
+        # pin the flash inputs to their natural head sharding (divisibility
+        # fallback -> replicated when heads % model != 0). Without this the
+        # CACHE's head_dim sharding propagates backwards into the flash loop
+        # and XLA all-reduces every (qc, kc) score chunk — observed 54TB/step
+        # on the llava prefill cell (EXPERIMENTS.md §Perf iteration V2).
+        q = nn.logical_constraint(q, ("batch", None, "heads", None))
+        k = nn.logical_constraint(k, ("batch", None, "kv_heads", None))
+        v = nn.logical_constraint(v, ("batch", None, "kv_heads", None))
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        Lc = cache["k"].shape[1]
+        slot = cache_index % Lc if window is not None else cache_index
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        kv_valid = jnp.minimum(cache_index + 1, Lc)
+        # ring buffer: positions are unordered but softmax is permutation-
+        # invariant given correct per-slot masking; rope already baked in.
+        out = sdpa(
+            q, ck, cv, causal=False, kv_valid=kv_valid, impl=impl,
+        )
+    else:
+        if cache is not None:  # prefill writes the cache
+            Lc = cache["k"].shape[1]
+            kc = k[:, -Lc:].astype(cache["k"].dtype)
+            vc = v[:, -Lc:].astype(cache["v"].dtype)
+            pad = Lc - kc.shape[1]
+            if pad > 0:
+                kc = jnp.pad(kc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(vc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            elif window is not None and S > Lc:
+                # ring-buffer alignment: token t must land in slot t % Lc so a
+                # subsequent decode at position S writes slot S % Lc correctly
+                kc = jnp.roll(kc, S % Lc, axis=1)
+                vc = jnp.roll(vc, S % Lc, axis=1)
+            new_cache = {"k": kc, "v": vc}
+        out = sdpa(
+            q, k, v, causal=True, window=window,
+            q_offset=positions[0] if S > 1 else positions, impl=impl,
+        )
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — latent-compressed KV with decoupled RoPE
+# ---------------------------------------------------------------------------
+
+
+def mla_specs(cfg: ModelConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    dt = cfg.param_dtype
+    dn, dr, dv, r = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, m.kv_lora_rank
+    specs = {
+        "w_dkv": nn.dense((d, r + dr), (emb, "kv_lora_w"), dt),  # down: c_kv ++ k_rope
+        "kv_norm": rmsnorm_specs(r),
+        "w_uk": nn.dense((r, H, dn), ("kv_lora_w", "heads", "head_dim"), dt),
+        "w_uv": nn.dense((r, H, dv), ("kv_lora_w", "heads", "head_dim"), dt),
+        "wo": nn.dense((H, dv, d), ("heads", "head_dim", emb), dt),
+    }
+    if m.q_lora_rank:
+        specs["w_dq"] = nn.dense((d, m.q_lora_rank), (emb, "q_lora"), dt)
+        specs["q_norm"] = rmsnorm_specs(m.q_lora_rank)
+        specs["w_uq"] = nn.dense(
+            (m.q_lora_rank, H, dn + dr), ("q_lora", "heads", "head_dim"), dt
+        )
+    else:
+        specs["wq"] = nn.dense((d, H, dn + dr), (emb, "heads", "head_dim"), dt)
+    return specs
+
+
+def make_mla_cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": nn.zeros((batch, max_len, m.kv_lora_rank), ("batch", None, "kv_lora"),
+                        cfg.compute_dtype),
+        "krope": nn.zeros((batch, max_len, m.qk_rope_head_dim), ("batch", None, None),
+                          cfg.compute_dtype),
+    }
+
+
+def mla_apply(
+    p: dict,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    cache: dict | None = None,
+    cache_index: Any = None,
+    mode: str = "train",
+    impl: str = "xla",
+) -> tuple[jax.Array, dict | None]:
+    m: MLAConfig = cfg.mla
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dn, dr, dv, r = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim, m.kv_lora_rank
+
+    if m.q_lora_rank:
+        cq = rmsnorm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(x.dtype)), cfg.rms_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(x.dtype))
+    ckv = rmsnorm(p["kv_norm"], dkv[..., :r], cfg.rms_eps)
+    krope = apply_rope(dkv[..., None, r:], positions, cfg.rope_theta)[:, :, 0]
+
+    scale = 1.0 / math.sqrt(dn + dr)
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv.astype(cache["ckv"].dtype), cache_index, axis=1)
+        krope_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], krope.astype(cache["krope"].dtype), cache_index, axis=1)
+        new_cache = {"ckv": ckv_all, "krope": krope_all}
+        kv_valid = cache_index + 1
+        # Absorbed decode: fold W_uk into q, attend in the r-dim latent space,
+        # fold W_uv into the output — cache stays (r + dr) per token.
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(x.dtype))
+        k_lat = jnp.concatenate(  # (B, L, r + dr)
+            [ckv_all.astype(x.dtype), krope_all.astype(x.dtype)], axis=-1
+        )[:, :, None, :]
+        q_full = jnp.concatenate([q_lat, q_rope], axis=-1)  # (B,1,H,r+dr)
+        ctx = sdpa(q_full, k_lat, ckv_all.astype(x.dtype)[:, :, None, :],
+                   causal=False, kv_valid=kv_valid, impl=impl, scale=scale)
+        out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"].astype(x.dtype))
+    else:
+        if cache is not None:
+            Lc = cache["ckv"].shape[1]
+            pad = Lc - min(S, Lc)
+            ckv_c = jnp.pad(ckv[:, -Lc:].astype(cache["ckv"].dtype), ((0, 0), (0, pad), (0, 0)))
+            krope_c = jnp.pad(krope[:, -Lc:].astype(cache["krope"].dtype), ((0, 0), (0, pad), (0, 0)))
+            new_cache = {"ckv": ckv_c, "krope": krope_c}
+        k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"].astype(x.dtype))
+        vfull = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"].astype(x.dtype))
+        kfull = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, :, None, :], (B, S, H, dr))], axis=-1
+        )
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = sdpa(qfull, kfull, vfull, causal=True,
+                   q_offset=positions[0] if S > 1 else positions,
+                   impl=impl, scale=scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    dt = cfg.param_dtype
+    return {
+        "wi_gate": nn.dense((d, ff), (emb, "mlp"), dt),
+        "wi_up": nn.dense((d, ff), (emb, "mlp"), dt),
+        "wo": nn.dense((ff, d), ("mlp", emb), dt),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(f32)).astype(x.dtype) * u
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE with capacity-based index dispatch (GShard-style, EP over "model")
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    specs = {
+        "router": nn.dense((d, m.num_experts), ("embed", "experts"), f32),
+        "we_gate": nn.dense((m.num_experts, d, m.d_expert), ("experts", emb, "expert_mlp"), dt),
+        "we_up": nn.dense((m.num_experts, d, m.d_expert), ("experts", emb, "expert_mlp"), dt),
+        "we_down": nn.dense((m.num_experts, m.d_expert, d), ("experts", "expert_mlp", emb), dt),
+    }
+    if m.num_shared:
+        specs["shared"] = mlp_specs(cfg, d_ff=m.d_expert * m.num_shared)
+    return specs
+
+
+def moe_apply(
+    p: dict, x: jax.Array, *, cfg: ModelConfig, rng: jax.Array | None = None
+) -> tuple[jax.Array, dict]:
+    """Returns (output, aux) where aux carries router losses.
+
+    Dispatch: per-sequence-group capacity C = S*k*cf/E; tokens assigned a slot
+    via masked cumsum; gathered into (E, C, d); expert einsum; weighted
+    scatter-combine. Overflowing tokens drop (standard capacity semantics) —
+    their residual path still carries them.
+    """
+    m: MoEConfig = cfg.moe
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    C = max(1, int(S * K * m.capacity_factor / E))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(f32), p["router"])
+    if m.router_jitter and rng is not None:
+        logits += m.router_jitter * jax.random.normal(rng, logits.shape, f32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)           # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # slot assignment: position of each (token, k) within its expert's queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)   # (B,S,K,E)
+    flat = onehot.reshape(B, S * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat          # (B,S*K,E)
+    slot = jnp.sum(pos_in_expert * flat, axis=-1).reshape(B, S, K)
+    keep = slot < C
+    gate_vals = gate_vals * keep
+
+    # scatter tokens into (B, E, C, d)
+    token_src = jnp.broadcast_to(x[:, :, None, :], (B, S, K, d)).reshape(B, S * K, d)
+    e_flat = gate_idx.reshape(B, S * K)
+    s_flat = jnp.where(keep.reshape(B, S * K), slot.reshape(B, S * K), C)  # C = trash
+    dispatch = jnp.zeros((B, E, C + 1, d), x.dtype)
+    bidx = jnp.arange(B)[:, None]
+    dispatch = dispatch.at[bidx, e_flat, s_flat].add(token_src)
+    dispatch = dispatch[:, :, :C]                            # (B,E,C,d)
+
+    g = jnp.einsum("becd,edf->becf", dispatch, p["we_gate"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", dispatch, p["we_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(f32)).astype(x.dtype) * u
+    eout = jnp.einsum("becf,efd->becd", h, p["we_down"].astype(x.dtype))
+
+    # gather back: token t reads its K slots (dropped tokens have zero gate)
+    out_tok = eout[bidx, e_flat, jnp.minimum(s_flat, C - 1)]
+    out_tok = out_tok.reshape(B, S, K, d) * gate_vals[..., None].astype(x.dtype)
+    y = out_tok.sum(axis=2)
+
+    if m.num_shared:
+        y = y + mlp_apply(p["shared"], x)
+
+    # aux losses: Switch load-balance + router z-loss
+    density = flat.reshape(B, S, K, E).sum(2).astype(f32).mean(axis=(0, 1))  # (E,)
+    route_frac = probs.mean(axis=(0, 1))
+    lb_loss = E * jnp.sum(density * route_frac)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_drop_frac": 1.0 - keep.astype(f32).mean()}
+    return y, aux

@@ -1,0 +1,327 @@
+"""Decoder-only LM family covering dense / MoE / SSM / hybrid / VLM-backbone.
+
+A stack is ``first_k_dense`` unscanned leading layers (DeepSeek pattern) plus
+``R`` repeats of a ``P``-layer *period* (Jamba pattern: P=8, 1 attn + 7 mamba).
+Period positions may have heterogeneous params (attn vs mamba vs MLA, dense vs
+MoE mlp); repeats are homogeneous, so we stack params per position and
+``lax.scan`` over repeats — HLO size is O(P), not O(num_layers), which is what
+keeps the 126-layer 405B cell compilable.
+
+Modes: ``train`` (logits for loss), ``prefill`` (logits + filled KV caches),
+``decode`` (one token against caches). VLM backbones take precomputed patch
+embeddings (modality frontend is a stub per the assignment).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import nn
+from repro.models.layers import (
+    attention_apply,
+    attention_specs,
+    make_attn_cache_specs,
+    make_mla_cache_specs,
+    mla_apply,
+    mla_specs,
+    mlp_apply,
+    mlp_specs,
+    moe_apply,
+    moe_specs,
+    rmsnorm,
+    rmsnorm_specs,
+)
+from repro.models.ssm import make_ssm_cache_specs, mamba_apply, mamba_specs
+
+f32 = jnp.float32
+
+AUX_KEYS = ("moe_lb_loss", "moe_z_loss", "moe_drop_frac")
+
+
+def layer_kinds(cfg: ModelConfig, j: int, global_idx: int | None = None) -> tuple[str, str]:
+    """(mixer_kind, mlp_kind) for period position j."""
+    mixer = cfg.layer_pattern[j % len(cfg.layer_pattern)]
+    mlp = cfg.mlp_pattern[j % len(cfg.mlp_pattern)]
+    if global_idx is not None and global_idx < cfg.first_k_dense:
+        mlp = "dense"
+    if mixer == "attn" and cfg.mla is not None:
+        mixer = "mla"
+    return mixer, mlp
+
+
+def _mixer_specs(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "mla":
+        return mla_specs(cfg)
+    if kind == "mamba":
+        return mamba_specs(cfg)
+    return attention_specs(cfg)
+
+
+def _mlp_specs(cfg: ModelConfig, kind: str) -> dict | None:
+    if kind == "moe":
+        return moe_specs(cfg)
+    if kind == "none":
+        return None
+    return mlp_specs(cfg)
+
+
+def block_specs(cfg: ModelConfig, mixer_kind: str, mlp_kind: str) -> dict:
+    s = {
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "mixer": _mixer_specs(cfg, mixer_kind),
+    }
+    mlp = _mlp_specs(cfg, mlp_kind)
+    if mlp is not None:
+        s["ln2"] = rmsnorm_specs(cfg.d_model)
+        s["mlp"] = mlp
+    return s
+
+
+def block_cache_specs(
+    cfg: ModelConfig, mixer_kind: str, batch: int, max_len: int
+) -> dict | None:
+    if mixer_kind == "mamba":
+        return make_ssm_cache_specs(cfg, batch)
+    if mixer_kind == "mla":
+        return make_mla_cache_specs(cfg, batch, max_len)
+    return make_attn_cache_specs(cfg, batch, max_len)
+
+
+def block_apply(
+    p: dict,
+    x: jax.Array,
+    *,
+    cfg: ModelConfig,
+    mixer_kind: str,
+    mlp_kind: str,
+    positions: jax.Array,
+    cache: dict | None,
+    cache_index: Any,
+    mode: str,
+    impl: str,
+) -> tuple[jax.Array, dict | None, dict]:
+    h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+    apply = {"attn": attention_apply, "mla": mla_apply, "mamba": mamba_apply}[mixer_kind]
+    mix, new_cache = apply(
+        p["mixer"], h, cfg=cfg, positions=positions, cache=cache,
+        cache_index=cache_index, mode=mode, impl=impl,
+    )
+    x = x + mix
+    aux = {k: jnp.zeros((), f32) for k in AUX_KEYS}
+    if mlp_kind == "moe":
+        h = rmsnorm(p["ln2"], x, cfg.rms_eps)
+        y, moe_aux = moe_apply(p["mlp"], h, cfg=cfg)
+        aux.update(moe_aux)
+        x = x + y
+    elif mlp_kind == "dense":
+        h = rmsnorm(p["ln2"], x, cfg.rms_eps)
+        x = x + mlp_apply(p["mlp"], h)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full stack
+# ---------------------------------------------------------------------------
+
+
+def stack_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(first_k, period, repeats)."""
+    P = len(cfg.layer_pattern)
+    first_k = cfg.first_k_dense
+    n = cfg.num_layers - first_k
+    assert n % P == 0, (cfg.name, cfg.num_layers, first_k, P)
+    return first_k, P, n // P
+
+
+def lm_specs(cfg: ModelConfig) -> dict:
+    first_k, P, R = stack_layout(cfg)
+    emb_scale = 1.0
+    specs: dict = {
+        "embed": nn.embedding((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              cfg.param_dtype, scale=emb_scale),
+        "final_norm": rmsnorm_specs(cfg.d_model),
+        "first": [
+            block_specs(cfg, *layer_kinds(cfg, j, global_idx=j))
+            for j in range(first_k)
+        ],
+        "blocks": [
+            nn.stack_specs(
+                block_specs(cfg, *layer_kinds(cfg, j, global_idx=first_k + j)), R
+            )
+            for j in range(P)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        specs["head"] = nn.dense((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                                 cfg.param_dtype)
+    return specs
+
+
+def lm_cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    first_k, P, R = stack_layout(cfg)
+    return {
+        "first": [
+            block_cache_specs(cfg, layer_kinds(cfg, j, j)[0], batch, max_len)
+            for j in range(first_k)
+        ],
+        "blocks": [
+            nn.stack_specs(
+                block_cache_specs(cfg, layer_kinds(cfg, j, first_k + j)[0],
+                                  batch, max_len),
+                R, axis_name="layers",
+            )
+            for j in range(P)
+        ],
+    }
+
+
+def _zero_aux():
+    return {k: jnp.zeros((), f32) for k in AUX_KEYS}
+
+
+def lm_apply(
+    params: dict,
+    cfg: ModelConfig,
+    *,
+    tokens: jax.Array | None = None,       # (B, S) int32
+    input_embeds: jax.Array | None = None,  # (B, P?, d) prepended (VLM/audio stub)
+    positions: jax.Array,                  # (S_total,) absolute positions
+    mode: str = "train",
+    cache: dict | None = None,
+    cache_index: Any = None,
+    impl: str = "xla",
+    logits_slice_last: bool = False,
+    return_hidden: bool = False,
+) -> tuple[jax.Array, dict | None, dict]:
+    """Returns (logits, new_cache, aux) — or ((hidden, head), ...) when
+    ``return_hidden`` (the fused chunked-CE loss path, steps.py)."""
+    first_k, P, R = stack_layout(cfg)
+    parts = []
+    if input_embeds is not None:
+        parts.append(input_embeds.astype(cfg.compute_dtype))
+    if tokens is not None:
+        emb = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+        parts.append(emb)
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    x = nn.logical_constraint(x, ("batch", "seq", None))
+
+    aux_tot = _zero_aux()
+    new_first_caches = []
+    for j in range(first_k):
+        mixer_kind, mlp_kind = layer_kinds(cfg, j, j)
+        c = None if cache is None else cache["first"][j]
+        x, nc, aux = block_apply(
+            params["first"][j], x, cfg=cfg, mixer_kind=mixer_kind,
+            mlp_kind=mlp_kind, positions=positions, cache=c,
+            cache_index=cache_index, mode=mode, impl=impl,
+        )
+        new_first_caches.append(nc)
+        aux_tot = {k: aux_tot[k] + aux[k] for k in AUX_KEYS}
+
+    kinds = [layer_kinds(cfg, j, first_k + j) for j in range(P)]
+
+    sp = cfg.seq_sharding and mode == "train"
+
+    def repeat_body(x, p_slices, c_slices):
+        new_cs = []
+        aux_acc = _zero_aux()
+        for j in range(P):
+            mixer_kind, mlp_kind = kinds[j]
+            x, nc, aux = block_apply(
+                p_slices[j], x, cfg=cfg, mixer_kind=mixer_kind, mlp_kind=mlp_kind,
+                positions=positions, cache=None if c_slices is None else c_slices[j],
+                cache_index=cache_index, mode=mode, impl=impl,
+            )
+            new_cs.append(nc)
+            aux_acc = {k: aux_acc[k] + aux[k] for k in AUX_KEYS}
+        if sp:
+            # Megatron-SP: the carried residual (and thus the per-layer saved
+            # activation stack) is seq-sharded over 'model'; XLA inserts the
+            # all-gather at block entry / reduce-scatter at exit.
+            x = nn.logical_constraint(x, ("batch", "seq_sp", None))
+        return x, new_cs, aux_acc
+
+    if cache is None:
+        def body(x, p_slices):
+            x, _, aux_acc = repeat_body(x, p_slices, None)
+            return x, aux_acc
+    else:
+        # Caches ride in the scan CARRY with in-place dynamic-update-slice at
+        # the repeat index (not as xs/ys): XLA aliases carried buffers through
+        # the while loop, so decode updates its (huge) KV cache in place
+        # instead of re-stacking a second copy via scan ys.
+        def body(carry, slices):
+            x, caches = carry
+            p_slices, r = slices
+            c_slices = [
+                jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, r, 0, keepdims=False),
+                    caches[j],
+                )
+                for j in range(P)
+            ]
+            x, new_cs, aux_acc = repeat_body(x, p_slices, c_slices)
+            caches = [
+                jax.tree.map(
+                    lambda a, nc: jax.lax.dynamic_update_slice_in_dim(
+                        a, nc[None].astype(a.dtype), r, 0),
+                    caches[j], new_cs[j],
+                )
+                for j in range(P)
+            ]
+            return (x, caches), aux_acc
+
+    if mode == "train" and cfg.remat != "none":
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat == "dots" else None
+        )
+        body = jax.checkpoint(body, policy=policy, prevent_cse=True)
+
+    if cache is None:
+        g = cfg.remat_group
+        if mode == "train" and g > 1 and R % g == 0:
+            # two-level sqrt(L) remat: outer scan over R/g groups saves one
+            # activation per group; inner scan over g layers recomputes within
+            # the group during its backward. Peak residency ~ (R/g + g) * |x|
+            # instead of R * |x| — what lets the 126-layer 405B cell fit HBM.
+            grouped = jax.tree.map(
+                lambda a: a.reshape(R // g, g, *a.shape[1:]), params["blocks"])
+
+            def group_body(x, p_group):
+                x, aux = jax.lax.scan(body, x, p_group)
+                return x, jax.tree.map(lambda a: a.sum(0), aux)
+
+            if cfg.remat != "none":
+                group_body = jax.checkpoint(group_body, prevent_cse=True)
+            x, aux_stack = jax.lax.scan(group_body, x, grouped)
+        else:
+            x, aux_stack = jax.lax.scan(body, x, params["blocks"])
+        new_block_caches = None
+    else:
+        (x, new_block_caches), aux_stack = jax.lax.scan(
+            body, (x, cache["blocks"]), (params["blocks"], jnp.arange(R))
+        )
+    aux_tot = {k: aux_tot[k] + aux_stack[k].sum() for k in AUX_KEYS}
+
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if logits_slice_last:
+        x = x[:, -1:, :]
+    head = params.get("head")
+    if head is None:
+        # tied embeddings: rescale so logits are O(1) at init (T5 convention)
+        head = params["embed"].T / math.sqrt(cfg.d_model)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"first": new_first_caches, "blocks": new_block_caches}
+    if return_hidden:
+        return (x, head), new_cache, aux_tot
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = nn.logical_constraint(logits, ("batch", "seq", "vocab"))
+    return logits, new_cache, aux_tot

@@ -1,0 +1,220 @@
+"""Mamba2 (SSD — state-space duality) blocks: chunked train/prefill scan and
+O(1)-state single-token decode. Used by ``mamba2-130m`` and the SSM layers of
+``jamba-v0.1-52b``.
+
+The chunked algorithm follows Dao & Gu 2024 (arXiv:2405.21060): quadratic
+attention-like form inside chunks of length ``chunk``, linear recurrence across
+chunk boundaries. All recurrence math runs in f32; projections in compute dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import nn
+from repro.models.layers import rmsnorm, rmsnorm_specs
+
+f32 = jnp.float32
+
+
+def ssm_dims(cfg: ModelConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return dict(d_inner=d_inner, nheads=nheads, conv_dim=conv_dim,
+                G=s.n_groups, N=s.d_state, P=s.head_dim, d_conv=s.d_conv)
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    s: SSMConfig = cfg.ssm
+    dm = ssm_dims(cfg)
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    emb = "embed_fsdp" if cfg.fsdp else "embed"
+    in_dim = 2 * dm["d_inner"] + 2 * dm["G"] * dm["N"] + dm["nheads"]
+    return {
+        "in_proj": nn.dense((d, in_dim), (emb, "mlp"), dt),
+        "conv_w": nn.dense((s.d_conv, dm["conv_dim"]), ("conv", "mlp"), dt, scale=0.5),
+        "conv_b": nn.zeros((dm["conv_dim"],), ("mlp",), f32),
+        "dt_bias": nn.zeros((dm["nheads"],), ("ssm_heads",), f32),
+        "A_log": nn.ones((dm["nheads"],), ("ssm_heads",), f32),
+        "D": nn.ones((dm["nheads"],), ("ssm_heads",), f32),
+        "norm": rmsnorm_specs(dm["d_inner"]),
+        "out_proj": nn.dense((dm["d_inner"], d), ("mlp", emb), dt),
+    }
+
+
+def make_ssm_cache_specs(cfg: ModelConfig, batch: int) -> dict:
+    dm = ssm_dims(cfg)
+    return {
+        "conv": nn.zeros((batch, dm["d_conv"] - 1, dm["conv_dim"]),
+                         ("batch", None, "mlp"), cfg.compute_dtype),
+        "state": nn.zeros((batch, dm["nheads"], dm["P"], dm["N"]),
+                          ("batch", "ssm_heads", None, None), f32),
+    }
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., Lc, H) -> decay matrix log-space (..., H, Lc, Lc), causal."""
+    Lc = dA.shape[-2]
+    cum = jnp.cumsum(dA, axis=-2)                       # (..., Lc, H)
+    cum = jnp.moveaxis(cum, -1, -2)                     # (..., H, Lc)
+    diff = cum[..., :, None] - cum[..., None, :]        # (..., H, Lc, Lc)
+    i = jnp.arange(Lc)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(
+    x: jax.Array,       # (B, S, H, P)  f32
+    dt: jax.Array,      # (B, S, H)     f32 (already softplus'd)
+    A: jax.Array,       # (H,)          f32 (negative)
+    Bm: jax.Array,      # (B, S, G, N)  f32
+    Cm: jax.Array,      # (B, S, G, N)  f32
+    chunk: int,
+    h0: jax.Array | None = None,   # (B, H, P, N) initial state
+    out_dtype=f32,                 # bf16 from mamba_apply: halves the stacked
+                                   # ys output (2.1GB f32/layer at 32k prefill)
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    ONE rematted scan over chunks: the quadratic intra-chunk tensors
+    ((B,H,Lc,Lc) decay/score matrices) exist for a single chunk at a time —
+    vectorizing them over all chunks costs nc * that much memory and is what
+    blew the Jamba train cell to 141GB/device before this rewrite
+    (EXPERIMENTS.md §Perf iteration J1).
+    """
+    B, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Lc = min(chunk, S)
+    pad = (-S) % Lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // Lc
+
+    xc = jnp.moveaxis(x.reshape(B, nc, Lc, H, P), 1, 0)      # (nc,B,Lc,H,P)
+    dtc = jnp.moveaxis(dt.reshape(B, nc, Lc, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(B, nc, Lc, G, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(B, nc, Lc, G, N), 1, 0)
+
+    def chunk_body(h, inp):
+        xk, dtk, Bk, Ck = inp                                # (B,Lc,...)
+        dA = dtk * A                                         # (B,Lc,H)
+        xdt = xk * dtk[..., None]
+        cum = jnp.cumsum(dA, axis=1)                         # (B,Lc,H)
+        last = cum[:, -1:, :]
+        # intra-chunk (quadratic in Lc, one chunk live at a time)
+        Ldec = jnp.exp(_segsum(dA))                          # (B,H,Lc,Lc)
+        scores = jnp.einsum("bign,bjgn->bgij", Ck, Bk)       # (B,G,Lc,Lc)
+        scores_h = jnp.repeat(scores, rep, axis=1)           # (B,H,Lc,Lc)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", scores_h * Ldec, xdt)
+        # contribution of the incoming state
+        Ch = jnp.repeat(Ck, rep, axis=2)                     # (B,Lc,H,N)
+        y_inter = jnp.einsum("blhn,bhpn,blh->blhp", Ch, h, jnp.exp(cum))
+        # state update
+        decay_to_end = jnp.exp(last - cum)                   # (B,Lc,H)
+        Bh = jnp.repeat(Bk, rep, axis=2)                     # (B,Lc,H,N)
+        st = jnp.einsum("blhp,blhn,blh->bhpn", xdt, Bh, decay_to_end)
+        h_new = h * jnp.exp(last[:, 0, :])[:, :, None, None] + st
+        return h_new, (y_intra + y_inter).astype(out_dtype)
+
+    body = jax.checkpoint(chunk_body, prevent_cse=True)
+    h_init = jnp.zeros((B, H, P, N), f32) if h0 is None else h0.astype(f32)
+    hT, ys = jax.lax.scan(body, h_init, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nc * Lc, H, P)[:, :S]
+    return y, hT
+
+
+def ssd_decode_step(
+    x: jax.Array,     # (B, H, P) f32
+    dt: jax.Array,    # (B, H)
+    A: jax.Array,     # (H,)
+    Bm: jax.Array,    # (B, G, N)
+    Cm: jax.Array,    # (B, G, N)
+    state: jax.Array,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    H = x.shape[1]
+    rep = H // Bm.shape[1]
+    dA = jnp.exp(dt * A)                                # (B,H)
+    Bh = jnp.repeat(Bm, rep, axis=1)                    # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    upd = (dt[..., None] * x)[..., None] * Bh[:, :, None, :]
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y, state
+
+
+def mamba_apply(
+    p: dict,
+    x: jax.Array,                  # (B, S, d)
+    *,
+    cfg: ModelConfig,
+    cache: dict | None = None,
+    mode: str = "train",           # train | prefill | decode
+    **_: Any,
+) -> tuple[jax.Array, dict | None]:
+    s: SSMConfig = cfg.ssm
+    dm = ssm_dims(cfg)
+    B, S, d = x.shape
+    di, H, P, G, N = dm["d_inner"], dm["nheads"], dm["P"], dm["G"], dm["N"]
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xin, Braw, Craw, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xin, Braw, Craw], axis=-1)  # (B,S,conv_dim)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        hist = jnp.concatenate([cache["conv"].astype(x.dtype), conv_in], axis=1)
+        conv_out = jnp.einsum("bkc,kc->bc", hist[:, -s.d_conv:, :],
+                              p["conv_w"].astype(x.dtype)) + p["conv_b"].astype(x.dtype)
+        conv_out = jax.nn.silu(conv_out.astype(f32))[:, None, :]  # (B,1,c)
+        new_conv = hist[:, 1:, :].astype(cache["conv"].dtype)
+    else:
+        # causal depthwise conv as shift-accumulate: no (B,S,d_conv,c) stack
+        pad_in = jnp.pad(conv_in, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        conv_out = jnp.zeros_like(conv_in, dtype=f32)
+        for i in range(s.d_conv):
+            conv_out = conv_out + (
+                pad_in[:, i:i + S, :] * p["conv_w"][i].astype(x.dtype)
+            ).astype(f32)
+        conv_out = jax.nn.silu(conv_out + p["conv_b"])
+        if cache is not None:
+            new_conv = conv_in[:, -(s.d_conv - 1):, :].astype(cache["conv"].dtype)
+
+    xs = conv_out[..., :di].reshape(B, -1, H, P)
+    Bs = conv_out[..., di:di + G * N].reshape(B, -1, G, N)
+    Cs = conv_out[..., di + G * N:].reshape(B, -1, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(f32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(f32))
+
+    if mode == "decode":
+        y1, state = ssd_decode_step(
+            xs[:, 0], dt[:, 0], A, Bs[:, 0], Cs[:, 0], cache["state"]
+        )
+        y = y1[:, None]
+        new_cache = {"conv": new_conv, "state": state}
+    else:
+        h0 = cache["state"] if cache is not None else None
+        y, hT = ssd_scan(xs, dt[:, :, :], A, Bs, Cs, s.chunk,
+                         h0=None,  # prefill starts from zero state
+                         out_dtype=cfg.compute_dtype)
+        if cache is not None:
+            new_cache = {"conv": new_conv, "state": hT}
+
+    y = y + xs * p["D"][:, None]
+    y = y.reshape(B, -1, di)
+    y = rmsnorm(p["norm"], (y * jax.nn.silu(z.astype(f32))).astype(x.dtype), cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return out, new_cache

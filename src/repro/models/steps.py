@@ -1,0 +1,296 @@
+"""Step factories: train_step / prefill_step / decode_step for every family.
+
+These are the functions the launcher jits, the dry-run lowers, and the smoke
+tests execute. They close over the ModelConfig and (optionally) a mesh; inputs
+and outputs are plain pytrees so ``in_shardings`` can be derived from
+``input_specs`` in :mod:`repro.launch.specs`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import nn
+from repro.models.encdec import encdec_apply, encdec_cache_specs, encdec_specs
+from repro.models.lm import AUX_KEYS, lm_apply, lm_cache_specs, lm_specs
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedules import warmup_cosine
+
+f32 = jnp.float32
+
+
+def _zero_encdec_aux():
+    return {k: jnp.zeros((), f32) for k in AUX_KEYS}
+
+
+MOE_LB_WEIGHT = 0.01
+MOE_Z_WEIGHT = 1e-3
+LM_Z_WEIGHT = 1e-4
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    return encdec_specs(cfg) if cfg.encdec else lm_specs(cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, enc_len: int = 0) -> dict:
+    if cfg.encdec:
+        return encdec_cache_specs(cfg, batch, max_len, enc_len or max_len)
+    return lm_cache_specs(cfg, batch, max_len)
+
+
+def _forward(params, cfg: ModelConfig, batch: dict, *, mode, cache=None,
+             cache_index=None, impl="xla", logits_slice_last=False):
+    if cfg.encdec:
+        positions = None
+        if mode == "decode":
+            positions = cache_index
+        return encdec_apply(
+            params, cfg, frames=batch.get("frames"), tokens=batch.get("tokens"),
+            mode=mode, cache=cache, cache_index=cache_index,
+            positions=positions, impl=impl,
+        )
+    tokens = batch.get("tokens")
+    embeds = batch.get("patch_embeds")
+    if mode == "decode":
+        positions = cache_index
+        seq = 1
+    else:
+        seq = (0 if tokens is None else tokens.shape[1]) + (
+            0 if embeds is None else embeds.shape[1])
+        positions = jnp.arange(seq)
+    return lm_apply(
+        params, cfg, tokens=tokens, input_embeds=embeds, positions=positions,
+        mode=mode, cache=cache, cache_index=cache_index, impl=impl,
+        logits_slice_last=logits_slice_last,
+    )
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Masked CE; labels < 0 are ignored. Returns (loss, z_mean_sq)."""
+    lf = logits.astype(f32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    picked = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(f32)
+    n = jnp.maximum(mask.sum(), 1.0)
+    loss = jnp.sum((lse - picked) * mask) / n
+    z = jnp.sum((lse * lse) * mask) / n
+    return loss, z
+
+
+def chunked_softmax_xent(
+    x: jax.Array,        # (B, S, d) final hidden states
+    head: jax.Array,     # (d, V)
+    labels: jax.Array,   # (B, S); < 0 ignored
+    *,
+    chunk: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused head-matmul + CE over sequence chunks (rematted scan): the full
+    (B, S, V) logits tensor never materializes — fwd computes one
+    (B, chunk, V) tile at a time, bwd recomputes it. This is what large-vocab
+    trains (minitron 256k, seamless 256k) need to fit HBM
+    (EXPERIMENTS.md §Perf M2)."""
+    B, S, d = x.shape
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = x.shape[1] // chunk
+    xs = jnp.moveaxis(x.reshape(B, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    def body(carry, inp):
+        loss_sum, z_sum, n_sum = carry
+        xc, lc = inp
+        logits = jnp.einsum("bsd,dv->bsv", xc, head.astype(xc.dtype))
+        logits = nn.logical_constraint(logits, ("batch", "seq", "vocab"))
+        lf = logits.astype(f32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        picked = jnp.take_along_axis(
+            lf, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(f32)
+        return (loss_sum + jnp.sum((lse - picked) * mask),
+                z_sum + jnp.sum(lse * lse * mask),
+                n_sum + mask.sum()), None
+
+    body = jax.checkpoint(body, prevent_cse=True)
+    (loss_sum, z_sum, n_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), f32),) * 3, (xs, ls))
+    n = jnp.maximum(n_sum, 1.0)
+    return loss_sum / n, z_sum / n
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, *, impl="xla"):
+    labels = batch["labels"]
+    if cfg.encdec and cfg.vocab_size >= 32768:
+        from repro.models.encdec import decoder_apply, encoder_apply
+
+        enc_out = encoder_apply(params, cfg, batch["frames"], impl=impl)
+        (x, head), _ = decoder_apply(
+            params, cfg, batch["tokens"], enc_out=enc_out, mode="train",
+            impl=impl, return_hidden=True)
+        ce, z = chunked_softmax_xent(x, head, labels)
+        aux = _zero_encdec_aux()
+    elif not cfg.encdec and cfg.vocab_size >= 32768:
+        # fused chunked CE: skip materializing (B, S, V) logits (§Perf M2)
+        from repro.models.lm import lm_apply
+
+        tokens = batch.get("tokens")
+        embeds = batch.get("patch_embeds")
+        seq = (0 if tokens is None else tokens.shape[1]) + (
+            0 if embeds is None else embeds.shape[1])
+        (x, head), _, aux = lm_apply(
+            params, cfg, tokens=tokens, input_embeds=embeds,
+            positions=jnp.arange(seq), mode="train", impl=impl,
+            return_hidden=True,
+        )
+        x = x[:, -labels.shape[1]:]   # VLM: labels cover text positions only
+        ce, z = chunked_softmax_xent(x, head, labels)
+    else:
+        logits, _, aux = _forward(params, cfg, batch, mode="train", impl=impl)
+        if logits.shape[1] != labels.shape[1]:
+            logits = logits[:, -labels.shape[1]:]
+        ce, z = cross_entropy(logits, labels)
+    total = ce + LM_Z_WEIGHT * z
+    total = total + MOE_LB_WEIGHT * aux["moe_lb_loss"] + MOE_Z_WEIGHT * aux["moe_z_loss"]
+    metrics = {"ce": ce, "z": z, **aux}
+    return total, metrics
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.microbatch:
+        return max(1, shape.global_batch // shape.microbatch)
+    tokens = shape.global_batch * shape.seq_len
+    # per-arch activation-memory target (405B uses a much smaller microbatch)
+    m = max(1, tokens // cfg.microbatch_tokens)
+    while shape.global_batch % m:
+        m -= 1
+    return m
+
+
+def make_train_state(cfg: ModelConfig, rng=None, abstract=False):
+    specs = model_specs(cfg)
+    if abstract:
+        params = nn.abstract_params(specs)
+        opt = jax.eval_shape(
+            lambda p: (adafactor_init(p, cfg.optstate_dtype)
+                       if cfg.optimizer == "adafactor"
+                       else adamw_init(p, cfg.optstate_dtype)),
+            params,
+        )
+        return {"params": params, "opt": opt}
+    params = nn.init_params(rng, specs)
+    opt = (adafactor_init(params, cfg.optstate_dtype)
+           if cfg.optimizer == "adafactor"
+           else adamw_init(params, cfg.optstate_dtype))
+    return {"params": params, "opt": opt}
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    num_microbatches: int = 1,
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10000,
+    impl: str = "xla",
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    Gradient accumulation over ``num_microbatches`` via lax.scan (keeps
+    activation memory at 1/m of the global batch), f32 accumulators.
+    """
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def micro(carry, mb):
+            gacc, macc = carry
+            # re-pin the batch sharding: the microbatch reshape otherwise
+            # leaves each slice sharded over only a fraction of the data axis
+            mb = jax.tree.map(
+                lambda x: nn.logical_constraint(
+                    x, ("batch",) + (None,) * (x.ndim - 1)),
+                mb,
+            )
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, mb, impl=impl), has_aux=True
+            )(params)
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(cfg.grad_accum_dtype), gacc, grads)
+            metrics = {"loss": loss, **metrics}
+            macc = jax.tree.map(lambda a, m: a + m.astype(f32), macc, metrics)
+            return (gacc, macc), None
+
+        zeros_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, cfg.grad_accum_dtype), params)
+        zeros_m = {k: jnp.zeros((), f32) for k in
+                   ("loss", "ce", "z", *AUX_KEYS)}
+
+        if num_microbatches > 1:
+            # interleaved split (B,) -> (B/m, m) -> scan axis first: keeps each
+            # microbatch spread over the WHOLE data axis (a contiguous (m, B/m)
+            # reshape would leave each slice on 1/m of the devices)
+            mbs = jax.tree.map(
+                lambda x: jnp.moveaxis(
+                    x.reshape(x.shape[0] // num_microbatches, num_microbatches,
+                              *x.shape[1:]), 1, 0),
+                batch,
+            )
+            (gacc, macc), _ = jax.lax.scan(micro, (zeros_g, zeros_m), mbs)
+        else:
+            (gacc, macc), _ = micro((zeros_g, zeros_m), batch)
+        inv = 1.0 / num_microbatches
+        grads = jax.tree.map(lambda g: g * inv, gacc)
+        metrics = jax.tree.map(lambda m: m * inv, macc)
+
+        lr = warmup_cosine(state["opt"]["step"], peak_lr=peak_lr, warmup=warmup,
+                           total=total_steps)
+        if cfg.optimizer == "adafactor":
+            new_params, new_opt = adafactor_update(grads, state["opt"], params,
+                                                   lr=lr)
+        else:
+            new_params, new_opt = adamw_update(grads, state["opt"], params, lr=lr)
+        metrics["lr"] = lr
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, batch: int, max_len: int,
+                      enc_len: int = 0, impl: str = "xla") -> Callable:
+    """prefill(params, inputs) -> (last_token_logits, cache)."""
+
+    def prefill_step(params, inputs):
+        cspecs = cache_specs(cfg, batch, max_len, enc_len)
+        cache = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype), cspecs, is_leaf=nn.is_spec
+        )
+        logits, new_cache, _ = _forward(
+            params, cfg, inputs, mode="prefill", cache=cache,
+            cache_index=jnp.zeros((), jnp.int32), impl=impl,
+            logits_slice_last=True,
+        )
+        return logits[:, -1], new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, impl: str = "xla") -> Callable:
+    """decode(params, cache, tokens(B,1)|inputs, cache_index) ->
+    (logits (B,V), new_cache)."""
+
+    def decode_step(params, cache, inputs, cache_index):
+        logits, new_cache, _ = _forward(
+            params, cfg, inputs, mode="decode", cache=cache,
+            cache_index=cache_index, impl=impl,
+        )
+        return logits[:, -1], new_cache
+
+    return decode_step

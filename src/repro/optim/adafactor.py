@@ -1,0 +1,95 @@
+"""Adafactor (Shazeer & Stern 2018) with momentum — the PaLM/T5 recipe.
+
+The factored second moment stores one row + one column statistic per matrix
+instead of a full tensor: optimizer state for the 405B cell drops from
+2 x 405B to ~405B/4096 + 405B (bf16 momentum), which together with bf16
+gradient accumulation is what fits train_4k on 16GB-HBM v5e chips
+(see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params: Any, momentum_dtype=jnp.bfloat16) -> dict:
+    def vrow(p):
+        if _factored(p.shape):
+            return jnp.zeros(p.shape[:-1], f32)
+        return jnp.zeros(p.shape, f32)
+
+    def vcol(p):
+        if _factored(p.shape):
+            return jnp.zeros((*p.shape[:-2], p.shape[-1]), f32)
+        return jnp.zeros((0,), f32)
+
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, momentum_dtype), params),
+        "vr": jax.tree.map(vrow, params),
+        "vc": jax.tree.map(vcol, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(
+    grads: Any,
+    opt_state: dict,
+    params: Any,
+    *,
+    lr: Any,
+    b1: float = 0.9,
+    decay: float = 0.8,       # beta2(t) = 1 - t^-decay
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 1e-4,
+) -> tuple[Any, dict]:
+    step = opt_state["step"] + 1
+    t = step.astype(f32)
+    beta2 = 1.0 - t ** (-decay)
+
+    def upd(p, g, m, vr, vc):
+        gf = g.astype(f32)
+        g2 = gf * gf + eps
+        if _factored(p.shape):
+            vr_new = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc_new = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            # V_ij ~= vr_i * vc_j / mean(vr)  (rank-1 reconstruction)
+            r_fac = jax.lax.rsqrt(
+                vr_new / jnp.maximum(vr_new.mean(axis=-1, keepdims=True), eps) + eps)
+            c_fac = jax.lax.rsqrt(vc_new + eps)
+            u = gf * r_fac[..., None] * c_fac[..., None, :]
+        else:
+            vr_new = beta2 * vr + (1 - beta2) * g2
+            vc_new = vc
+            u = gf / jnp.sqrt(vr_new + eps)
+        # update clipping by RMS (Adafactor's stabilizer)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        m_new = b1 * m.astype(f32) + (1 - b1) * u
+        p_new = p.astype(f32) - lr * (m_new + weight_decay * p.astype(f32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), vr_new, vc_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_vr = jax.tree.leaves(opt_state["vr"])
+    flat_vc = jax.tree.leaves(opt_state["vc"])
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_vr, flat_vc)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in out]),
+        {
+            "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+            "vr": jax.tree.unflatten(treedef, [o[2] for o in out]),
+            "vc": jax.tree.unflatten(treedef, [o[3] for o in out]),
+            "step": step,
+        },
+    )

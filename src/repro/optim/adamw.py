@@ -1,0 +1,69 @@
+"""Hand-rolled AdamW (no optax in this environment).
+
+Optimizer-state dtype is configurable: the 405B cell stores m/v in bf16
+(stochastic-rounding assumed on TPU; see DESIGN.md §4 memory budget) — this is
+what makes 405B training fit v5e HBM at 512 chips.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def adamw_init(params: Any, dtype=f32) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    grads: Any,
+    opt_state: dict,
+    params: Any,
+    *,
+    lr: Any,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> tuple[Any, dict]:
+    step = opt_state["step"] + 1
+
+    if grad_clip:
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(f32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    bc1 = 1.0 - b1 ** step.astype(f32)
+    bc2 = 1.0 - b2 ** step.astype(f32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(f32)
+        m_new = b1 * m.astype(f32) + (1 - b1) * gf
+        v_new = b2 * v.astype(f32) + (1 - b2) * gf * gf
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(f32)
+        p_new = p.astype(f32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,25 @@
+"""LR schedules as pure functions of the step counter (traced-scalar safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    s = step.astype(f32) if hasattr(step, "astype") else f32(step)
+    # (s+1): step 0 must have a nonzero LR or the first update is a no-op
+    warm = peak_lr * jnp.minimum(1.0, (s + 1.0) / max(1, warmup))
+    frac = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant(step, *, lr: float):
+    return jnp.full((), lr, f32)
+
+
+def inverse_sqrt(step, *, peak_lr: float, warmup: int):
+    s = jnp.maximum(step.astype(f32) if hasattr(step, "astype") else f32(step), 1.0)
+    return peak_lr * jnp.minimum(s / max(1, warmup), jnp.sqrt(warmup / s))

@@ -1,0 +1,50 @@
+"""Elastic re-meshing: plan a new mesh after host loss / scale-up and restore
+the latest checkpoint onto it.
+
+The dry-run proves both target meshes compile; this module supplies the
+host-side decision logic (exercised by tests with simulated host loss) and the
+reshard-on-restore glue (CheckpointManager.restore already re-shards; here we
+recompute shardings for the new mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+
+
+@dataclasses.dataclass
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    reason: str
+
+    def build(self):
+        return jax.make_mesh(self.shape, self.axes)
+
+
+def plan_mesh(total_chips: int, *, chips_per_host: int = 4,
+              model_parallel: int = 16) -> MeshPlan:
+    """Largest (data, model) mesh that fits the surviving chips.
+
+    Keeps model-parallel fixed (weight shardings stay valid) and shrinks the
+    data axis — the standard elastic policy: batch redistributes, weights
+    reshard trivially along data (FSDP gather groups shrink).
+    """
+    usable = (total_chips // model_parallel) * model_parallel
+    data = usable // model_parallel
+    if data < 1:
+        raise ValueError(f"not enough chips ({total_chips}) for TP={model_parallel}")
+    return MeshPlan((data, model_parallel), ("data", "model"),
+                    reason=f"elastic: {total_chips} chips -> {data}x{model_parallel}")
+
+
+def elastic_restore(ckpt, cfg, abstract_state, new_mesh):
+    """Restore the latest checkpoint resharded for ``new_mesh``."""
+    from repro.launch.specs import state_shardings
+
+    sh = state_shardings(cfg, new_mesh)
+    return ckpt.restore(None, like=abstract_state, shardings=sh)

@@ -1,0 +1,104 @@
+"""Fault tolerance & straggler mitigation for the training driver.
+
+On a real multi-pod deployment this wraps jax.distributed; the policies are
+host-side and hardware-agnostic, so they are exercised for real by unit tests
+with injected faults:
+
+  * StepWatchdog      — per-step deadline from a running latency EWMA;
+                        classifies steps as ok / straggler / stuck
+  * FaultPolicy       — on transient failure: retry the step from the live
+                        state; on fatal/device failure: restore the last
+                        checkpoint (elastic: possibly onto fewer hosts)
+  * HeartbeatRegistry — tracks host liveness; a missing heartbeat beyond the
+                        timeout marks the host dead and triggers an elastic
+                        re-mesh plan (runtime/elastic.py)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StepWatchdog:
+    """EWMA-based step-latency watchdog (straggler mitigation)."""
+
+    alpha: float = 0.1
+    straggler_factor: float = 2.0
+    stuck_factor: float = 10.0
+    ewma_s: float | None = None
+    stragglers: int = 0
+
+    def observe(self, step_s: float) -> str:
+        if self.ewma_s is None:
+            self.ewma_s = step_s
+            return "ok"
+        verdict = "ok"
+        if step_s > self.stuck_factor * self.ewma_s:
+            verdict = "stuck"
+        elif step_s > self.straggler_factor * self.ewma_s:
+            verdict = "straggler"
+            self.stragglers += 1
+        # stragglers should not poison the baseline
+        w = self.alpha if verdict == "ok" else self.alpha * 0.1
+        self.ewma_s = (1 - w) * self.ewma_s + w * step_s
+        return verdict
+
+    def deadline(self) -> float | None:
+        return None if self.ewma_s is None else self.stuck_factor * self.ewma_s
+
+
+@dataclasses.dataclass
+class HeartbeatRegistry:
+    timeout_s: float = 60.0
+    last_seen: dict = dataclasses.field(default_factory=dict)
+
+    def beat(self, host: int, now: float | None = None):
+        self.last_seen[host] = time.time() if now is None else now
+
+    def dead_hosts(self, now: float | None = None) -> list[int]:
+        now = time.time() if now is None else now
+        return [h for h, t in self.last_seen.items() if now - t > self.timeout_s]
+
+
+class FaultTolerantRunner:
+    """Drives train steps with retry / restore-from-checkpoint semantics."""
+
+    def __init__(self, step_fn: Callable, ckpt, *, max_retries: int = 2,
+                 checkpoint_every: int = 50):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.max_retries = max_retries
+        self.checkpoint_every = checkpoint_every
+        self.watchdog = StepWatchdog()
+        self.restores = 0
+        self.retries = 0
+
+    def run(self, state, batches, *, start_step: int = 0, on_metrics=None):
+        step = start_step
+        for batch in batches:
+            t0 = time.perf_counter()
+            for attempt in range(self.max_retries + 1):
+                try:
+                    state, metrics = self.step_fn(state, batch)
+                    break
+                except Exception:  # noqa: BLE001 — injected/device faults
+                    self.retries += 1
+                    if attempt >= self.max_retries:
+                        # fatal: roll back to the last durable state
+                        self.restores += 1
+                        self.ckpt.wait()
+                        latest = self.ckpt.latest_step()
+                        if latest is None:
+                            raise
+                        state = self.ckpt.restore(latest, like=state)
+            verdict = self.watchdog.observe(time.perf_counter() - t0)
+            if on_metrics:
+                on_metrics(step, metrics, verdict)
+            step += 1
+            if step % self.checkpoint_every == 0:
+                self.ckpt.save_async(step, state)
+        self.ckpt.wait()
+        return state, step

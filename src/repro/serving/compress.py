@@ -1,0 +1,121 @@
+"""Expected-Attention KV-cache compression (Devoto et al. 2025, as used by the
+paper §3.2).
+
+Scores each cached KV position by the attention mass *future* queries are
+expected to pay it, using per-layer query statistics (mean mu, diagonal var):
+
+    score(k) = sum_heads ||v|| * exp( mu_h.k / sqrt(D) + var_h.k^2 / (2 D) )
+
+(second-order moment of a Gaussian query distribution through exp). Keep the
+top ``ceil((1-rate) * S)`` positions per (batch, kv_head); gather K/V.
+
+The hot loop (scores + top-k + gather over long caches) is the
+``kernels/expected_attention`` Pallas kernel on TPU; this module is the jnp
+path and the oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+f32 = jnp.float32
+
+
+def expected_attention_scores(
+    k: jax.Array,          # (B, S, Hkv, D)
+    v: jax.Array,          # (B, S, Hkv, D)
+    q_mu: jax.Array,       # (Hkv, rep, D)  rope'd query mean per head
+    q_var: jax.Array,      # (Hkv, rep, D)  diagonal query variance
+) -> jax.Array:
+    """-> (B, S, Hkv) f32 scores."""
+    D = k.shape[-1]
+    kf = k.astype(f32)
+    lin = jnp.einsum("bshd,hrd->bshr", kf, q_mu.astype(f32)) / math.sqrt(D)
+    quad = jnp.einsum("bshd,hrd->bshr", kf * kf, q_var.astype(f32)) / (2.0 * D)
+    # log-sum-exp over the rep (q-heads-per-kv-head) axis, weighted by |v|
+    per_head = jnp.exp(jnp.clip(lin + quad, -30.0, 30.0)).sum(axis=-1)
+    vnorm = jnp.linalg.norm(v.astype(f32), axis=-1)           # (B,S,Hkv)
+    return per_head * vnorm
+
+
+def compress_cache(
+    k: jax.Array, v: jax.Array, q_mu: jax.Array, q_var: jax.Array,
+    *, rate: float, impl: str = "xla",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (k_c, v_c, kept_idx): (B, keep, Hkv, D) x2, (B, keep, Hkv)."""
+    B, S, Hkv, D = k.shape
+    keep = max(1, int(math.ceil(S * (1.0 - rate))))
+    if impl == "pallas":
+        from repro.kernels.expected_attention import ops as ea
+
+        return ea.compress(k, v, q_mu, q_var, keep=keep)
+    scores = expected_attention_scores(k, v, q_mu, q_var)      # (B,S,Hkv)
+    _, idx = jax.lax.top_k(scores.transpose(0, 2, 1), keep)    # (B,Hkv,keep)
+    idx = jnp.sort(idx, axis=-1)                               # keep time order
+    bidx = jnp.arange(B)[:, None, None]
+    hidx = jnp.arange(Hkv)[None, :, None]
+    k_c = k[bidx, idx, hidx].transpose(0, 2, 1, 3)             # (B,keep,Hkv,D)
+    v_c = v[bidx, idx, hidx].transpose(0, 2, 1, 3)
+    return k_c, v_c, idx.transpose(0, 2, 1)
+
+
+@dataclasses.dataclass
+class QueryStats:
+    """Per-layer rope'd query statistics from a calibration pass."""
+
+    mu: list   # [(Hkv, rep, D)] per layer
+    var: list
+
+
+def calibration_q_stats(params, cfg, tokens: jax.Array) -> QueryStats:
+    """Unscanned forward over layers collecting q mean/var per layer.
+
+    Runs at calibration scale (a few short generic prompts), so a python-loop
+    over layers on sliced stacked params is fine.
+    """
+    from repro.models.layers import apply_rope, rmsnorm
+    from repro.models.lm import layer_kinds, stack_layout
+
+    first_k, P, R = stack_layout(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    mus, vars_ = [], []
+
+    def slice_layer(j, r):
+        return jax.tree.map(lambda a: a[r], params["blocks"][j])
+
+    from repro.models.lm import block_apply
+
+    for li in range(cfg.num_layers):
+        if li < first_k:
+            p = params["first"][li]
+            j = li
+        else:
+            j = (li - first_k) % P
+            r = (li - first_k) // P
+            p = slice_layer(j, r)
+        mixer_kind, mlp_kind = layer_kinds(cfg, j, li)
+        if mixer_kind == "attn":
+            h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+            q = jnp.einsum("bsd,dhk->bshk", h, p["mixer"]["wq"].astype(h.dtype))
+            q = apply_rope(q, positions, cfg.rope_theta)
+            Hkv = cfg.num_kv_heads
+            rep = cfg.num_heads // Hkv
+            qr = q.reshape(*q.shape[:2], Hkv, rep, q.shape[-1])
+            mus.append(np.asarray(qr.astype(f32).mean(axis=(0, 1))))
+            vars_.append(np.asarray(qr.astype(f32).var(axis=(0, 1))))
+        else:
+            mus.append(None)
+            vars_.append(None)
+        x, _, _ = block_apply(
+            p, x, cfg=cfg, mixer_kind=mixer_kind, mlp_kind=mlp_kind,
+            positions=positions, cache=None, cache_index=None,
+            mode="prefill", impl="xla",
+        )
+    return QueryStats(mu=mus, var=vars_)

@@ -1,0 +1,9 @@
+# Smoke tests and benches must see 1 CPU device — do NOT set
+# xla_force_host_platform_device_count here (dryrun.py sets it for itself).
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

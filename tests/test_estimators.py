@@ -1,0 +1,134 @@
+"""Behaviour tests for the paper's core claims on the estimator level."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.histogram import SemanticHistogram
+from repro.core.kvbatch import threshold_from_matches
+from repro.core.metrics import q_error, summarize_q_errors
+from repro.core.synthetic import make_corpus, specificity_dataset
+
+
+@functools.lru_cache(maxsize=4)
+def _corpus(name="wildlife", n=600, seed=0):
+    return make_corpus(name, n_images=n, seed=seed)
+
+
+def test_corpus_ground_truth_consistent():
+    c = _corpus()
+    root = 0
+    assert c.true_selectivity(root) == 1.0  # root matches everything
+    # child selectivities are nested subsets of the parent's
+    for nid, node in c.concepts.items():
+        for ch in node.children:
+            child_ids = set(c.true_matches(ch).tolist())
+            assert child_ids <= set(c.true_matches(nid).tolist())
+
+
+def test_specificity_monotone_with_depth():
+    """Deeper (more specific) concepts must have smaller true selectivity on
+    average — the premise of the radius/specificity framing."""
+    c = _corpus()
+    by_depth = {}
+    for nid, node in c.concepts.items():
+        by_depth.setdefault(node.depth, []).append(c.true_selectivity(nid))
+    depths = sorted(by_depth)
+    means = [np.mean(by_depth[d]) for d in depths]
+    assert all(a >= b for a, b in zip(means, means[1:]))
+
+
+def test_histogram_probe_matches_numpy():
+    c = _corpus()
+    hist = SemanticHistogram(jnp.asarray(c.images))
+    pred = c.text_embedding(3)
+    d = 1.0 - c.images @ pred
+    for thr in (0.2, 0.5, 0.9, 1.4):
+        assert hist.count_within(pred, thr) == int((d <= thr).sum())
+    k = 17
+    np.testing.assert_allclose(hist.kth_smallest_distance(pred, k),
+                               np.sort(d)[k - 1], rtol=1e-5, atol=1e-5)
+
+
+def test_histogram_pallas_impl_agrees():
+    c = _corpus()
+    h1 = SemanticHistogram(jnp.asarray(c.images), impl="xla")
+    h2 = SemanticHistogram(jnp.asarray(c.images), impl="pallas")
+    pred = c.text_embedding(5)
+    for thr in (0.4, 0.8):
+        assert h1.count_within(pred, thr) == h2.count_within(pred, thr)
+
+
+def test_threshold_from_matches_zero_match_positive():
+    """Paper §3.2: zero sample matches must still yield a strictly positive
+    (small) threshold -> strictly positive selectivity estimates."""
+    d = np.asarray([0.3, 0.5, 0.7])
+    thr = threshold_from_matches(d, 0)
+    assert 0.0 <= thr < 0.3
+    assert threshold_from_matches(d, 1) == pytest.approx(0.4)
+    assert threshold_from_matches(d, 3) > 0.7
+
+
+def test_threshold_beats_fraction_low_selectivity():
+    """The paper's key motivation (distributional form): over low-selectivity
+    predicates, threshold-calibration from the sample beats the raw sample
+    fraction at equal-or-better cost (the KV-batch sample is ~1 call)."""
+    import numpy as np
+
+    from repro.core.metrics import summarize_q_errors
+
+    from repro.kernels.kmeans.ops import medoid_sample
+
+    for name in ("wildlife", "ecommerce"):
+        c = _corpus(name, n=1000)
+        hist = SemanticHistogram(jnp.asarray(c.images))
+        # the paper's sample selection: k-means medoids (diverse). This is
+        # load-bearing — with a random 32-sample the zero-match fallback's
+        # min-distance is far too loose (verified; see EXPERIMENTS.md).
+        sample = medoid_sample(c.images, 128, iters=5, seed=0)
+        nodes = [nid for nid in c.concepts
+                 if 0 < c.true_selectivity(nid) <= 0.05]
+        rng = np.random.default_rng(0)
+        qs_s, qs_t = [], []
+        for nid in nodes:
+            for seed in range(3):
+                true = c.true_selectivity(nid)
+                emb = c.text_embedding(nid, seed)
+                s16 = rng.choice(1000, 16, replace=False)
+                frac = c.vlm_answer(nid, s16, seed).mean()
+                qs_s.append(q_error(frac, true, 1000))
+                m = int(c.vlm_answer(nid, sample, seed).sum())
+                thr = threshold_from_matches(1.0 - c.images[sample] @ emb, m)
+                qs_t.append(q_error(hist.selectivity(emb, thr), true, 1000))
+        med_s = summarize_q_errors(qs_s)["median"]
+        med_t = summarize_q_errors(qs_t)["median"]
+        assert med_t <= med_s, (name, med_t, med_s)
+
+
+def test_specificity_model_learns():
+    c = _corpus()
+    X, y = specificity_dataset(c, n_samples=800, seed=0)
+    from repro.configs.paper_stack import SpecificityModelConfig
+    from repro.core.specificity import train_specificity
+
+    model, metrics = train_specificity(
+        X, y, SpecificityModelConfig(embed_dim=X.shape[1], steps=400))
+    # the label has irreducible subset noise (same predicate, different random
+    # subsets), so compare by val correlation rather than raw MAE
+    n_val = max(64, len(y) // 10)
+    pred = model.thresholds(X[-n_val:])
+    corr = float(np.corrcoef(pred, y[-n_val:])[0, 1])
+    assert corr > 0.5, (corr, metrics)
+    assert metrics["val_mae"] < 0.1
+
+
+def test_q_error_properties():
+    assert q_error(0.2, 0.02, 1000) == pytest.approx(10.0)
+    assert q_error(0.002, 0.02, 1000) == pytest.approx(10.0)
+    assert q_error(0.0, 0.02, 1000) == pytest.approx(20.0)  # floored at 1/N
+    assert q_error(0.5, 0.5, 1000) == 1.0
+    s = summarize_q_errors([1.0, 2.0, 10.0])
+    assert s["median"] == 2.0 and s["n"] == 3

@@ -1,0 +1,176 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (deliverable c).
+
+Kernels run in interpret mode on this CPU container — the kernel body
+executes in Python, so correctness of the blocking/masking/online-softmax
+logic is what's validated here.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# ---------------------------------------------------------------- cosine_topk
+
+
+@pytest.mark.parametrize("n,d,t,k", [
+    (1000, 1152, 5, 16),
+    (4096, 768, 1, 128),
+    (257, 96, 3, 8),       # non-tile-aligned n and d
+    (128, 128, 2, 128),    # k == n
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cosine_probe(n, d, t, k, dtype, rng):
+    from repro.kernels.cosine_topk.ops import cosine_probe
+    from repro.kernels.cosine_topk.ref import cosine_probe_ref
+
+    store = rng.standard_normal((n, d)).astype(np.float32)
+    store /= np.linalg.norm(store, axis=1, keepdims=True)
+    pred = rng.standard_normal(d).astype(np.float32)
+    pred /= np.linalg.norm(pred)
+    thr = np.sort(rng.uniform(0.3, 1.7, t)).astype(np.float32)
+    c1, t1 = cosine_probe(jnp.asarray(store, dtype), jnp.asarray(pred, dtype),
+                          jnp.asarray(thr), k=k)
+    c2, t2 = cosine_probe_ref(jnp.asarray(store, dtype),
+                              jnp.asarray(pred, dtype), jnp.asarray(thr), k)
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ flash_attention
+
+
+@pytest.mark.parametrize("B,Sq,Hkv,rep,D,causal,window", [
+    (1, 640, 2, 2, 64, True, None),
+    (2, 512, 1, 3, 128, True, 256),
+    (1, 384, 2, 1, 64, False, None),
+    (1, 300, 1, 1, 128, True, None),   # ragged seq
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, Sq, Hkv, rep, D, causal, window, dtype):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import flash_attention_oracle
+
+    keys = jax.random.split(jax.random.PRNGKey(Sq), 3)
+    H = Hkv * rep
+    q = jax.random.normal(keys[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(keys[1], (B, Sq, Hkv, D), dtype)
+    v = jax.random.normal(keys[2], (B, Sq, Hkv, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_chunk=256, kv_chunk=128)
+    ref = flash_attention_oracle(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+# ------------------------------------------------------------ decode_attention
+
+
+@pytest.mark.parametrize("B,L,Hkv,rep,D,valid", [
+    (2, 1000, 2, 4, 64, 777),
+    (4, 4096, 1, 2, 128, None),
+    (1, 300, 4, 1, 32, 5),
+    (3, 129, 2, 2, 64, 129),
+])
+def test_decode_attention(B, L, Hkv, rep, D, valid):
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_oracle
+
+    keys = jax.random.split(jax.random.PRNGKey(L), 3)
+    H = Hkv * rep
+    q = jax.random.normal(keys[0], (B, 1, H, D), jnp.float32)
+    k = jax.random.normal(keys[1], (B, L, Hkv, D), jnp.float32)
+    v = jax.random.normal(keys[2], (B, L, Hkv, D), jnp.float32)
+    out = decode_attention(q, k, v, kv_valid=valid, kv_chunk=256)
+    ref = decode_attention_oracle(q, k, v, kv_valid=valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_fp8_cache():
+    """The serve path stores fp8 caches; kernel must upcast correctly."""
+    from repro.kernels.decode_attention.ops import decode_attention
+    from repro.kernels.decode_attention.ref import decode_attention_oracle
+
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(keys[0], (2, 1, 4, 64), jnp.float32)
+    k = (jax.random.normal(keys[1], (2, 500, 2, 64)) * 0.25).astype(
+        jnp.float8_e4m3fn)
+    v = (jax.random.normal(keys[2], (2, 500, 2, 64)) * 0.25).astype(
+        jnp.float8_e4m3fn)
+    out = decode_attention(q, k, v, kv_valid=400, kv_chunk=128)
+    ref = decode_attention_oracle(q, k, v, kv_valid=400)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------- expected_attention
+
+
+@pytest.mark.parametrize("B,S,Hkv,rep,D,keep", [
+    (2, 512, 2, 2, 64, 100),
+    (1, 1000, 4, 1, 32, 128),
+    (1, 130, 1, 4, 128, 13),
+])
+def test_expected_attention_compress(B, S, Hkv, rep, D, keep):
+    from repro.kernels.expected_attention.ops import compress
+    from repro.serving.compress import compress_cache
+
+    keys = jax.random.split(jax.random.PRNGKey(S), 4)
+    k = jax.random.normal(keys[0], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(keys[1], (B, S, Hkv, D), jnp.float32)
+    mu = jax.random.normal(keys[2], (Hkv, rep, D)) * 0.2
+    var = jax.random.uniform(keys[3], (Hkv, rep, D)) * 0.1
+    kc, vc, idx = compress(k, v, mu, var, keep=keep, kc=128)
+    kr, vr, idxr = compress_cache(k, v, mu, var, rate=1.0 - keep / S)
+    assert (np.asarray(idx) == np.asarray(idxr)).all()
+    np.testing.assert_allclose(np.asarray(kc), np.asarray(kr), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(vc), np.asarray(vr), rtol=1e-5)
+    assert kc.shape == (B, keep, Hkv, D)
+    # kept indices are time-ordered (cache layout preserved)
+    assert (np.diff(np.asarray(idx), axis=1) > 0).all()
+
+
+# ---------------------------------------------------------------------- kmeans
+
+
+def test_kmeans_assign_and_medoids(rng):
+    from repro.kernels.kmeans.ops import kmeans, medoid_sample
+    from repro.kernels.kmeans.ref import assign_ref
+
+    x = rng.standard_normal((1000, 128)).astype(np.float32)
+    cent, assign = kmeans(x, 16, iters=5, impl="pallas")
+    ref = np.asarray(assign_ref(jnp.asarray(x), jnp.asarray(cent)))
+    assert (assign == ref).mean() > 0.999
+    ids = medoid_sample(x, 32, iters=4)
+    assert len(ids) >= 24 and len(np.unique(ids)) == len(ids)
+
+
+# --------------------------------------------------------------- flash_ref vjp
+
+
+@pytest.mark.parametrize("Dqk,Dv", [(64, 64), (96, 64)])  # MLA has Dqk != Dv
+def test_flash_ref_backward(Dqk, Dv):
+    from repro.models.flash_ref import flash_attention_ref
+    from repro.models.layers import sdpa_reference
+
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+    B, Sq, Hkv, rep = 1, 1280, 2, 2
+    q = jax.random.normal(keys[0], (B, Sq, Hkv * rep, Dqk), jnp.float32)
+    k = jax.random.normal(keys[1], (B, Sq, Hkv, Dqk), jnp.float32)
+    v = jax.random.normal(keys[2], (B, Sq, Hkv, Dv), jnp.float32)
+    dout = jax.random.normal(keys[3], (B, Sq, Hkv * rep, Dv), jnp.float32)
+
+    def loss(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v) * dout)
+
+    gr = jax.grad(loss(lambda q, k, v: sdpa_reference(q, k, v, causal=True)),
+                  argnums=(0, 1, 2))(q, k, v)
+    gf = jax.grad(loss(lambda q, k, v: flash_attention_ref(
+        q, k, v, causal=True, q_chunk=512, kv_chunk=256)),
+        argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gr, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-4)

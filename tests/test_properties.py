@@ -1,0 +1,95 @@
+"""Hypothesis property-based tests on system invariants (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kvbatch import threshold_from_matches
+from repro.core.metrics import q_error
+from repro.optim.grad_compression import (
+    ef_compress,
+    ef_init,
+    int8_decode,
+    int8_encode,
+    topk_mask,
+)
+
+finite_f = st.floats(min_value=1e-6, max_value=1.0)
+
+
+@given(p=finite_f, t=finite_f, n=st.integers(10, 10**6))
+def test_q_error_symmetric_and_ge_one(p, t, n):
+    q = q_error(p, t, n)
+    assert q >= 1.0 - 1e-12
+    assert np.isclose(q, q_error(t, p, n), rtol=1e-9)
+
+
+@given(st.lists(st.floats(0.0, 2.0), min_size=1, max_size=64),
+       st.integers(0, 70))
+def test_threshold_from_matches_monotone(dists, m):
+    """More matches -> larger (or equal) threshold; thresholds bracket the
+    sorted distances correctly."""
+    d = np.asarray(dists)
+    t0 = threshold_from_matches(d, m)
+    t1 = threshold_from_matches(d, m + 1)
+    assert t1 >= t0 - 1e-12
+    assert (np.sort(d) <= t0 + 1e-9).sum() >= min(m, len(d)) or m == 0
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(1, 4))
+@settings(max_examples=20, deadline=None)
+def test_selectivity_monotone_in_threshold(seed, t_count):
+    """Histogram invariant: counts are nondecreasing in the threshold."""
+    from repro.core.histogram import SemanticHistogram
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((200, 64)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    hist = SemanticHistogram(jnp.asarray(x))
+    pred = x[0]
+    thrs = np.sort(rng.uniform(0.0, 2.0, t_count))
+    counts = [hist.count_within(pred, float(t)) for t in thrs]
+    assert all(a <= b for a, b in zip(counts, counts[1:]))
+    assert hist.count_within(pred, 2.0 + 1e-3) == 200  # max cosine distance=2
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_int8_roundtrip_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(257).astype(np.float32) * 10)
+    q, s = int8_encode(x)
+    rec = int8_decode(q, s)
+    assert float(jnp.abs(rec - x).max()) <= float(s) * 0.5 + 1e-6
+
+
+@given(st.integers(0, 2**32 - 1), st.sampled_from(["int8", "topk"]))
+@settings(max_examples=10, deadline=None)
+def test_error_feedback_contracts(seed, codec):
+    """Error-feedback invariant: compressed-sum converges to the true sum —
+    the residual stays bounded and the cumulative applied update tracks the
+    cumulative gradient."""
+    rng = np.random.default_rng(seed)
+    g_true = {"w": jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))}
+    ef = ef_init(g_true)
+    applied = jnp.zeros_like(g_true["w"])
+    for step in range(20):
+        rec, ef = ef_compress(g_true, ef, codec=codec, topk_frac=0.25)
+        applied = applied + rec["w"]
+    target = g_true["w"] * 20
+    # relative drift of the cumulative update is small
+    drift = float(jnp.linalg.norm(applied - target) / jnp.linalg.norm(target))
+    assert drift < 0.15, drift
+
+
+@given(st.integers(0, 2**32 - 1), st.floats(0.05, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_topk_mask_keeps_largest(seed, frac):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(128).astype(np.float32))
+    mask = np.asarray(topk_mask(x, frac))
+    kept = np.abs(np.asarray(x))[mask > 0]
+    dropped = np.abs(np.asarray(x))[mask == 0]
+    if len(kept) and len(dropped):
+        assert kept.min() >= dropped.max() - 1e-6

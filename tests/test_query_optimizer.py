@@ -1,0 +1,84 @@
+"""Query planner + cascade executor behaviour (paper §4.3 machinery)."""
+
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core.estimators import Estimate, OracleEstimator
+from repro.core.optimizer import (
+    execute_cascade,
+    generate_queries,
+    plan_query,
+    run_query,
+)
+from repro.core.synthetic import make_corpus
+
+
+@functools.lru_cache(maxsize=2)
+def _corpus():
+    return make_corpus("wildlife", n_images=500, seed=1)
+
+
+class FixedEstimator:
+    name = "fixed"
+
+    def __init__(self, table):
+        self.table = table
+
+    def estimate(self, node_id, seed=0):
+        return Estimate(self.table[node_id], 0.001, 0.0)
+
+
+def test_plan_orders_by_selectivity():
+    est = FixedEstimator({7: 0.5, 8: 0.01, 9: 0.2})
+    plan = plan_query([7, 8, 9], est)
+    assert plan.filter_order == [8, 9, 7]
+
+
+def test_oracle_plan_minimizes_calls():
+    """The oracle-ordered cascade must use <= calls of any other order
+    (in expectation over noise; exact subset filters here)."""
+    c = _corpus()
+    oracle = OracleEstimator(c)
+    qs = generate_queries(c, n_queries=5, n_filters=3, seed=0)
+    for q in qs:
+        best = execute_cascade(c, plan_query(q, oracle), seed=0)
+        # adversarial: reverse order
+        rev = plan_query(q, oracle)
+        rev.filter_order = rev.filter_order[::-1]
+        worst = execute_cascade(c, rev, seed=0)
+        assert best.vlm_calls <= worst.vlm_calls + len(c.images) // 10
+
+
+def test_cascade_result_is_conjunction():
+    c = _corpus()
+    err0 = c.vlm_error
+    c.vlm_error = 0.0   # exact answers -> exact set semantics
+    try:
+        oracle = OracleEstimator(c)
+        q = generate_queries(c, n_queries=1, n_filters=2, seed=3)[0]
+        res = run_query(c, q, oracle, seed=0)
+        expected = set(c.true_matches(q[0]).tolist())
+        for f in q[1:]:
+            expected &= set(c.true_matches(f).tolist())
+        assert set(res.result_ids.tolist()) == expected
+    finally:
+        c.vlm_error = err0
+
+
+def test_bad_estimates_cost_more_calls():
+    c = _corpus()
+    oracle = OracleEstimator(c)
+    anti = FixedEstimator({})  # anti-oracle: invert selectivities
+
+    class Anti:
+        name = "anti"
+
+        def estimate(self, node_id, seed=0):
+            return Estimate(1.0 - c.true_selectivity(node_id), 0.0, 0.0)
+
+    qs = generate_queries(c, n_queries=8, n_filters=3, seed=2)
+    good = sum(run_query(c, q, oracle, seed=0).vlm_calls for q in qs)
+    bad = sum(run_query(c, q, Anti(), seed=0).vlm_calls for q in qs)
+    assert bad >= good

@@ -1,0 +1,154 @@
+"""Layer-level numerics: SSD chunked scan vs sequential recurrence, MoE
+dispatch conservation, SWA ring buffer, MLA absorbed decode, rope."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.models import nn
+from repro.models.layers import (
+    apply_rope,
+    attention_apply,
+    attention_specs,
+    make_attn_cache_specs,
+    make_mla_cache_specs,
+    mla_apply,
+    mla_specs,
+    moe_apply,
+    moe_specs,
+)
+from repro.models.ssm import mamba_apply, mamba_specs, make_ssm_cache_specs, ssd_decode_step, ssd_scan
+
+f32 = jnp.float32
+
+
+def test_ssd_chunked_equals_sequential():
+    rng = jax.random.PRNGKey(0)
+    B, S, H, P, G, N, Lc = 2, 130, 4, 8, 2, 16, 32
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)) * 0.5)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N)) * 0.3
+    Cm = jax.random.normal(ks[4], (B, S, G, N)) * 0.3
+    y, hT = ssd_scan(x, dt, A, Bm, Cm, Lc)
+    h = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        yt, h = ssd_decode_step(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.stack(ys, 1)),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(h), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_mamba_prefill_then_decode_continues():
+    cfg = get_config("mamba2-130m", smoke=True)
+    rng = jax.random.PRNGKey(1)
+    p = nn.init_params(rng, mamba_specs(cfg))
+    B, S = 2, 24
+    x = jax.random.normal(rng, (B, S + 4, cfg.d_model), f32) * 0.3
+    # full pass
+    y_full, _ = mamba_apply(p, x, cfg=cfg, mode="train")
+    # prefill on S then decode the remaining 4 steps
+    cache0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                          make_ssm_cache_specs(cfg, B), is_leaf=nn.is_spec)
+    y_pre, cache = mamba_apply(p, x[:, :S], cfg=cfg, cache=cache0,
+                               mode="prefill")
+    np.testing.assert_allclose(np.asarray(y_pre), np.asarray(y_full[:, :S]),
+                               atol=2e-2, rtol=2e-2)
+    for t in range(S, S + 4):
+        y_t, cache = mamba_apply(p, x[:, t:t + 1], cfg=cfg, cache=cache,
+                                 mode="decode")
+        np.testing.assert_allclose(np.asarray(y_t[:, 0]),
+                                   np.asarray(y_full[:, t]),
+                                   atol=2e-2, rtol=2e-2,
+                                   err_msg=f"decode step {t}")
+
+
+def test_moe_outputs_finite_and_gates_normalized():
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    rng = jax.random.PRNGKey(2)
+    p = nn.init_params(rng, moe_specs(cfg))
+    x = jax.random.normal(rng, (2, 16, cfg.d_model), jnp.bfloat16)
+    y, aux = moe_apply(p, x, cfg=cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert float(aux["moe_lb_loss"]) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz
+    assert 0.0 <= float(aux["moe_drop_frac"]) < 0.8
+
+
+def test_moe_capacity_drops_overflow():
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64,
+        mlp_pattern=("moe",),
+        moe=MoEConfig(num_experts=4, top_k=2, d_expert=16,
+                      capacity_factor=0.25))
+    rng = jax.random.PRNGKey(3)
+    p = nn.init_params(rng, moe_specs(cfg))
+    x = jax.random.normal(rng, (1, 32, cfg.d_model), f32)
+    _, aux = moe_apply(p, x, cfg=cfg)
+    assert float(aux["moe_drop_frac"]) > 0.2  # tiny capacity must drop
+
+
+def test_swa_ring_buffer_decode_matches_full():
+    """SWA decode with a ring cache == full attention restricted to window."""
+    cfg = get_config("h2o-danube-1.8b", smoke=True)  # window 16
+    rng = jax.random.PRNGKey(4)
+    p = nn.init_params(rng, attention_specs(cfg))
+    B, S = 1, 40  # > 2x window
+    x = jax.random.normal(rng, (B, S, cfg.d_model), f32) * 0.5
+    y_full, _ = attention_apply(p, x, cfg=cfg, positions=jnp.arange(S),
+                                mode="train")
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         make_attn_cache_specs(cfg, B, S), is_leaf=nn.is_spec)
+    y_pre, cache = attention_apply(p, x[:, :24], cfg=cfg,
+                                   positions=jnp.arange(24), cache=cache,
+                                   mode="prefill")
+    for t in range(24, S):
+        y_t, cache = attention_apply(
+            p, x[:, t:t + 1], cfg=cfg, positions=jnp.asarray(t),
+            cache=cache, cache_index=jnp.asarray(t), mode="decode")
+        np.testing.assert_allclose(
+            np.asarray(y_t[:, 0]), np.asarray(y_full[:, t]),
+            atol=2e-3, rtol=2e-3, err_msg=f"SWA decode step {t}")
+
+
+def test_mla_absorbed_decode_matches_expanded():
+    cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+    rng = jax.random.PRNGKey(5)
+    p = nn.init_params(rng, mla_specs(cfg))
+    B, S = 2, 12
+    x = jax.random.normal(rng, (B, S, cfg.d_model), f32) * 0.5
+    y_full, _ = mla_apply(p, x, cfg=cfg, positions=jnp.arange(S), mode="train")
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         make_mla_cache_specs(cfg, B, S), is_leaf=nn.is_spec)
+    y_pre, cache = mla_apply(p, x[:, :8], cfg=cfg, positions=jnp.arange(8),
+                             cache=cache, mode="prefill")
+    for t in range(8, S):
+        y_t, cache = mla_apply(
+            p, x[:, t:t + 1], cfg=cfg, positions=jnp.asarray(t),
+            cache=cache, cache_index=jnp.asarray(t), mode="decode")
+        np.testing.assert_allclose(
+            np.asarray(y_t[:, 0]), np.asarray(y_full[:, t]),
+            atol=3e-3, rtol=3e-3, err_msg=f"MLA absorbed decode step {t}")
+
+
+def test_rope_relative_property():
+    """RoPE invariant: <q_m, k_n> depends only on (m - n)."""
+    D = 32
+    q = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(7), (1, 1, 1, D))
+
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.asarray([m]), 10000.0)
+        kn = apply_rope(k, jnp.asarray([n]), 10000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), abs=1e-3)
+    assert dot_at(0, 0) == pytest.approx(dot_at(50, 50), abs=1e-3)
