@@ -1,8 +1,11 @@
 """Histogram-probe scaling: the paper's store at pod scale.
 
-Demonstrates (a) measured single-device scan throughput vs N, and (b) the
-sharded-probe collective cost model: counts/top-k combine is O(k), so probe
-latency stays flat as the store scales across chips (DESIGN.md §2 claim).
+Demonstrates (a) measured single-device scan throughput vs N, (b) the
+batched multi-predicate probe's amortization — one (N, d) x (d, B) pass for
+B predicates vs B matvecs, reported as amortized µs/predicate and effective
+per-predicate scan bandwidth at B ∈ {1, 8, 32, 128} — and (c) the
+sharded-probe collective cost model: counts/top-k combine is O(B*k), so
+probe latency stays flat as the store scales across chips (DESIGN.md §2).
 
 CSV: bench,config,us_per_call,derived
 """
@@ -17,7 +20,7 @@ import numpy as np
 
 from benchmarks.common import csv_row
 from repro.analysis.roofline import HBM_BW, LINK_BW
-from repro.core.histogram import _local_probe
+from repro.core.histogram import _local_probe, _local_probe_batch
 
 
 def main() -> list[str]:
@@ -36,6 +39,43 @@ def main() -> list[str]:
         us = (time.perf_counter() - t0) / iters * 1e6
         rows.append(csv_row("probe_measured_cpu", f"N={n}", f"{us:.0f}",
                             f"{n*1152*4/(us/1e6)/1e9:.1f}GB/s"))
+
+    # batched multi-predicate probe: one store pass for B predicates.
+    # Amortized µs/predicate must collapse vs the B=1 row — that's the PR's
+    # claim (store HBM traffic amortized B×, matvec -> MXU matmul).
+    n = 100_000
+    store = jnp.asarray(rng.standard_normal((n, 1152)), jnp.float32)
+    fb = jax.jit(lambda s, p, t: _local_probe_batch(s, p, t, 128))
+    base_us = None
+    for bsz in (1, 8, 32, 128):
+        preds = jnp.asarray(rng.standard_normal((bsz, 1152)), jnp.float32)
+        thrs = jnp.full((bsz, 1), 0.5, jnp.float32)
+        fb(store, preds, thrs)[0].block_until_ready()
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            jax.block_until_ready(fb(store, preds, thrs))
+        us = (time.perf_counter() - t0) / iters * 1e6 / bsz
+        if base_us is None:
+            base_us = us
+        rows.append(csv_row(
+            "probe_batched_cpu", f"N={n},B={bsz}", f"{us:.0f}",
+            f"{n*1152*4/(us/1e6)/1e9:.1f}GB/s/pred,speedup={base_us/us:.1f}x"))
+
+    # parity: batched == per-predicate scalar loop (same store)
+    bsz = 32
+    preds = jnp.asarray(rng.standard_normal((bsz, 1152)), jnp.float32)
+    thrs = jnp.full((bsz, 1), 0.5, jnp.float32)
+    cb, tb = fb(store, preds, thrs)
+    max_cnt = 0
+    max_top = 0.0
+    f1 = jax.jit(lambda s, p, t: _local_probe(s, p, t, 128))
+    for j in range(bsz):
+        cs, ts = f1(store, preds[j], thrs[j])
+        max_cnt = max(max_cnt, int(jnp.abs(cb[j] - cs).max()))
+        max_top = max(max_top, float(jnp.abs(tb[j] - ts).max()))
+    rows.append(csv_row("probe_batched_parity", f"N={n},B={bsz}", "-",
+                        f"count_diff={max_cnt},topk_maxerr={max_top:.2e}"))
 
     # v5e analytic: per-chip probe time for a pod-scale store
     for total in (1e8, 1e9):

@@ -1,4 +1,6 @@
-"""Dev loop: run a reduced forward+train+prefill+decode for every arch on CPU."""
+"""Dev loop: run a reduced forward+train+prefill+decode for every arch on CPU,
+plus a batched semantic-histogram probe smoke (pallas-interpret vs xla vs
+per-predicate loop) so hot-path regressions surface here first."""
 
 import sys
 import traceback
@@ -73,9 +75,39 @@ def run(arch):
     print(f"OK  {arch:26s} params={n:,} loss={loss:.3f}")
 
 
+def run_probe_smoke():
+    """Batched probe hot path: pallas-interpret == xla == scalar loop, and
+    one plan_query == one batched probe."""
+    from repro.core.histogram import SemanticHistogram, _local_probe
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((700, 96)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    preds, thrs = x[:8], np.linspace(0.3, 1.5, 8).astype(np.float32)
+    hx = SemanticHistogram(jnp.asarray(x), impl="xla")
+    hp = SemanticHistogram(jnp.asarray(x), impl="pallas")
+    sx = hx.selectivity_batch(preds, thrs)
+    sp = hp.selectivity_batch(preds, thrs)
+    loop = [hx.selectivity(preds[j], float(thrs[j])) for j in range(8)]
+    assert np.allclose(sx, loop) and np.allclose(sp, loop), (sx, sp, loop)
+    cx, tx = hx.probe_batch(preds, thrs, k=9)
+    for j in range(8):
+        cs, ts = _local_probe(jnp.asarray(x), jnp.asarray(preds[j]),
+                              jnp.asarray(thrs[j:j + 1]), 9)
+        assert int(cs[0]) == int(cx[j, 0])
+        assert np.allclose(np.asarray(ts), np.asarray(tx[j]), atol=1e-5)
+    print("OK  batched_probe            pallas==xla==loop, B=8")
+
+
 if __name__ == "__main__":
     archs = sys.argv[1:] or list(ASSIGNED)
     fails = []
+    try:
+        run_probe_smoke()
+    except Exception:
+        fails.append("batched_probe")
+        print("FAIL batched_probe")
+        traceback.print_exc()
     for a in archs:
         try:
             run(a)

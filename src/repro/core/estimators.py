@@ -7,6 +7,14 @@ Latency accounting (DESIGN.md §9.4): every estimate carries
                    (sampling: n; kv-batch: ~1, the paper's headline claim).
 End-to-end figures convert calls -> seconds with a per-call latency constant
 so relative comparisons match the paper's protocol.
+
+Batched interface: estimators that can amortize work across predicates
+implement ``estimate_batch(node_ids)`` — thresholds for the whole batch come
+from one device call (``SpecificityModel.thresholds`` already batches the
+MLP; KV-batch calibration is numpy), and selectivity for all predicates
+comes from **one** batched histogram probe (one store pass, one device
+round-trip) instead of a per-predicate Python loop of probe + float()
+conversions. ``plan_query`` uses it for all filters of a query at once.
 """
 
 from __future__ import annotations
@@ -36,6 +44,11 @@ class Estimate:
     extra: dict = dataclasses.field(default_factory=dict)
 
 
+def _predicate_embeddings(corpus: Corpus, node_ids, seed: int) -> np.ndarray:
+    """(B, d) text embeddings for a predicate batch."""
+    return np.stack([corpus.text_embedding(n, seed) for n in node_ids])
+
+
 class SamplingEstimator:
     """The online-profiling baseline every semantic data system uses."""
 
@@ -62,6 +75,10 @@ class SpecificityEstimator:
         self.corpus, self.hist, self.model = corpus, hist, model
         self.name = "specificity-model"
 
+    def _thresholds(self, embs: np.ndarray) -> np.ndarray:
+        """Batched MLP thresholds — one jitted apply for the whole batch."""
+        return self.model.thresholds(embs)
+
     def estimate(self, node_id: int, seed: int = 0) -> Estimate:
         t0 = time.perf_counter()
         emb = self.corpus.text_embedding(node_id, seed)
@@ -69,6 +86,16 @@ class SpecificityEstimator:
         sel = self.hist.selectivity(emb, thr)
         return Estimate(sel, time.perf_counter() - t0, vlm_calls=0.0,
                         threshold=thr)
+
+    def estimate_batch(self, node_ids, seed: int = 0) -> list[Estimate]:
+        """All thresholds in one MLP apply, all selectivities in one probe."""
+        t0 = time.perf_counter()
+        embs = _predicate_embeddings(self.corpus, node_ids, seed)
+        thrs = self._thresholds(embs)
+        sels = self.hist.selectivity_batch(embs, thrs)
+        dt = (time.perf_counter() - t0) / max(1, len(node_ids))
+        return [Estimate(float(s), dt, vlm_calls=0.0, threshold=float(t))
+                for s, t in zip(sels, thrs)]
 
 
 class KVBatchEstimator:
@@ -95,6 +122,19 @@ class KVBatchEstimator:
                 self._machine_s = 0.0
         return self._machine_s
 
+    def _thresholds(self, node_ids, embs: np.ndarray,
+                    seed: int) -> tuple[np.ndarray, np.ndarray]:
+        """Batched §3.2 calibration: (thresholds (B,), sample matches (B,)).
+        One (S, d) x (d, B) distance matmul for the whole predicate batch;
+        the batched decode machinery runs once regardless of B."""
+        ids = self.store.sample_ids
+        dists = 1.0 - self.corpus.images[ids] @ embs.T      # (S, B)
+        ms = np.asarray([int(self.corpus.vlm_answer(n, ids, seed=seed).sum())
+                         for n in node_ids])
+        thrs = np.asarray([threshold_from_matches(dists[:, j], int(ms[j]))
+                           for j in range(len(node_ids))])
+        return thrs, ms
+
     def estimate(self, node_id: int, seed: int = 0) -> Estimate:
         machine_s = self._machinery_latency()
         t0 = time.perf_counter()
@@ -113,6 +153,19 @@ class KVBatchEstimator:
         return Estimate(sel, dt, vlm_calls=1.0, threshold=thr,
                         extra={"sample_matches": m,
                                "machine_cpu_s": machine_s})
+
+    def estimate_batch(self, node_ids, seed: int = 0) -> list[Estimate]:
+        """Batched calibration + one histogram probe for all predicates."""
+        machine_s = self._machinery_latency()
+        t0 = time.perf_counter()
+        embs = _predicate_embeddings(self.corpus, node_ids, seed)
+        thrs, ms = self._thresholds(node_ids, embs, seed)
+        sels = self.hist.selectivity_batch(embs, thrs)
+        dt = (time.perf_counter() - t0) / max(1, len(node_ids))
+        return [Estimate(float(s), dt, vlm_calls=1.0, threshold=float(t),
+                         extra={"sample_matches": int(m),
+                                "machine_cpu_s": machine_s})
+                for s, t, m in zip(sels, thrs, ms)]
 
 
 class EnsembleEstimator:
@@ -135,6 +188,23 @@ class EnsembleEstimator:
         return Estimate(sel, e1.measured_s + e2.measured_s + dt,
                         vlm_calls=e2.vlm_calls, threshold=thr,
                         extra=e2.extra)
+
+    def estimate_batch(self, node_ids, seed: int = 0) -> list[Estimate]:
+        """Both component thresholds are pure calibration (MLP apply +
+        sample-distance sort — no probe needed), so the whole query batch
+        costs exactly **one** histogram probe at the averaged thresholds."""
+        machine_s = self.kvb._machinery_latency()
+        t0 = time.perf_counter()
+        embs = _predicate_embeddings(self.corpus, node_ids, seed)
+        t_spec = self.spec._thresholds(embs)
+        t_kvb, ms = self.kvb._thresholds(node_ids, embs, seed)
+        thrs = 0.5 * (t_spec + t_kvb)
+        sels = self.hist.selectivity_batch(embs, thrs)
+        dt = (time.perf_counter() - t0) / max(1, len(node_ids))
+        return [Estimate(float(s), dt, vlm_calls=1.0, threshold=float(t),
+                         extra={"sample_matches": int(m),
+                                "machine_cpu_s": machine_s})
+                for s, t, m in zip(sels, thrs, ms)]
 
 
 class OracleEstimator:

@@ -1,17 +1,28 @@
 """The Semantic Histogram: an embedding store + threshold-probe (paper §2).
 
 No buckets — the paper's design decision is to keep *all* embeddings (§2.1);
-the store is a (N, d) matrix sharded over the data axes at pod scale. The two
+the store is a (N, d) matrix sharded over the data axes at pod scale. The
 probe primitives are:
 
-  * ``count_within(pred, thr)``     -> selectivity (§2.2 step 5)
+  * ``count_within(pred, thr)``        -> selectivity (§2.2 step 5)
   * ``kth_smallest_distance(pred, k)`` -> threshold calibration (§3.2)
+  * ``probe_batch / selectivity_batch / kth_smallest_batch`` — the same two
+    primitives for B predicates in **one** pass over the store: a query
+    plan (or a serving fleet draining a queue of concurrent estimator
+    calls) needs selectivity for many predicates at once, and streaming
+    the store once per batch turns B bandwidth-bound matvecs into a single
+    (N, d) x (d, B) MXU matmul — ~B× less HBM traffic per predicate.
 
-Both are a single fused pass over the store (cosine distances never
-materialize at full precision off-chip): on TPU via the ``cosine_topk`` Pallas
-kernel, on this CPU container via the jnp reference. Distributed: each shard
-counts/top-ks locally, then one tiny ``psum``/gather combines — the probe's
-collective traffic is O(k), independent of N.
+All probes are a single fused pass over the store (cosine distances never
+materialize at full precision off-chip): on TPU via the ``cosine_topk``
+Pallas kernels, on this CPU container via the jnp reference. Distributed:
+each shard counts/top-ks locally, then one tiny ``psum``/gather combines —
+the probe's collective traffic is O(B*k), independent of N.
+
+Compilation: the jitted probe entry points live at module level (plain
+``jax.jit`` functions), so every ``SemanticHistogram`` instance shares one
+trace cache keyed on (impl, k, shapes) — building many histograms (tests,
+per-dataset serving stacks) no longer pays a retrace each.
 """
 
 from __future__ import annotations
@@ -36,6 +47,29 @@ def _local_probe(store, pred, thresholds, k):
     return counts, -neg_top
 
 
+def _local_probe_batch(store, preds, thresholds, k):
+    """store (n,d); preds (B,d); thresholds (B,t). Returns
+    (counts (B,t), smallest_k (B,k)) — one store pass for all B predicates."""
+    sims = jnp.einsum("nd,bd->bn", store.astype(f32), preds.astype(f32))
+    dists = 1.0 - sims                                      # (B, n)
+    counts = (dists[:, None, :] <= thresholds[:, :, None]).sum(axis=-1)
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    return counts, -neg_top
+
+
+# Module-level jitted probes: shared across every SemanticHistogram instance
+# (jax.jit caches traces per (shapes, static k) on the *function object*, so
+# hoisting out of __post_init__ removes the per-instance retrace).
+@partial(jax.jit, static_argnames=("k",))
+def _probe_xla(store, pred, thresholds, *, k: int):
+    return _local_probe(store, pred, thresholds, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _probe_batch_xla(store, preds, thresholds, *, k: int):
+    return _local_probe_batch(store, preds, thresholds, k)
+
+
 @dataclasses.dataclass
 class SemanticHistogram:
     embeddings: jax.Array        # (N, d) unit vectors
@@ -44,7 +78,6 @@ class SemanticHistogram:
 
     def __post_init__(self):
         self.n = self.embeddings.shape[0]
-        self._probe_jit = jax.jit(partial(self._probe), static_argnames=("k",))
 
     # -------------------- core fused probe --------------------
 
@@ -53,12 +86,21 @@ class SemanticHistogram:
             from repro.kernels.cosine_topk import ops as ct
 
             return ct.cosine_probe(self.embeddings, pred, thresholds, k=k)
-        return _local_probe(self.embeddings, pred, thresholds, k)
+        return _probe_xla(self.embeddings, pred, thresholds, k=k)
 
-    # -------------------- public API --------------------
+    def _probe_batched(self, preds: jax.Array, thresholds: jax.Array, *,
+                       k: int):
+        if self.impl == "pallas":
+            from repro.kernels.cosine_topk import ops as ct
+
+            return ct.cosine_probe_batch(self.embeddings, preds, thresholds,
+                                         k=k)
+        return _probe_batch_xla(self.embeddings, preds, thresholds, k=k)
+
+    # -------------------- public API (scalar) --------------------
 
     def count_within(self, pred: np.ndarray, threshold: float) -> int:
-        counts, _ = self._probe_jit(
+        counts, _ = self._probe(
             jnp.asarray(pred), jnp.asarray([threshold], f32), k=1
         )
         return int(counts[0])
@@ -68,10 +110,38 @@ class SemanticHistogram:
 
     def kth_smallest_distance(self, pred: np.ndarray, k: int) -> float:
         k = max(1, min(k, self.n))
-        _, smallest = self._probe_jit(
+        _, smallest = self._probe(
             jnp.asarray(pred), jnp.zeros((1,), f32), k=int(k)
         )
         return float(smallest[k - 1])
+
+    # -------------------- public API (batched) --------------------
+
+    def probe_batch(self, preds: np.ndarray, thresholds: np.ndarray, *,
+                    k: int = 1) -> tuple[jax.Array, jax.Array]:
+        """One fused pass for B predicates. preds (B, d); thresholds (B,)
+        or (B, T). Returns (counts (B, T) int32, top-k distances (B, k))."""
+        preds = jnp.asarray(preds)
+        thr = jnp.asarray(thresholds, f32)
+        if thr.ndim == 1:
+            thr = thr[:, None]
+        k = max(1, min(int(k), self.n))
+        return self._probe_batched(preds, thr, k=k)
+
+    def selectivity_batch(self, preds: np.ndarray,
+                          thresholds: np.ndarray) -> np.ndarray:
+        """Selectivity of B (predicate, threshold) pairs via one store pass —
+        one device round-trip for the whole batch."""
+        counts, _ = self.probe_batch(preds, thresholds, k=1)
+        return np.asarray(counts[:, 0]) / self.n
+
+    def kth_smallest_batch(self, preds: np.ndarray, k: int) -> np.ndarray:
+        """k-th smallest distance per predicate, (B,) float — batched
+        threshold calibration."""
+        k = max(1, min(int(k), self.n))
+        b = np.asarray(preds).shape[0]
+        _, smallest = self.probe_batch(preds, np.zeros((b,), np.float32), k=k)
+        return np.asarray(smallest[:, k - 1])
 
     def distances(self, pred: np.ndarray) -> np.ndarray:
         """Full distance vector — test/debug only (not the serving path)."""
@@ -79,10 +149,16 @@ class SemanticHistogram:
         return np.asarray(1.0 - sims)
 
 
-def make_sharded_probe(mesh, *, k: int = 128):
+def make_sharded_probe(mesh, *, k: int = 128, batched: bool = False):
     """shard_map probe over a ('pod','data')-sharded store: local fused pass,
     psum of counts, all-gather + resort of per-shard top-k. Used by the probe
-    scaling benchmark and the multi-pod serve path."""
+    scaling benchmark and the multi-pod serve path.
+
+    Scalar (default): pred (d,), thresholds (T,) -> (counts (T,), top (k,)).
+    ``batched=True``: preds (B, d), thresholds (B, T) -> (counts (B, T),
+    top (B, k)) — psum of the (B, T) counts, all-gather of the per-shard
+    (B, k) top-k along a fresh shard axis, then a per-predicate resort.
+    Collective traffic stays O(B*k), independent of the store size."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
@@ -94,8 +170,16 @@ def make_sharded_probe(mesh, *, k: int = 128):
         gathered = jax.lax.all_gather(local_top, data_axes, tiled=True)
         return counts, -jax.lax.top_k(-gathered, k)[0]
 
+    def probe_batch(store, preds, thresholds):
+        counts, local_top = _local_probe_batch(store, preds, thresholds, k)
+        counts = jax.lax.psum(counts, data_axes)
+        # (nshards, B, k) -> (B, nshards*k) -> per-predicate resort
+        gathered = jax.lax.all_gather(local_top, data_axes)
+        flat = jnp.moveaxis(gathered, 0, 1).reshape(local_top.shape[0], -1)
+        return counts, -jax.lax.top_k(-flat, k)[0]
+
     return shard_map(
-        probe, mesh=mesh,
+        probe_batch if batched else probe, mesh=mesh,
         in_specs=(P(data_axes), P(), P()),
         out_specs=(P(), P()),
         check_rep=False,

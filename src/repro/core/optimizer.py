@@ -48,8 +48,18 @@ class ExecutionResult:
 
 
 def plan_query(filters: Sequence[int], estimator, seed: int = 0) -> QueryPlan:
+    """Estimate every filter, order ascending by selectivity.
+
+    Fast path: estimators exposing ``estimate_batch`` (specificity, kv-batch,
+    ensemble) get all filters of the query in one call — thresholds batched
+    on-device, selectivities from a single batched histogram probe (one store
+    pass). Estimators without it fall back to the per-filter loop."""
     t0 = time.perf_counter()
-    ests = [estimator.estimate(f, seed=seed) for f in filters]
+    batch = getattr(estimator, "estimate_batch", None)
+    if batch is not None and len(filters) > 0:
+        ests = batch(list(filters), seed=seed)
+    else:
+        ests = [estimator.estimate(f, seed=seed) for f in filters]
     order = np.argsort([e.selectivity for e in ests], kind="stable")
     est_s = sum(e.measured_s for e in ests)
     calls = sum(e.vlm_calls for e in ests)

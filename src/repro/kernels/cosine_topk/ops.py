@@ -1,4 +1,11 @@
-"""Jitted wrapper: pad to TPU tiles, run the kernel, merge block partials."""
+"""Jitted wrappers: pad to TPU tiles, run the kernel, merge block partials.
+
+``cosine_probe`` is the scalar (one-predicate) path; ``cosine_probe_batch``
+scores a whole (B, d) predicate batch in one store pass via the MXU kernel.
+Both clamp k to N and handle non-tile-aligned N and d by padding (padded
+rows are masked to +inf distance inside the kernel, so counts and top-k are
+exact).
+"""
 
 from __future__ import annotations
 
@@ -7,7 +14,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cosine_topk.kernel import cosine_probe_blocks
+from repro.kernels.cosine_topk.kernel import (
+    cosine_probe_batch_blocks,
+    cosine_probe_blocks,
+)
 
 f32 = jnp.float32
 
@@ -44,4 +54,36 @@ def cosine_probe(
     )
     counts = counts_b.sum(axis=0)
     merged = -jax.lax.top_k(-topk_b.reshape(-1), k)[0]
+    return counts, merged
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def cosine_probe_batch(
+    store: jax.Array,        # (N, d)
+    preds: jax.Array,        # (B, d) predicate batch
+    thresholds: jax.Array,   # (B, T) per-predicate threshold vectors
+    *,
+    k: int = 128,
+    block_n: int = 2048,
+    interpret: bool = True,  # CPU container; False on real TPU
+) -> tuple[jax.Array, jax.Array]:
+    """Batched fused probe — one store pass for B predicates.
+
+    Returns (counts (B, T) int32, k smallest distances (B, k) ascending).
+    """
+    n = store.shape[0]
+    b = preds.shape[0]
+    k = min(k, n)
+    block_n = min(block_n, max(128, 1 << (n - 1).bit_length()))
+    sp = _pad_to(_pad_to(store, 128, 1), block_n, 0)
+    pp = _pad_to(preds.astype(store.dtype), 128, 1).T      # (d_pad, B)
+    kk = min(max(k, 1), block_n)
+    counts_b, topk_b = cosine_probe_batch_blocks(
+        sp, pp, thresholds.astype(f32), k=kk, n_total=n, block_n=block_n,
+        interpret=interpret,
+    )
+    counts = counts_b.sum(axis=0)                          # (B, T)
+    # (nblocks, B, kk) -> (B, nblocks*kk) -> per-predicate global top-k
+    flat = topk_b.transpose(1, 0, 2).reshape(b, -1)
+    merged = -jax.lax.top_k(-flat, k)[0]
     return counts, merged

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the fused semantic-histogram probe."""
+"""Pure-jnp oracles for the fused semantic-histogram probe (scalar + batched)."""
 
 from __future__ import annotations
 
@@ -15,5 +15,18 @@ def cosine_probe_ref(store: jax.Array, pred: jax.Array, thresholds: jax.Array,
     sims = jnp.einsum("nd,d->n", store.astype(f32), pred.astype(f32))
     dists = 1.0 - sims
     counts = (dists[None, :] <= thresholds[:, None]).sum(axis=1).astype(jnp.int32)
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    return counts, -neg_top
+
+
+def cosine_probe_batch_ref(store: jax.Array, preds: jax.Array,
+                           thresholds: jax.Array, k: int,
+                           ) -> tuple[jax.Array, jax.Array]:
+    """store (N, d); preds (B, d); thresholds (B, T). Returns
+    (counts (B, T) int32, k smallest distances (B, k) f32 ascending)."""
+    sims = jnp.einsum("nd,bd->bn", store.astype(f32), preds.astype(f32))
+    dists = 1.0 - sims                                      # (B, N)
+    counts = (dists[:, None, :] <= thresholds[:, :, None]).sum(
+        axis=-1).astype(jnp.int32)                          # (B, T)
     neg_top, _ = jax.lax.top_k(-dists, k)
     return counts, -neg_top

@@ -6,6 +6,12 @@ Builds the full Semantic-Histogram stack (embedding store, specificity model,
 compressed-KV-cache batching on the reduced LLaVA config), then plans and
 executes semantic queries, printing per-estimator latency/calls/overhead —
 the interactive counterpart of benchmarks/fig4_end_to_end.py.
+
+Planning uses the batched estimator path: ``plan_query`` hands all filters
+of a query to ``estimate_batch`` (one batched histogram probe per plan for
+specificity/kv-batch/ensemble), so serving many-filter queries scans the
+store once per query rather than once per filter. ``--impl pallas`` routes
+probes through the fused cosine_topk kernels (interpret mode on CPU).
 """
 
 from __future__ import annotations
@@ -61,10 +67,15 @@ def main() -> None:
     ap.add_argument("--filters", type=int, default=3)
     ap.add_argument("--queries", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--impl", default="xla", choices=["xla", "pallas"],
+                    help="histogram probe backend (pallas = fused kernel, "
+                         "interpret mode on CPU)")
     args = ap.parse_args()
 
-    print(f"building semantic-histogram stack for '{args.dataset}'...")
-    corpus, estimators = build_stack(args.dataset, seed=args.seed)
+    print(f"building semantic-histogram stack for '{args.dataset}' "
+          f"(probe impl={args.impl})...")
+    corpus, estimators = build_stack(args.dataset, seed=args.seed,
+                                     impl=args.impl)
     queries = generate_queries(corpus, n_queries=args.queries,
                                n_filters=args.filters, seed=args.seed)
     oracle = estimators["oracle"]

@@ -1,0 +1,204 @@
+"""Batched multi-predicate probe: kernel parity, histogram APIs, estimator
+batching, and the planner's one-probe fast path (PR: batched MXU probe)."""
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import histogram as H
+from repro.core.histogram import SemanticHistogram, _local_probe
+from repro.core.synthetic import make_corpus
+
+# ------------------------------------------------------------- kernel parity
+
+
+@pytest.mark.parametrize("n,d,b,t,k", [
+    (1000, 1152, 8, 3, 16),
+    (2500, 768, 32, 1, 128),   # N not a multiple of block_n
+    (257, 96, 4, 2, 8),        # non-tile-aligned n and d
+    (128, 128, 1, 1, 128),     # B=1, k == n
+    (100, 64, 3, 2, 500),      # k > N clamp
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cosine_probe_batch_parity(n, d, b, t, k, dtype, rng):
+    """Batched pallas-interpret == batched xla reference == per-predicate
+    scalar probe loop, including padding edges."""
+    from repro.kernels.cosine_topk.ops import cosine_probe_batch
+    from repro.kernels.cosine_topk.ref import cosine_probe_batch_ref
+
+    store = rng.standard_normal((n, d)).astype(np.float32)
+    store /= np.linalg.norm(store, axis=1, keepdims=True)
+    preds = rng.standard_normal((b, d)).astype(np.float32)
+    preds /= np.linalg.norm(preds, axis=1, keepdims=True)
+    thr = np.sort(rng.uniform(0.3, 1.7, (b, t)), axis=1).astype(np.float32)
+
+    kk = min(k, n)
+    c1, t1 = cosine_probe_batch(jnp.asarray(store, dtype),
+                                jnp.asarray(preds, dtype),
+                                jnp.asarray(thr), k=k)
+    c2, t2 = cosine_probe_batch_ref(jnp.asarray(store, dtype),
+                                    jnp.asarray(preds, dtype),
+                                    jnp.asarray(thr), kk)
+    assert c1.shape == (b, t) and t1.shape == (b, kk)
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+    np.testing.assert_allclose(np.asarray(t1), np.asarray(t2),
+                               rtol=1e-4, atol=1e-4)
+    # per-predicate scalar loop agrees row by row
+    for j in range(b):
+        cs, ts = _local_probe(jnp.asarray(store, dtype),
+                              jnp.asarray(preds[j], dtype),
+                              jnp.asarray(thr[j]), kk)
+        assert (np.asarray(cs) == np.asarray(c1[j])).all()
+        np.testing.assert_allclose(np.asarray(ts), np.asarray(t1[j]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------- histogram batched
+
+
+def _unit_rows(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_histogram_batch_matches_scalar(impl, rng):
+    x = _unit_rows(rng, 500, 64)
+    hist = SemanticHistogram(jnp.asarray(x), impl=impl)
+    preds = x[:5]
+    thrs = np.asarray([0.3, 0.5, 0.8, 1.1, 1.9], np.float32)
+    sels = hist.selectivity_batch(preds, thrs)
+    for j in range(5):
+        assert sels[j] == hist.selectivity(preds[j], float(thrs[j]))
+    kth = hist.kth_smallest_batch(preds, 17)
+    ref = [hist.kth_smallest_distance(preds[j], 17) for j in range(5)]
+    np.testing.assert_allclose(kth, ref, rtol=1e-5, atol=1e-5)
+    # k > N clamps
+    kth_all = hist.kth_smallest_batch(preds[:2], 10_000)
+    np.testing.assert_allclose(
+        kth_all, [hist.kth_smallest_distance(p, 10_000) for p in preds[:2]],
+        rtol=1e-5, atol=1e-5)
+
+
+def test_histogram_shared_jit_no_retrace(rng):
+    """Many same-shape instances share one module-level trace cache — the
+    per-instance jax.jit(partial(...)) retrace is gone."""
+    x = _unit_rows(rng, 200, 32)
+    h1 = SemanticHistogram(jnp.asarray(x))
+    h1.count_within(x[0], 0.5)
+    h1.selectivity_batch(x[:3], np.full(3, 0.5, np.float32))
+    size_scalar = H._probe_xla._cache_size()
+    size_batch = H._probe_batch_xla._cache_size()
+    for seed in range(3):
+        h = SemanticHistogram(jnp.asarray(_unit_rows(rng, 200, 32)))
+        h.count_within(x[1], 0.4)
+        h.selectivity_batch(x[1:4], np.full(3, 0.4, np.float32))
+    assert H._probe_xla._cache_size() == size_scalar
+    assert H._probe_batch_xla._cache_size() == size_batch
+
+
+# ------------------------------------------------------- estimator batching
+
+
+@functools.lru_cache(maxsize=2)
+def _corpus():
+    return make_corpus("wildlife", n_images=400, seed=0)
+
+
+def _spec_estimator(corpus, hist):
+    from repro.configs.paper_stack import SpecificityModelConfig
+    from repro.core.estimators import SpecificityEstimator
+    from repro.core.specificity import SpecificityModel, specificity_specs
+
+    import jax as _jax
+    from repro.models import nn
+
+    cfg = SpecificityModelConfig(embed_dim=corpus.dim)
+    params = nn.init_params(_jax.random.PRNGKey(0), specificity_specs(cfg))
+    return SpecificityEstimator(corpus, hist, SpecificityModel(params, cfg))
+
+
+def test_specificity_estimate_batch_matches_scalar():
+    c = _corpus()
+    hist = SemanticHistogram(jnp.asarray(c.images))
+    est = _spec_estimator(c, hist)
+    nodes = c.predicate_nodes()[:6]
+    batch = est.estimate_batch(nodes, seed=0)
+    for nid, eb in zip(nodes, batch):
+        e = est.estimate(nid, seed=0)
+        assert eb.threshold == pytest.approx(e.threshold, rel=1e-5)
+        assert eb.selectivity == pytest.approx(e.selectivity, abs=1.5 / hist.n)
+        assert eb.vlm_calls == e.vlm_calls == 0.0
+
+
+def test_kvbatch_and_ensemble_estimate_batch_match_scalar():
+    from repro.core.estimators import EnsembleEstimator, KVBatchEstimator
+    from repro.core.kvbatch import build_compressed_store
+    from repro.kernels.kmeans.ops import medoid_sample
+
+    c = _corpus()
+    hist = SemanticHistogram(jnp.asarray(c.images))
+    ids = medoid_sample(c.images, 16, iters=3, seed=0)
+    store = build_compressed_store(c.images, ids, rate=0.6, seed=0)
+    kvb = KVBatchEstimator(c, hist, store, run_machinery=False)
+    ens = EnsembleEstimator(_spec_estimator(c, hist), kvb)
+    nodes = c.predicate_nodes()[:5]
+    for est in (kvb, ens):
+        batch = est.estimate_batch(nodes, seed=0)
+        for nid, eb in zip(nodes, batch):
+            e = est.estimate(nid, seed=0)
+            assert eb.threshold == pytest.approx(e.threshold, rel=1e-5)
+            assert eb.selectivity == pytest.approx(e.selectivity,
+                                                   abs=1.5 / hist.n)
+            assert eb.vlm_calls == e.vlm_calls == 1.0
+            assert eb.extra["sample_matches"] == e.extra["sample_matches"]
+
+
+# ------------------------------------------------------ planner fast path
+
+
+def test_plan_query_issues_one_batched_probe():
+    """A 4-filter query plans via exactly one batched probe — no per-filter
+    estimate() loop on the fast path."""
+    from repro.core.optimizer import plan_query
+
+    c = _corpus()
+    hist = SemanticHistogram(jnp.asarray(c.images))
+    est = _spec_estimator(c, hist)
+    probes = []
+    orig = hist.selectivity_batch
+    hist.selectivity_batch = lambda *a, **kw: (probes.append(1),
+                                               orig(*a, **kw))[1]
+    est.estimate = None  # the scalar path must not be touched
+    filters = c.predicate_nodes()[:4]
+    plan = plan_query(filters, est, seed=0)
+    assert len(probes) == 1
+    assert sorted(plan.filter_order) == sorted(filters)
+    sels = [e.selectivity for e in plan.estimates]
+    assert sels == sorted(sels)
+
+
+def test_plan_query_empty_filters():
+    from repro.core.optimizer import plan_query
+
+    c = _corpus()
+    hist = SemanticHistogram(jnp.asarray(c.images))
+    plan = plan_query([], _spec_estimator(c, hist), seed=0)
+    assert plan.filter_order == [] and plan.estimates == []
+    assert plan.est_vlm_calls == 0
+
+
+def test_plan_query_falls_back_without_batch():
+    from repro.core.estimators import Estimate
+    from repro.core.optimizer import plan_query
+
+    class Scalar:
+        name = "scalar"
+
+        def estimate(self, node_id, seed=0):
+            return Estimate({7: 0.5, 8: 0.01, 9: 0.2}[node_id], 0.0, 0.0)
+
+    plan = plan_query([7, 8, 9], Scalar())
+    assert plan.filter_order == [8, 9, 7]

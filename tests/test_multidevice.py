@@ -19,7 +19,8 @@ SCRIPT = textwrap.dedent("""
     out = {}
 
     # ---- sharded semantic-histogram probe == local reference ----
-    from repro.core.histogram import make_sharded_probe, _local_probe
+    from repro.core.histogram import (
+        make_sharded_probe, _local_probe, _local_probe_batch)
     rng = np.random.default_rng(0)
     store = rng.standard_normal((800, 256)).astype(np.float32)
     store /= np.linalg.norm(store, axis=1, keepdims=True)
@@ -33,6 +34,18 @@ SCRIPT = textwrap.dedent("""
                                 jnp.asarray(thr), 16)
     out["counts_match"] = bool((np.asarray(counts) == np.asarray(c_ref)).all())
     out["topk_err"] = float(np.abs(np.asarray(topk) - np.asarray(t_ref)).max())
+
+    # ---- batched sharded probe (B predicates, one pass) == reference ----
+    preds = store[:5]
+    thrB = np.tile(thr, (5, 1))
+    probe_b = make_sharded_probe(mesh, k=16, batched=True)
+    cb, tb = probe_b(sd, jnp.asarray(preds), jnp.asarray(thrB))
+    cb_ref, tb_ref = _local_probe_batch(jnp.asarray(store), jnp.asarray(preds),
+                                        jnp.asarray(thrB), 16)
+    out["batched_counts_match"] = bool(
+        (np.asarray(cb) == np.asarray(cb_ref)).all())
+    out["batched_topk_err"] = float(
+        np.abs(np.asarray(tb) - np.asarray(tb_ref)).max())
 
     # ---- two-stage int8 all-reduce ~= exact all-reduce ----
     from repro.optim.grad_compression import two_stage_allreduce
@@ -50,12 +63,16 @@ SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_multidevice_probe_and_compression():
+    # 8 forced host devices compile several shard_map programs; under heavy
+    # container CPU throttling that can take minutes (measured ~7s unloaded)
     r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=300,
+                       text=True, timeout=600,
                        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
                             "HOME": "/root"})
     assert r.returncode == 0, r.stderr[-2000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
     assert out["counts_match"]
     assert out["topk_err"] < 1e-5
+    assert out["batched_counts_match"]
+    assert out["batched_topk_err"] < 1e-5
     assert out["int8_rel_err"] < 0.02   # int8 quantization noise bound
