@@ -1,0 +1,93 @@
+"""Docs drift check: README / docs commands must match real entrypoints.
+
+Scans README.md and docs/*.md for shell commands (``python -m pkg.mod``,
+``python path/to/script.py``, pytest invocations) and fails if:
+
+  * a ``python -m`` module doesn't resolve to a file under src/,
+  * a referenced script path doesn't exist,
+  * a ``--flag`` passed to a ``python -m`` command isn't declared in that
+    module's source (argparse drift),
+  * README's pytest line disagrees with ROADMAP.md's tier-1 command.
+
+Run directly (``python scripts/check_docs.py``) or via
+``python scripts/smoke_all.py --check-docs``. Exit code 1 on any drift.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# lines inside ``` blocks or backticks that invoke python/pytest
+_CMD = re.compile(
+    r"(?:PYTHONPATH=\S+\s+)?python(?:3)?\s+(-m\s+[\w.]+|[\w./]+\.py)"
+    r"((?:\s+--?[\w-]+(?:[= ][\w.-]+)?)*)")
+_PYTEST = re.compile(r"python -m pytest[^\n`]*")
+
+
+def _module_file(mod: str) -> Path | None:
+    p = REPO / "src" / Path(*mod.split("."))
+    if (p.with_suffix(".py")).exists():
+        return p.with_suffix(".py")
+    if (p / "__main__.py").exists():
+        return p / "__main__.py"
+    return None
+
+
+def _check_file(path: Path, errors: list[str]) -> None:
+    text = path.read_text()
+    rel = path.relative_to(REPO)
+    for m in _CMD.finditer(text):
+        target, flagstr = m.group(1), m.group(2) or ""
+        if target.startswith("-m"):
+            mod = target.split()[1]
+            if mod == "pytest":
+                continue
+            src = _module_file(mod)
+            if src is None:
+                errors.append(f"{rel}: `python -m {mod}` — no such module "
+                              f"under src/")
+                continue
+            source = src.read_text()
+            for flag in re.findall(r"--[\w-]+", flagstr):
+                if f'"{flag}"' not in source and f"'{flag}'" not in source:
+                    errors.append(f"{rel}: `{flag}` not declared in {mod} "
+                                  f"({src.relative_to(REPO)})")
+        else:
+            if not (REPO / target).exists():
+                errors.append(f"{rel}: script `{target}` does not exist")
+
+
+def main() -> int:
+    errors: list[str] = []
+    readme = REPO / "README.md"
+    if not readme.exists():
+        print("check_docs: README.md missing", file=sys.stderr)
+        return 1
+    for path in [readme, *sorted((REPO / "docs").glob("*.md"))]:
+        _check_file(path, errors)
+
+    # tier-1 command in README must match ROADMAP's verbatim
+    roadmap = (REPO / "ROADMAP.md").read_text()
+    tier1 = _PYTEST.search(roadmap)
+    if tier1 and not any(tier1.group(0).split("pytest")[1].strip() in ln
+                         for ln in readme.read_text().splitlines()
+                         if "pytest" in ln):
+        errors.append(f"README.md: tier-1 pytest line drifted from "
+                      f"ROADMAP.md (`{tier1.group(0)}`)")
+
+    if errors:
+        print("check_docs: FAIL")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("OK  check_docs               README/docs commands match "
+          "entrypoints")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,9 @@
 """Dev loop: run a reduced forward+train+prefill+decode for every arch on CPU,
 plus a batched semantic-histogram probe smoke (pallas-interpret vs xla vs
-per-predicate loop) so hot-path regressions surface here first."""
+per-predicate loop) and a coalescer + predicate-cache smoke (cross-query
+micro-batching, LRU hits, B-tiled kernel parity) so hot-path regressions
+surface here first. ``--check-docs`` additionally runs
+scripts/check_docs.py (README/docs drift vs actual entrypoints)."""
 
 import sys
 import traceback
@@ -99,15 +102,68 @@ def run_probe_smoke():
     print("OK  batched_probe            pallas==xla==loop, B=8")
 
 
+def run_coalescer_smoke():
+    """Serving layer: one coalescer flush covers many concurrent queries'
+    predicates, repeats hit the LRU, and the B-tiled kernel matches the
+    untiled batch kernel."""
+    import threading
+
+    from repro.core.histogram import SemanticHistogram
+    from repro.kernels.cosine_topk.ops import cosine_probe_batch
+    from repro.launch.coalescer import CoalescerConfig, PredicateCoalescer
+
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((600, 96)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    hist = SemanticHistogram(jnp.asarray(x))
+    thr = np.full(2, 0.8, np.float32)
+    with PredicateCoalescer(
+            hist, CoalescerConfig(max_batch=8, window_ms=200)) as coal:
+        out = {}
+        ts = [threading.Thread(
+            target=lambda i=i: out.setdefault(
+                i, coal.selectivity_batch(x[2 * i:2 * i + 2], thr)))
+            for i in range(4)]
+        [t.start() for t in ts]
+        [t.join(timeout=60) for t in ts]
+        for i in range(4):
+            ref = hist.selectivity_batch(x[2 * i:2 * i + 2], thr)
+            assert np.allclose(out[i], ref), (i, out[i], ref)
+        again = coal.selectivity_batch(x[:8], np.full(8, 0.8, np.float32))
+        st = coal.stats()
+    assert st["probes_fired"] < st["requests"], st
+    assert st["cache"]["hits"] >= 8, st
+    # B-tiled kernel parity at B > block_b
+    preds = x[:96]
+    thrs = np.full((96, 1), 0.8, np.float32)
+    ct, tt = cosine_probe_batch(jnp.asarray(x), jnp.asarray(preds),
+                                jnp.asarray(thrs), k=5, block_b=32,
+                                tiled=True)
+    cu, tu = cosine_probe_batch(jnp.asarray(x), jnp.asarray(preds),
+                                jnp.asarray(thrs), k=5, tiled=False)
+    assert (np.asarray(ct) == np.asarray(cu)).all()
+    assert np.allclose(np.asarray(tt), np.asarray(tu), atol=1e-5)
+    print(f"OK  coalescer_cache          probes={st['probes_fired']} "
+          f"for {st['requests']} requests, "
+          f"hit_rate={st['cache']['hit_rate']:.0%}, tiled==untiled B=96")
+
+
 if __name__ == "__main__":
-    archs = sys.argv[1:] or list(ASSIGNED)
+    argv = sys.argv[1:]
     fails = []
-    try:
-        run_probe_smoke()
-    except Exception:
-        fails.append("batched_probe")
-        print("FAIL batched_probe")
-        traceback.print_exc()
+    if "--check-docs" in argv:
+        argv = [a for a in argv if a != "--check-docs"]
+        from check_docs import main as check_docs_main
+        if check_docs_main() != 0:
+            fails.append("check_docs")
+    archs = argv or list(ASSIGNED)
+    for smoke in (run_probe_smoke, run_coalescer_smoke):
+        try:
+            smoke()
+        except Exception:
+            fails.append(smoke.__name__)
+            print(f"FAIL {smoke.__name__}")
+            traceback.print_exc()
     for a in archs:
         try:
             run(a)

@@ -15,6 +15,13 @@ MLP; KV-batch calibration is numpy), and selectivity for all predicates
 comes from **one** batched histogram probe (one store pass, one device
 round-trip) instead of a per-predicate Python loop of probe + float()
 conversions. ``plan_query`` uses it for all filters of a query at once.
+
+Serving: batched estimators accept ``probe=`` — any callable with the
+``selectivity_batch(preds, thresholds)`` signature — in place of the
+histogram's direct probe. ``plan_query(..., coalescer=...)`` passes the
+``PredicateCoalescer``'s method here, so concurrent queries' filters merge
+into one cross-query micro-batched probe (estimators advertising this with
+``supports_probe = True``).
 """
 
 from __future__ import annotations
@@ -70,6 +77,8 @@ class SamplingEstimator:
 class SpecificityEstimator:
     """Paper §3.1: MLP threshold -> histogram probe. No VLM calls at all."""
 
+    supports_probe = True        # estimate_batch accepts probe= (coalescer)
+
     def __init__(self, corpus: Corpus, hist: SemanticHistogram,
                  model: SpecificityModel):
         self.corpus, self.hist, self.model = corpus, hist, model
@@ -87,12 +96,16 @@ class SpecificityEstimator:
         return Estimate(sel, time.perf_counter() - t0, vlm_calls=0.0,
                         threshold=thr)
 
-    def estimate_batch(self, node_ids, seed: int = 0) -> list[Estimate]:
-        """All thresholds in one MLP apply, all selectivities in one probe."""
+    def estimate_batch(self, node_ids, seed: int = 0,
+                       probe=None) -> list[Estimate]:
+        """All thresholds in one MLP apply, all selectivities in one probe.
+        ``probe``: optional ``selectivity_batch``-shaped callable (e.g. a
+        coalescer handle) replacing the direct histogram probe."""
+        sel_batch = probe if probe is not None else self.hist.selectivity_batch
         t0 = time.perf_counter()
         embs = _predicate_embeddings(self.corpus, node_ids, seed)
         thrs = self._thresholds(embs)
-        sels = self.hist.selectivity_batch(embs, thrs)
+        sels = sel_batch(embs, thrs)
         dt = (time.perf_counter() - t0) / max(1, len(node_ids))
         return [Estimate(float(s), dt, vlm_calls=0.0, threshold=float(t))
                 for s, t in zip(sels, thrs)]
@@ -100,6 +113,8 @@ class SpecificityEstimator:
 
 class KVBatchEstimator:
     """Paper §3.2: one batched decode over compressed caches -> threshold."""
+
+    supports_probe = True        # estimate_batch accepts probe= (coalescer)
 
     def __init__(self, corpus: Corpus, hist: SemanticHistogram,
                  store: CompressedCacheStore, *, prompt_len: int = 6,
@@ -154,13 +169,16 @@ class KVBatchEstimator:
                         extra={"sample_matches": m,
                                "machine_cpu_s": machine_s})
 
-    def estimate_batch(self, node_ids, seed: int = 0) -> list[Estimate]:
-        """Batched calibration + one histogram probe for all predicates."""
+    def estimate_batch(self, node_ids, seed: int = 0,
+                       probe=None) -> list[Estimate]:
+        """Batched calibration + one histogram probe for all predicates.
+        ``probe``: optional coalescer-style ``selectivity_batch`` callable."""
+        sel_batch = probe if probe is not None else self.hist.selectivity_batch
         machine_s = self._machinery_latency()
         t0 = time.perf_counter()
         embs = _predicate_embeddings(self.corpus, node_ids, seed)
         thrs, ms = self._thresholds(node_ids, embs, seed)
-        sels = self.hist.selectivity_batch(embs, thrs)
+        sels = sel_batch(embs, thrs)
         dt = (time.perf_counter() - t0) / max(1, len(node_ids))
         return [Estimate(float(s), dt, vlm_calls=1.0, threshold=float(t),
                          extra={"sample_matches": int(m),
@@ -170,6 +188,8 @@ class KVBatchEstimator:
 
 class EnsembleEstimator:
     """Paper §3.3: average the two thresholds; most robust across datasets."""
+
+    supports_probe = True        # estimate_batch accepts probe= (coalescer)
 
     def __init__(self, spec: SpecificityEstimator, kvb: KVBatchEstimator):
         self.spec, self.kvb = spec, kvb
@@ -189,17 +209,20 @@ class EnsembleEstimator:
                         vlm_calls=e2.vlm_calls, threshold=thr,
                         extra=e2.extra)
 
-    def estimate_batch(self, node_ids, seed: int = 0) -> list[Estimate]:
+    def estimate_batch(self, node_ids, seed: int = 0,
+                       probe=None) -> list[Estimate]:
         """Both component thresholds are pure calibration (MLP apply +
         sample-distance sort — no probe needed), so the whole query batch
-        costs exactly **one** histogram probe at the averaged thresholds."""
+        costs exactly **one** histogram probe at the averaged thresholds.
+        ``probe``: optional coalescer-style ``selectivity_batch`` callable."""
+        sel_batch = probe if probe is not None else self.hist.selectivity_batch
         machine_s = self.kvb._machinery_latency()
         t0 = time.perf_counter()
         embs = _predicate_embeddings(self.corpus, node_ids, seed)
         t_spec = self.spec._thresholds(embs)
         t_kvb, ms = self.kvb._thresholds(node_ids, embs, seed)
         thrs = 0.5 * (t_spec + t_kvb)
-        sels = self.hist.selectivity_batch(embs, thrs)
+        sels = sel_batch(embs, thrs)
         dt = (time.perf_counter() - t0) / max(1, len(node_ids))
         return [Estimate(float(s), dt, vlm_calls=1.0, threshold=float(t),
                          extra={"sample_matches": int(m),

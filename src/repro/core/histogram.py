@@ -15,9 +15,21 @@ probe primitives are:
 
 All probes are a single fused pass over the store (cosine distances never
 materialize at full precision off-chip): on TPU via the ``cosine_topk``
-Pallas kernels, on this CPU container via the jnp reference. Distributed:
-each shard counts/top-ks locally, then one tiny ``psum``/gather combines —
-the probe's collective traffic is O(B*k), independent of N.
+Pallas kernels (B-tiled for coalesced batches with B >> 128), on this CPU
+container via the jnp reference. Distributed: each shard counts/top-ks
+locally, then one tiny ``psum``/gather combines — the probe's collective
+traffic is O(B*k), independent of N.
+
+Serving layer (PR 2): ``probe_batch`` is cache-aware — construct with
+``cache=PredicateCache(...)`` (see ``repro.launch.coalescer``; any object
+with the same ``key``/``get``/``put`` surface works, the histogram only
+duck-types it) and repeated predicates skip the store scan entirely: hits
+are filled from the LRU, only the miss subset is probed, and the probe's
+exact outputs are cached so a later hit is bitwise-identical to the fresh
+probe. Cross-*query* batching lives one level up in
+``repro.launch.coalescer.PredicateCoalescer``, which collects concurrent
+``plan_query`` probes in a micro-batch window and drains them through this
+``probe_batch`` in one kernel launch.
 
 Compilation: the jitted probe entry points live at module level (plain
 ``jax.jit`` functions), so every ``SemanticHistogram`` instance shares one
@@ -75,6 +87,7 @@ class SemanticHistogram:
     embeddings: jax.Array        # (N, d) unit vectors
     mesh: object | None = None   # sharded probe when set
     impl: str = "xla"            # xla | pallas (interpret on CPU)
+    cache: object | None = None  # PredicateCache-like (duck-typed)
 
     def __post_init__(self):
         self.n = self.embeddings.shape[0]
@@ -118,15 +131,52 @@ class SemanticHistogram:
     # -------------------- public API (batched) --------------------
 
     def probe_batch(self, preds: np.ndarray, thresholds: np.ndarray, *,
-                    k: int = 1) -> tuple[jax.Array, jax.Array]:
+                    k: int = 1, use_cache: bool = True,
+                    ) -> tuple[jax.Array, jax.Array]:
         """One fused pass for B predicates. preds (B, d); thresholds (B,)
-        or (B, T). Returns (counts (B, T) int32, top-k distances (B, k))."""
+        or (B, T). Returns (counts (B, T) int32, top-k distances (B, k)).
+
+        When a ``cache`` is attached (and ``use_cache``), each predicate is
+        looked up by quantized (embedding, thresholds, k) key first; only
+        the miss subset hits the kernel, and its exact outputs are cached.
+        The coalescer passes ``use_cache=False`` — it consults the same
+        cache at submit time, so flushes must not double-count lookups."""
         preds = jnp.asarray(preds)
         thr = jnp.asarray(thresholds, f32)
         if thr.ndim == 1:
             thr = thr[:, None]
         k = max(1, min(int(k), self.n))
-        return self._probe_batched(preds, thr, k=k)
+        if self.cache is None or not use_cache:
+            return self._probe_batched(preds, thr, k=k)
+        return self._probe_batched_cached(np.asarray(preds, np.float32),
+                                          np.asarray(thr), k=k)
+
+    def _probe_batched_cached(self, preds: np.ndarray, thr: np.ndarray, *,
+                              k: int) -> tuple[jax.Array, jax.Array]:
+        """Fill hits from the LRU, probe only the misses, cache the rest.
+
+        The miss subset is padded (repeating rows) to a power-of-two bucket
+        <= B before probing, so the jitted probe compiles O(log B) shapes
+        instead of one per distinct miss count."""
+        b, t = thr.shape
+        keys = [self.cache.key(preds[j], thr[j], k) for j in range(b)]
+        hits = [self.cache.get(key) for key in keys]
+        miss = [j for j, h in enumerate(hits) if h is None]
+        counts = np.empty((b, t), np.int32)
+        topk = np.empty((b, k), np.float32)
+        for j, h in enumerate(hits):
+            if h is not None:
+                counts[j], topk[j] = h
+        if miss:
+            bucket = min(b, 1 << (len(miss) - 1).bit_length())
+            rows = miss + [miss[-1]] * (bucket - len(miss))
+            mc, mt = self._probe_batched(jnp.asarray(preds[rows]),
+                                         jnp.asarray(thr[rows]), k=k)
+            mc, mt = np.asarray(mc), np.asarray(mt)
+            for i, j in enumerate(miss):
+                counts[j], topk[j] = mc[i], mt[i]
+                self.cache.put(keys[j], (mc[i].copy(), mt[i].copy()))
+        return jnp.asarray(counts), jnp.asarray(topk)
 
     def selectivity_batch(self, preds: np.ndarray,
                           thresholds: np.ndarray) -> np.ndarray:

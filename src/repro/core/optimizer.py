@@ -47,17 +47,28 @@ class ExecutionResult:
     overhead_s: float = 0.0           # vs oracle plan (filled by caller)
 
 
-def plan_query(filters: Sequence[int], estimator, seed: int = 0) -> QueryPlan:
+def plan_query(filters: Sequence[int], estimator, seed: int = 0,
+               coalescer=None) -> QueryPlan:
     """Estimate every filter, order ascending by selectivity.
 
     Fast path: estimators exposing ``estimate_batch`` (specificity, kv-batch,
     ensemble) get all filters of the query in one call — thresholds batched
     on-device, selectivities from a single batched histogram probe (one store
-    pass). Estimators without it fall back to the per-filter loop."""
+    pass). Estimators without it fall back to the per-filter loop.
+
+    Serving path: pass a ``repro.launch.coalescer.PredicateCoalescer``
+    handle and estimators advertising ``supports_probe`` route their probe
+    through it — concurrent ``plan_query`` calls then share one cross-query
+    micro-batched store pass, and hot predicates resolve from its LRU cache
+    without probing at all."""
     t0 = time.perf_counter()
     batch = getattr(estimator, "estimate_batch", None)
     if batch is not None and len(filters) > 0:
-        ests = batch(list(filters), seed=seed)
+        kwargs = {}
+        if coalescer is not None and getattr(estimator, "supports_probe",
+                                             False):
+            kwargs["probe"] = coalescer.selectivity_batch
+        ests = batch(list(filters), seed=seed, **kwargs)
     else:
         ests = [estimator.estimate(f, seed=seed) for f in filters]
     order = np.argsort([e.selectivity for e in ests], kind="stable")

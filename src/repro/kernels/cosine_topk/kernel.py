@@ -16,7 +16,13 @@ Two entry points:
     ~1 FLOP/byte (matvec) to ~B FLOP/byte, moving the probe from the
     bandwidth roof toward the MXU roof.
 
-Grid: (N / block_n,). Outputs are per-block partials merged by ops.py (the
+  * ``cosine_probe_batch_tiled_blocks`` — the same batched probe with a
+    second grid dimension over the predicate axis, for coalesced serving
+    batches with B >> 128 (cross-query micro-batching can hand the kernel
+    hundreds of predicates at once).
+
+Grid: (N / block_n,) for the untiled paths; (N / block_n, B / block_b) for
+the B-tiled path. Outputs are per-block partials merged by ops.py (the
 cross-block merge is O(nblocks * B * k) — negligible).
 
 TPU tiling / VMEM budget: block_n a multiple of 128 (lane dim), d padded to
@@ -25,8 +31,12 @@ a multiple of 128 by ops.py. Scalar path per step: block_n*d*2B + block_n*4B
 panel (1152 x 128 f32 = 0.6MB), the (block_n, B) distance tile
 (2048 x 128 f32 = 1MB) and (B, T) + (B, k) outputs — ~7MB at
 block_n=2048, d=1152, B=128, k=128, still inside v5e's 16MB VMEM with
-double buffering; larger B should tile the predicate axis instead of
-growing the panel.
+double buffering. For B >> 128 the panel would outgrow that budget, so the
+tiled path keeps a fixed (d, block_b) panel resident and walks predicate
+tiles in the *minor* grid dimension: the store block index is constant
+across the inner loop, so Pallas's pipelining fetches each store block from
+HBM once per outer step — store traffic stays N*d bytes total regardless of
+B, and VMEM per step is bounded by block_b, not B.
 """
 
 from __future__ import annotations
@@ -153,6 +163,57 @@ def cosine_probe_batch_blocks(
         out_shape=[
             jax.ShapeDtypeStruct((nblocks, b, t), jnp.int32),
             jax.ShapeDtypeStruct((nblocks, b, k), f32),
+        ],
+        interpret=interpret,
+    )(store, preds, thresholds)
+    return counts, topk
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "block_b", "interpret",
+                                    "n_total"))
+def cosine_probe_batch_tiled_blocks(
+    store: jax.Array,          # (N_pad, d_pad) — padded by ops.py
+    preds: jax.Array,          # (d_pad, B_pad) — B padded to block_b by ops.py
+    thresholds: jax.Array,     # (B_pad, T) per-predicate threshold vectors
+    *,
+    k: int,
+    n_total: int,
+    block_n: int = 2048,
+    block_b: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """B-tiled batched probe: grid (nblocks, B_pad/block_b).
+
+    Reuses ``_probe_batch_kernel`` unchanged — the body only consults
+    ``program_id(0)`` (store-block index, for tail masking); the predicate
+    tile offset is entirely in the BlockSpec index maps. The predicate axis
+    is the minor grid dimension so the (block_n, d) store block stays
+    resident across all predicate tiles (one HBM fetch per store block);
+    only the small (d, block_b) panel and (block_b, T) thresholds restream.
+    """
+    n_pad, d = store.shape
+    b_pad = preds.shape[1]
+    t = thresholds.shape[1]
+    nblocks = n_pad // block_n
+    nbt = b_pad // block_b
+    kernel = functools.partial(_probe_batch_kernel, k=k, block_n=block_n,
+                               n_total=n_total)
+    counts, topk = pl.pallas_call(
+        kernel,
+        grid=(nblocks, nbt),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_b), lambda i, j: (0, j)),
+            pl.BlockSpec((block_b, t), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_b, t), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_b, k), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, b_pad, t), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, b_pad, k), f32),
         ],
         interpret=interpret,
     )(store, preds, thresholds)

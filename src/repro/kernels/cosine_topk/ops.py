@@ -5,6 +5,15 @@ scores a whole (B, d) predicate batch in one store pass via the MXU kernel.
 Both clamp k to N and handle non-tile-aligned N and d by padding (padded
 rows are masked to +inf distance inside the kernel, so counts and top-k are
 exact).
+
+B-tiled dispatch: when the predicate batch outgrows ``block_b`` (coalesced
+serving batches — many concurrent queries' filters merged into one probe),
+``cosine_probe_batch`` pads B up to a multiple of ``block_b`` and routes to
+the 2-D-grid tiled kernel so the resident (d, B) panel never exceeds the
+VMEM budget (see kernel.py). Pass ``tiled=True``/``False`` to force either
+path — parity between the two is tested for B below, at, and above the
+tile size. Padded predicate columns are zero vectors whose outputs are
+sliced off before the merge, so results are exact.
 """
 
 from __future__ import annotations
@@ -16,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.kernels.cosine_topk.kernel import (
     cosine_probe_batch_blocks,
+    cosine_probe_batch_tiled_blocks,
     cosine_probe_blocks,
 )
 
@@ -57,7 +67,8 @@ def cosine_probe(
     return counts, merged
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "block_b",
+                                             "tiled", "interpret"))
 def cosine_probe_batch(
     store: jax.Array,        # (N, d)
     preds: jax.Array,        # (B, d) predicate batch
@@ -65,9 +76,15 @@ def cosine_probe_batch(
     *,
     k: int = 128,
     block_n: int = 2048,
+    block_b: int = 128,
+    tiled: bool | None = None,  # None = auto (tile when B > block_b)
     interpret: bool = True,  # CPU container; False on real TPU
 ) -> tuple[jax.Array, jax.Array]:
     """Batched fused probe — one store pass for B predicates.
+
+    Dispatch: B <= ``block_b`` keeps the whole (d, B) panel resident
+    (single-grid kernel); larger B goes through the B-tiled kernel so VMEM
+    use is bounded by ``block_b`` per step. Force with ``tiled``.
 
     Returns (counts (B, T) int32, k smallest distances (B, k) ascending).
     """
@@ -76,12 +93,29 @@ def cosine_probe_batch(
     k = min(k, n)
     block_n = min(block_n, max(128, 1 << (n - 1).bit_length()))
     sp = _pad_to(_pad_to(store, 128, 1), block_n, 0)
-    pp = _pad_to(preds.astype(store.dtype), 128, 1).T      # (d_pad, B)
     kk = min(max(k, 1), block_n)
-    counts_b, topk_b = cosine_probe_batch_blocks(
-        sp, pp, thresholds.astype(f32), k=kk, n_total=n, block_n=block_n,
-        interpret=interpret,
-    )
+    thr = thresholds.astype(f32)
+    if tiled is None:
+        tiled = b > block_b
+    if tiled:
+        # pad the predicate axis to a block_b multiple; zero columns are
+        # scored but sliced off below, so padding never changes results
+        bb = min(block_b, max(8, 1 << (b - 1).bit_length()))
+        preds_p = _pad_to(preds.astype(store.dtype), bb, 0)
+        pp = _pad_to(preds_p, 128, 1).T                    # (d_pad, B_pad)
+        thr_p = _pad_to(thr, bb, 0)
+        counts_b, topk_b = cosine_probe_batch_tiled_blocks(
+            sp, pp, thr_p, k=kk, n_total=n, block_n=block_n, block_b=bb,
+            interpret=interpret,
+        )
+        counts_b = counts_b[:, :b]
+        topk_b = topk_b[:, :b]
+    else:
+        pp = _pad_to(preds.astype(store.dtype), 128, 1).T  # (d_pad, B)
+        counts_b, topk_b = cosine_probe_batch_blocks(
+            sp, pp, thr, k=kk, n_total=n, block_n=block_n,
+            interpret=interpret,
+        )
     counts = counts_b.sum(axis=0)                          # (B, T)
     # (nblocks, B, kk) -> (B, nblocks*kk) -> per-predicate global top-k
     flat = topk_b.transpose(1, 0, 2).reshape(b, -1)

@@ -1,0 +1,327 @@
+"""Cross-query predicate coalescing + LRU predicate cache (serving layer).
+
+PR 1 batched all filters of *one* query into a single (N, d) x (d, B) probe;
+this module batches across *queries*. Two pieces:
+
+  * ``PredicateCache`` — an LRU over quantized (embedding, thresholds, k)
+    keys storing full probe results (counts + top-k). Real semantic-query
+    workloads are dominated by repeated / near-duplicate predicates (hot
+    filters), which hit the cache and skip the store scan entirely.
+    Hit / miss / eviction counters are exposed for the serve driver.
+
+  * ``PredicateCoalescer`` — a micro-batch window. Concurrent ``plan_query``
+    calls submit their predicates and block; a flusher thread collects
+    pending predicates until ``max_batch`` is reached or ``window_ms``
+    elapses since the oldest request, fires ONE batched histogram probe for
+    the whole window, and scatters per-predicate selectivities back to the
+    waiting queries. Identical in-flight predicates are deduplicated
+    (piggyback on the pending entry), so a probe never scores the same
+    predicate twice.
+
+The coalescer consults the cache at submit time (a hit returns immediately,
+without waiting for the window) and fills it at flush time with the exact
+values the kernel produced — a later hit is bitwise-identical to the fresh
+probe. Flush batches are padded up to a small power-of-two bucket so the
+jitted probe compiles O(log max_batch) shapes, not one per batch size.
+
+Thread model: any number of submitter threads; one daemon flusher. All
+shared state is guarded by one condition variable; the probe itself runs
+outside submitter critical sections (jax dispatch is thread-safe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+__all__ = ["PredicateCache", "CoalescerConfig", "PredicateCoalescer"]
+
+
+class PredicateCache:
+    """LRU cache: quantized (embedding, thresholds, k) -> (counts, top-k).
+
+    Keys quantize the embedding and threshold vectors to ``bits`` fractional
+    bits (round(x * 2^bits)), so near-duplicate predicate embeddings — the
+    same filter re-encoded, or textual paraphrases landing within the
+    quantization ball — collapse to one entry. Values are the full probe
+    outputs (counts (T,) int32, top-k (k,) float32), so both selectivity
+    and threshold-calibration probes can be served from cache.
+
+    Thread-safe; ``hits`` / ``misses`` / ``evictions`` counters are
+    monotonic and surfaced by the serve driver.
+    """
+
+    def __init__(self, capacity: int = 1024, *, bits: int = 12):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.bits = bits
+        self._od: OrderedDict[tuple, tuple] = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def key(self, emb: np.ndarray, thresholds, k: int) -> tuple:
+        """Quantized lookup key for one predicate's probe."""
+        scale = float(1 << self.bits)
+        q = np.round(np.asarray(emb, np.float64) * scale).astype(np.int32)
+        t = np.round(np.atleast_1d(np.asarray(thresholds, np.float64))
+                     * scale).astype(np.int32)
+        return (q.tobytes(), t.tobytes(), int(k))
+
+    def get(self, key: tuple):
+        """(counts, topk) on hit (LRU-refreshed), None on miss."""
+        with self._lock:
+            val = self._od.get(key)
+            if val is None:
+                self.misses += 1
+                return None
+            self._od.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, key: tuple, value: tuple) -> None:
+        with self._lock:
+            if key in self._od:
+                self._od.move_to_end(key)
+            self._od[key] = value
+            while len(self._od) > self.capacity:
+                self._od.popitem(last=False)
+                self.evictions += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._od)
+
+    def stats(self) -> dict:
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "entries": len(self._od),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": self.hits / total if total else 0.0,
+            }
+
+
+@dataclasses.dataclass
+class CoalescerConfig:
+    """Micro-batch window knobs (trade-offs in docs/serving.md)."""
+
+    max_batch: int = 64        # flush as soon as this many predicates pend
+    window_ms: float = 2.0     # ... or this long after the oldest request
+    cache_capacity: int = 1024
+    cache_bits: int = 12       # embedding quantization (near-dup collapse)
+
+
+class _Pending:
+    """One in-flight predicate: all duplicate submitters wait on ``event``."""
+
+    __slots__ = ("key", "emb", "thr", "ts", "event", "value", "error")
+
+    def __init__(self, key, emb, thr):
+        self.key = key
+        self.emb = emb
+        self.thr = thr
+        self.ts = time.monotonic()
+        self.event = threading.Event()
+        self.value = None
+        self.error = None
+
+
+class PredicateCoalescer:
+    """Micro-batch window over a SemanticHistogram's batched probe.
+
+    ``selectivity_batch(embs, thrs)`` has the same signature as
+    ``SemanticHistogram.selectivity_batch`` so estimators (and
+    ``plan_query(..., coalescer=...)``) can route probes through it
+    unchanged. Counters::
+
+        requests           predicates submitted (incl. cache hits)
+        probes_fired       batched kernel launches
+        predicates_probed  predicates actually scored by a kernel launch
+        coalesced_dups     requests that piggybacked an in-flight duplicate
+
+    Coalescing wins show up as ``probes_fired`` << ``requests`` and
+    cache + dedup wins as ``predicates_probed`` < ``requests``.
+    """
+
+    def __init__(self, hist, config: CoalescerConfig | None = None, *,
+                 cache: PredicateCache | None = None):
+        self.hist = hist
+        self.cfg = config or CoalescerConfig()
+        self.cache = cache if cache is not None else PredicateCache(
+            self.cfg.cache_capacity, bits=self.cfg.cache_bits)
+        self._cv = threading.Condition()
+        self._pending: list[_Pending] = []
+        self._inflight: dict[tuple, _Pending] = {}
+        self._stop = False
+        self.requests = 0
+        self.probes_fired = 0
+        self.predicates_probed = 0
+        self.coalesced_dups = 0
+        self._flusher = threading.Thread(
+            target=self._run, name="predicate-coalescer", daemon=True)
+        self._flusher.start()
+
+    # ------------------------------------------------------------- submit
+
+    def selectivity(self, emb: np.ndarray, threshold: float) -> float:
+        """Single-predicate convenience wrapper around the batch path."""
+        return float(self.selectivity_batch(
+            np.asarray(emb)[None, :], np.asarray([threshold]))[0])
+
+    def selectivity_batch(self, preds: np.ndarray,
+                          thresholds: np.ndarray) -> np.ndarray:
+        """Selectivity for B (predicate, threshold) pairs.
+
+        Cache hits return without blocking; misses enqueue into the current
+        micro-batch window and block until the flusher's shared probe lands.
+        Drop-in for ``SemanticHistogram.selectivity_batch``.
+        """
+        preds = np.asarray(preds, np.float32)
+        thrs = np.asarray(thresholds, np.float32).reshape(-1)
+        if preds.ndim != 2 or preds.shape[0] != thrs.shape[0]:
+            raise ValueError(
+                f"preds {preds.shape} vs thresholds {thrs.shape}")
+        out = np.empty(len(preds), np.float64)
+        waits: list[tuple[int, _Pending]] = []
+        for j in range(len(preds)):
+            key = self.cache.key(preds[j], [thrs[j]], 1)
+            with self._cv:
+                # cache lookup under the lock: a flush fills the cache
+                # *before* retiring its _inflight entries (which needs this
+                # lock), so either the get hits or the entry is still
+                # in-flight — a just-flushed duplicate can never slip
+                # through and trigger a redundant store scan
+                self.requests += 1
+                cached = self.cache.get(key)
+                if cached is not None:
+                    out[j] = int(cached[0][0]) / self.hist.n
+                    continue
+                entry = self._inflight.get(key)
+                if entry is not None:
+                    self.coalesced_dups += 1
+                else:
+                    entry = _Pending(key, preds[j], thrs[j])
+                    self._inflight[key] = entry
+                    self._pending.append(entry)
+                    self._cv.notify_all()
+            waits.append((j, entry))
+        for j, entry in waits:
+            if not entry.event.wait(timeout=60.0):
+                raise RuntimeError("coalescer flush timed out (60s)")
+            if entry.error is not None:
+                raise entry.error
+            out[j] = int(entry.value[0][0]) / self.hist.n
+        return out
+
+    # -------------------------------------------------------------- flush
+
+    def _take_batch(self) -> list[_Pending] | None:
+        """Block until a window closes (size or timeout); pop its batch."""
+        window_s = self.cfg.window_ms / 1e3
+        with self._cv:
+            while not self._pending:
+                if self._stop:
+                    return None
+                self._cv.wait()
+            while (len(self._pending) < self.cfg.max_batch
+                   and not self._stop):
+                # recomputed each pass: flush_now() backdates timestamps
+                deadline = self._pending[0].ts + window_s
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cv.wait(timeout=remaining)
+            batch = self._pending[:self.cfg.max_batch]
+            del self._pending[:len(batch)]
+            return batch
+
+    def _flush(self, batch: list[_Pending]) -> None:
+        """One batched probe for the window; scatter + cache-fill.
+
+        The batch is padded (repeating the last row) up to a power-of-two
+        bucket <= max_batch so the jitted probe sees few distinct shapes.
+        Entries stay in ``_inflight`` until their cache fill, so duplicate
+        submitters racing this flush piggyback instead of re-probing.
+        """
+        b = len(batch)
+        bucket = 1 << (b - 1).bit_length()
+        bucket = min(max(bucket, 1), max(self.cfg.max_batch, b))
+        embs = np.stack([p.emb for p in batch]
+                        + [batch[-1].emb] * (bucket - b))
+        thrs = np.asarray([p.thr for p in batch]
+                          + [batch[-1].thr] * (bucket - b), np.float32)
+        try:
+            counts, topk = self.hist.probe_batch(embs, thrs, k=1,
+                                                 use_cache=False)
+            counts = np.asarray(counts)
+            topk = np.asarray(topk)
+            err = None
+        except Exception as e:  # propagate to every waiter, don't wedge
+            err = e
+        with self._cv:
+            self.probes_fired += 1
+            self.predicates_probed += b
+        for i, p in enumerate(batch):
+            if err is None:
+                p.value = (counts[i].copy(), topk[i].copy())
+                self.cache.put(p.key, p.value)
+            else:
+                p.error = err
+            with self._cv:
+                self._inflight.pop(p.key, None)
+            p.event.set()
+
+    def _run(self) -> None:
+        while True:
+            batch = self._take_batch()
+            if batch is None:
+                return
+            self._flush(batch)
+
+    # ---------------------------------------------------------- lifecycle
+
+    def flush_now(self) -> None:
+        """Close the current window immediately (tests / drain)."""
+        with self._cv:
+            for p in self._pending:
+                p.ts = -float("inf")
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        """Drain pending work and stop the flusher thread."""
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._flusher.join(timeout=60.0)
+        with self._cv:
+            leftovers = self._pending[:]
+            del self._pending[:]
+        if leftovers:
+            self._flush(leftovers)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def stats(self) -> dict:
+        with self._cv:
+            d = {
+                "requests": self.requests,
+                "probes_fired": self.probes_fired,
+                "predicates_probed": self.predicates_probed,
+                "coalesced_dups": self.coalesced_dups,
+            }
+        d["cache"] = self.cache.stats()
+        return d

@@ -1,6 +1,7 @@
 """Serving driver: the paper's semantic-filter execution engine end-to-end.
 
 ``python -m repro.launch.serve --dataset wildlife --filters 3 --queries 5``
+``python -m repro.launch.serve --concurrency 8``
 
 Builds the full Semantic-Histogram stack (embedding store, specificity model,
 compressed-KV-cache batching on the reduced LLaVA config), then plans and
@@ -12,12 +13,24 @@ of a query to ``estimate_batch`` (one batched histogram probe per plan for
 specificity/kv-batch/ensemble), so serving many-filter queries scans the
 store once per query rather than once per filter. ``--impl pallas`` routes
 probes through the fused cosine_topk kernels (interpret mode on CPU).
+
+``--concurrency N`` switches to the cross-query serving path: N worker
+threads plan queries concurrently through one shared
+``repro.launch.coalescer.PredicateCoalescer`` — predicates from different
+in-flight queries merge into a single micro-batched (N, d) x (d, B) probe
+(``--window-ms`` / ``--max-batch`` tune the window), and hot predicates
+resolve from the LRU predicate cache (``--cache-size`` / ``--cache-bits``)
+without any store scan. The run ends with coalescing + cache counters:
+probes fired vs predicates requested, dedup piggybacks, hit/miss/eviction.
+``--passes`` replays the workload to model hot repeated predicates
+(pass 2+ should be nearly all cache hits). Tuning guide: docs/serving.md.
 """
 
 from __future__ import annotations
 
 import argparse
 import time
+from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import numpy as np
@@ -35,6 +48,11 @@ from repro.core.optimizer import execute_cascade, generate_queries, plan_query
 from repro.core.specificity import train_specificity
 from repro.core.synthetic import make_corpus, specificity_dataset
 from repro.kernels.kmeans.ops import medoid_sample
+from repro.launch.coalescer import (
+    CoalescerConfig,
+    PredicateCache,
+    PredicateCoalescer,
+)
 
 
 def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
@@ -60,7 +78,79 @@ def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
     }
 
 
-def main() -> None:
+def serve_sequential(corpus, estimators, queries, *, seed: int) -> None:
+    """Original per-query driver: every estimator, one query at a time."""
+    oracle = estimators["oracle"]
+    for qi, q in enumerate(queries):
+        base = execute_cascade(corpus, plan_query(q, oracle), seed=seed)
+        print(f"\nquery {qi}: filters={q}  oracle calls={base.vlm_calls}")
+        for name, est in estimators.items():
+            if name == "oracle":
+                continue
+            res = execute_cascade(corpus, plan_query(q, est, seed=seed),
+                                  seed=seed)
+            overhead = res.total_s - base.total_s
+            print(f"  {name:14s} calls={res.vlm_calls:5d} "
+                  f"est_lat={res.plan.est_latency_s*1e3:8.1f}ms "
+                  f"overhead={overhead:+8.2f}s  |result|={len(res.result_ids)}")
+
+
+def serve_concurrent(corpus, estimators, queries, *, est_name: str,
+                     seed: int, concurrency: int, window_ms: float,
+                     max_batch: int, cache_size: int, cache_bits: int,
+                     passes: int) -> dict:
+    """Cross-query serving: N planner threads share one coalescer + cache.
+
+    Returns the coalescer stats dict (the smoke harness asserts on it)."""
+    est = estimators[est_name]
+    cache = PredicateCache(cache_size, bits=cache_bits)
+    workload = [(p, qi, q) for p in range(passes)
+                for qi, q in enumerate(queries)]
+    n_preds = sum(len(q) for _, _, q in workload)
+    print(f"\nconcurrent serve: {len(workload)} queries "
+          f"({len(queries)} x {passes} passes), {n_preds} predicate "
+          f"requests, estimator={est_name}, threads={concurrency}, "
+          f"window={window_ms}ms, max_batch={max_batch}, "
+          f"cache={cache_size}x{cache_bits}bit")
+
+    with PredicateCoalescer(
+            est.hist,
+            CoalescerConfig(max_batch=max_batch, window_ms=window_ms),
+            cache=cache) as coal:
+
+        def run_one(job):
+            _, qi, q = job
+            plan = plan_query(q, est, seed=seed, coalescer=coal)
+            return qi, execute_cascade(corpus, plan, seed=seed)
+
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=concurrency) as pool:
+            results = list(pool.map(run_one, workload))
+        wall_s = time.perf_counter() - t0
+        stats = coal.stats()
+
+    oracle = estimators["oracle"]
+    for qi, res in results[:len(queries)]:
+        base = execute_cascade(corpus, plan_query(queries[qi], oracle),
+                               seed=seed)
+        print(f"  query {qi}: calls={res.vlm_calls:5d} "
+              f"(oracle {base.vlm_calls}) |result|={len(res.result_ids)}")
+
+    c = stats["cache"]
+    amort = stats["requests"] / max(1, stats["probes_fired"])
+    print(f"\ncoalescing: {stats['probes_fired']} probes for "
+          f"{stats['requests']} predicate requests across "
+          f"{len(workload)} queries ({amort:.1f} preds amortized/probe, "
+          f"{stats['coalesced_dups']} in-flight dups piggybacked)")
+    print(f"cache: hit_rate={c['hit_rate']:.0%} ({c['hits']} hits / "
+          f"{c['misses']} misses), {c['entries']}/{c['capacity']} entries, "
+          f"{c['evictions']} evictions")
+    print(f"wall: {wall_s:.2f}s for {len(workload)} queries "
+          f"({len(workload)/wall_s:.1f} qps)")
+    return stats
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="wildlife",
                     choices=["wildlife", "artwork", "ecommerce"])
@@ -70,7 +160,26 @@ def main() -> None:
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"],
                     help="histogram probe backend (pallas = fused kernel, "
                          "interpret mode on CPU)")
-    args = ap.parse_args()
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help=">1: plan queries from this many threads through "
+                         "a shared predicate coalescer + LRU cache")
+    ap.add_argument("--estimator", default="ensemble",
+                    choices=["specificity", "kvbatch", "ensemble"],
+                    help="estimator for the concurrent path")
+    ap.add_argument("--window-ms", type=float, default=4.0,
+                    help="micro-batch window: max wait before a partial "
+                         "batch flushes")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="micro-batch window: flush at this many pending "
+                         "predicates")
+    ap.add_argument("--cache-size", type=int, default=1024,
+                    help="LRU predicate-cache capacity (entries)")
+    ap.add_argument("--cache-bits", type=int, default=12,
+                    help="embedding quantization bits for cache keys")
+    ap.add_argument("--passes", type=int, default=2,
+                    help="replay the query workload this many times "
+                         "(models hot repeated predicates)")
+    args = ap.parse_args(argv)
 
     print(f"building semantic-histogram stack for '{args.dataset}' "
           f"(probe impl={args.impl})...")
@@ -78,20 +187,15 @@ def main() -> None:
                                      impl=args.impl)
     queries = generate_queries(corpus, n_queries=args.queries,
                                n_filters=args.filters, seed=args.seed)
-    oracle = estimators["oracle"]
-    for qi, q in enumerate(queries):
-        base = execute_cascade(corpus, plan_query(q, oracle), seed=args.seed)
-        print(f"\nquery {qi}: filters={q}  oracle calls={base.vlm_calls}")
-        for name, est in estimators.items():
-            if name == "oracle":
-                continue
-            t0 = time.perf_counter()
-            res = execute_cascade(corpus, plan_query(q, est, seed=args.seed),
-                                  seed=args.seed)
-            overhead = res.total_s - base.total_s
-            print(f"  {name:14s} calls={res.vlm_calls:5d} "
-                  f"est_lat={res.plan.est_latency_s*1e3:8.1f}ms "
-                  f"overhead={overhead:+8.2f}s  |result|={len(res.result_ids)}")
+    if args.concurrency > 1:
+        serve_concurrent(
+            corpus, estimators, queries, est_name=args.estimator,
+            seed=args.seed, concurrency=args.concurrency,
+            window_ms=args.window_ms, max_batch=args.max_batch,
+            cache_size=args.cache_size, cache_bits=args.cache_bits,
+            passes=args.passes)
+    else:
+        serve_sequential(corpus, estimators, queries, seed=args.seed)
 
 
 if __name__ == "__main__":
