@@ -7,7 +7,14 @@ CSV: kernel,config,us_per_call,derived
 
 from __future__ import annotations
 
+import sys
 import time
+from pathlib import Path
+
+# self-bootstrapping: `python benchmarks/bench_kernels.py` needs no PYTHONPATH
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path[:0] = [p for p in (str(_ROOT), str(_ROOT / "src"))
+                if p not in sys.path]
 
 import jax
 import jax.numpy as jnp

@@ -6,16 +6,26 @@ B predicates vs B matvecs, reported as amortized µs/predicate and effective
 per-predicate scan bandwidth at B ∈ {1, 8, 32, 128} — (c) the serving
 layer: cross-query coalescing (one probe for G concurrent queries' filters
 vs one probe per query) and the LRU predicate cache on a hot workload
-(repeated predicates skip the scan entirely), and (d) the sharded-probe
-collective cost model: counts/top-k combine is O(B*k), so probe latency
-stays flat as the store scales across chips (DESIGN.md §2).
+(repeated predicates skip the scan entirely), (d) the cluster-pruned index:
+scan fraction + speedup vs selectivity on a clustered store (exact counts,
+sublinear rows at low selectivity), and (e) the sharded-probe collective
+cost model: counts/top-k combine is O(B*k), so probe latency stays flat as
+the store scales across chips (DESIGN.md §2).
 
 CSV: bench,config,us_per_call,derived
 """
 
 from __future__ import annotations
 
+import sys
 import time
+from pathlib import Path
+
+# self-bootstrapping: `python benchmarks/bench_probe_scaling.py` works
+# without the PYTHONPATH=src:. incantation
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path[:0] = [p for p in (str(_ROOT), str(_ROOT / "src"))
+                if p not in sys.path]
 
 import jax
 import jax.numpy as jnp
@@ -164,6 +174,60 @@ def main() -> list[str]:
         rows.append(csv_row("probe_cached_cpu",
                             f"N={n},req={uniq * reps},uniq={uniq},{label}",
                             f"{us:.0f}", f"us/request{hr}"))
+
+    # cluster-pruned index: scan fraction + speedup vs selectivity on a
+    # *clustered* store (image embeddings clump by concept; isotropic
+    # gaussians would defeat bound-based pruning). Counts stay exactly equal
+    # to the full scan — the pruned rows report how few rows that costs.
+    from repro.core.histogram import SemanticHistogram
+    from repro.core.synthetic import clustered_unit_vectors
+    from repro.index import build_clustered_store
+
+    # K ~ sqrt(N): oversegmentation keeps per-cluster radii tight even when
+    # Lloyd's lands in a merged-centers local optimum (docs/index.md)
+    n_idx, d_idx, k_idx = 100_000, 256, 256
+    xc, _ = clustered_unit_vectors(n_idx, d_idx, n_centers=64, spread=0.25,
+                                   seed=0)
+    t0 = time.perf_counter()
+    cs = build_clustered_store(xc, k_idx, iters=6, seed=0, impl="xla")
+    build_s = time.perf_counter() - t0
+    rows.append(csv_row("probe_index_build", f"N={n_idx},K={k_idx}",
+                        f"{build_s*1e6:.0f}", "kmeans+reorder+radii"))
+    hist_full = SemanticHistogram(jnp.asarray(xc))
+    hist_idx = SemanticHistogram(jnp.asarray(xc), index=cs)
+    pred_idx = xc[17]
+    d_sorted = np.sort(1.0 - xc @ pred_idx)
+    for sel in (0.001, 0.01, 0.1, 0.5):
+        kth = max(1, int(sel * n_idx))
+        thr = float(0.5 * (d_sorted[kth - 1] + d_sorted[kth]))
+        c_full = hist_full.count_within(pred_idx, thr)   # warm + reference
+        cs.reset_stats()
+        c_prn = hist_idx.count_within(pred_idx, thr)     # warm pruned shapes
+        assert c_full == c_prn, (sel, c_full, c_prn)
+        iters = 3
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            hist_full.count_within(pred_idx, thr)
+        full_us = (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            hist_idx.count_within(pred_idx, thr)
+        prn_us = (time.perf_counter() - t0) / iters * 1e6
+        frac = cs.stats()["scan_fraction"]
+        rows.append(csv_row(
+            "probe_pruned_cpu", f"N={n_idx},K={k_idx},sel={sel:.1%}",
+            f"{prn_us:.0f}",
+            f"scan_frac={frac:.1%},full={full_us:.0f}us,"
+            f"speedup={full_us/prn_us:.1f}x,count_diff={c_full-c_prn}"))
+
+    # pruned threshold calibration: bound-ordered early-terminated kth
+    cs.reset_stats()
+    kth_full = hist_full.kth_smallest_distance(pred_idx, 128)
+    kth_prn = hist_idx.kth_smallest_distance(pred_idx, 128)
+    rows.append(csv_row(
+        "probe_pruned_kth", f"N={n_idx},K={k_idx},k=128", "-",
+        f"scan_frac={cs.stats()['scan_fraction']:.1%},"
+        f"err={abs(kth_full-kth_prn):.1e}"))
 
     # v5e analytic: per-chip probe time for a pod-scale store
     for total in (1e8, 1e9):

@@ -11,7 +11,13 @@ from __future__ import annotations
 
 import glob
 import json
+import sys
 from pathlib import Path
+
+# self-bootstrapping: `python benchmarks/bench_roofline.py` needs no PYTHONPATH
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path[:0] = [p for p in (str(_ROOT), str(_ROOT / "src"))
+                if p not in sys.path]
 
 from benchmarks.common import csv_row
 

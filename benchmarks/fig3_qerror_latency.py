@@ -10,7 +10,15 @@ CSV: dataset,method,config,median_q,p5_q,p95_q,lat_s,vlm_calls
 
 from __future__ import annotations
 
+import sys
 import time
+from pathlib import Path
+
+# self-bootstrapping: `python benchmarks/fig3_qerror_latency.py` needs no
+# PYTHONPATH
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path[:0] = [p for p in (str(_ROOT), str(_ROOT / "src"))
+                if p not in sys.path]
 
 import numpy as np
 

@@ -10,6 +10,15 @@ CSV: dataset,n_filters,method,mean_overhead_s,ci95_s,mean_extra_calls
 
 from __future__ import annotations
 
+import sys
+from pathlib import Path
+
+# self-bootstrapping: `python benchmarks/fig4_end_to_end.py` needs no
+# PYTHONPATH
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path[:0] = [p for p in (str(_ROOT), str(_ROOT / "src"))
+                if p not in sys.path]
+
 import numpy as np
 
 from benchmarks.common import DATASETS, csv_row, dataset_stack

@@ -1,5 +1,6 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark aggregator: ``PYTHONPATH=src python -m benchmarks.run [--fast]``.
+"""Benchmark aggregator: ``python benchmarks/run.py [--fast]`` (or
+``python -m benchmarks.run`` from the repo root — both self-bootstrap).
 
 Sections (one per paper table/figure + the roofline deliverable):
   fig3      — Q-error vs latency (paper Fig. 3) incl. the KV compression sweep
@@ -14,6 +15,12 @@ from __future__ import annotations
 import argparse
 import sys
 import time
+from pathlib import Path
+
+# self-bootstrapping: running this file directly needs no PYTHONPATH
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path[:0] = [p for p in (str(_ROOT), str(_ROOT / "src"))
+                if p not in sys.path]
 
 
 def _section(name: str, rows: list[str]) -> None:

@@ -7,7 +7,10 @@ Scans README.md and docs/*.md for shell commands (``python -m pkg.mod``,
   * a referenced script path doesn't exist,
   * a ``--flag`` passed to a ``python -m`` command isn't declared in that
     module's source (argparse drift),
-  * README's pytest line disagrees with ROADMAP.md's tier-1 command.
+  * README's pytest line disagrees with ROADMAP.md's tier-1 command,
+  * a load-bearing serving flag (``REQUIRED_FLAGS``) is no longer shown in
+    any documented command — removing ``--concurrency`` or
+    ``--index-clusters`` from the docs is drift in the other direction.
 
 Run directly (``python scripts/check_docs.py``) or via
 ``python scripts/smoke_all.py --check-docs``. Exit code 1 on any drift.
@@ -27,6 +30,12 @@ _CMD = re.compile(
     r"((?:\s+--?[\w-]+(?:[= ][\w.-]+)?)*)")
 _PYTEST = re.compile(r"python -m pytest[^\n`]*")
 
+# module -> flags the docs must keep showing in at least one command (the
+# serving entrypoints users copy-paste; silently dropping one is drift too)
+REQUIRED_FLAGS = {
+    "repro.launch.serve": ("--concurrency", "--index-clusters"),
+}
+
 
 def _module_file(mod: str) -> Path | None:
     p = REPO / "src" / Path(*mod.split("."))
@@ -37,7 +46,8 @@ def _module_file(mod: str) -> Path | None:
     return None
 
 
-def _check_file(path: Path, errors: list[str]) -> None:
+def _check_file(path: Path, errors: list[str],
+                seen_flags: dict[str, set] | None = None) -> None:
     text = path.read_text()
     rel = path.relative_to(REPO)
     for m in _CMD.finditer(text):
@@ -56,6 +66,8 @@ def _check_file(path: Path, errors: list[str]) -> None:
                 if f'"{flag}"' not in source and f"'{flag}'" not in source:
                     errors.append(f"{rel}: `{flag}` not declared in {mod} "
                                   f"({src.relative_to(REPO)})")
+                elif seen_flags is not None:
+                    seen_flags.setdefault(mod, set()).add(flag)
         else:
             if not (REPO / target).exists():
                 errors.append(f"{rel}: script `{target}` does not exist")
@@ -67,8 +79,16 @@ def main() -> int:
     if not readme.exists():
         print("check_docs: README.md missing", file=sys.stderr)
         return 1
+    seen_flags: dict[str, set] = {}
     for path in [readme, *sorted((REPO / "docs").glob("*.md"))]:
-        _check_file(path, errors)
+        _check_file(path, errors, seen_flags)
+
+    # load-bearing flags must stay documented somewhere
+    for mod, flags in REQUIRED_FLAGS.items():
+        for flag in flags:
+            if flag not in seen_flags.get(mod, set()):
+                errors.append(f"README.md/docs: no documented `python -m "
+                              f"{mod}` command shows `{flag}`")
 
     # tier-1 command in README must match ROADMAP's verbatim
     roadmap = (REPO / "ROADMAP.md").read_text()

@@ -1,8 +1,9 @@
 """Dev loop: run a reduced forward+train+prefill+decode for every arch on CPU,
 plus a batched semantic-histogram probe smoke (pallas-interpret vs xla vs
-per-predicate loop) and a coalescer + predicate-cache smoke (cross-query
-micro-batching, LRU hits, B-tiled kernel parity) so hot-path regressions
-surface here first. ``--check-docs`` additionally runs
+per-predicate loop), a coalescer + predicate-cache smoke (cross-query
+micro-batching, LRU hits, B-tiled kernel parity), and a cluster-pruned
+index smoke (build + pruned-vs-full parity + sublinear scan fraction) so
+hot-path regressions surface here first. ``--check-docs`` additionally runs
 scripts/check_docs.py (README/docs drift vs actual entrypoints)."""
 
 import sys
@@ -148,6 +149,42 @@ def run_coalescer_smoke():
           f"hit_rate={st['cache']['hit_rate']:.0%}, tiled==untiled B=96")
 
 
+def run_index_smoke():
+    """Cluster-pruned index: build over a clustered store, pruned counts /
+    top-k / kth exactly match the full scan on both impls, and a
+    low-selectivity probe touches a fraction of the rows."""
+    from repro.core.histogram import SemanticHistogram
+    from repro.core.synthetic import clustered_unit_vectors
+    from repro.index import build_clustered_store
+
+    x, _ = clustered_unit_vectors(800, 64, n_centers=8, spread=0.2, seed=2)
+    cs = build_clustered_store(x, 16, iters=5, seed=0)
+    full = SemanticHistogram(jnp.asarray(x))
+    d = np.sort(np.asarray(full.distances(x[3])))
+    thr_low = float(0.5 * (d[7] + d[8]))            # ~1% selectivity
+    preds = x[:4]
+    thrs = np.asarray([thr_low, 0.5, 1.0, 1.9], np.float32)
+    for impl in ("xla", "pallas"):
+        # parity is bitwise *per impl path* — build the full-scan reference
+        # with the same impl (cross-impl distances can differ in the ulp)
+        ref = SemanticHistogram(jnp.asarray(x), impl=impl)
+        cf, tf = ref.probe_batch(preds, thrs, k=6)
+        hist = SemanticHistogram(jnp.asarray(x), impl=impl, index=cs)
+        cp, tp = hist.probe_batch(preds, thrs, k=6)
+        assert (np.asarray(cf) == np.asarray(cp)).all(), impl
+        assert np.array_equal(np.asarray(tf), np.asarray(tp)), impl
+        assert hist.kth_smallest_distance(x[3], 9) == \
+            ref.kth_smallest_distance(x[3], 9), impl
+    cs.reset_stats()
+    hist = SemanticHistogram(jnp.asarray(x), index=cs)
+    assert hist.count_within(x[3], thr_low) == full.count_within(x[3],
+                                                                 thr_low)
+    frac = cs.stats()["scan_fraction"]
+    assert frac < 0.5, frac
+    print(f"OK  cluster_index            pruned==full both impls, "
+          f"low-sel scan_fraction={frac:.0%}")
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     fails = []
@@ -157,7 +194,7 @@ if __name__ == "__main__":
         if check_docs_main() != 0:
             fails.append("check_docs")
     archs = argv or list(ASSIGNED)
-    for smoke in (run_probe_smoke, run_coalescer_smoke):
+    for smoke in (run_probe_smoke, run_coalescer_smoke, run_index_smoke):
         try:
             smoke()
         except Exception:

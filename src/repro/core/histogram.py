@@ -20,6 +20,18 @@ container via the jnp reference. Distributed: each shard counts/top-ks
 locally, then one tiny ``psum``/gather combines — the probe's collective
 traffic is O(B*k), independent of N.
 
+Cluster-pruned index (PR 3): construct with ``index=`` a
+``repro.index.ClusteredStore`` built from the *same* embeddings and every
+count/top-k probe routes through the pruned path — clusters whose exact
+distance bounds put them entirely inside (or outside) the threshold are
+counted (or skipped) without touching a row, and only boundary clusters are
+scanned, by one masked-kernel launch per probe. Counts and top-k distances
+stay exactly equal to the full scan (the bounds are conservative by
+``index.eps``); at low selectivity the scan fraction collapses — see
+``index.stats()``. ``kth_smallest_distance`` switches to bound-ordered
+cluster scanning with early termination (§3.2 threshold calibration without
+the full pass).
+
 Serving layer (PR 2): ``probe_batch`` is cache-aware — construct with
 ``cache=PredicateCache(...)`` (see ``repro.launch.coalescer``; any object
 with the same ``key``/``get``/``put`` surface works, the histogram only
@@ -88,13 +100,40 @@ class SemanticHistogram:
     mesh: object | None = None   # sharded probe when set
     impl: str = "xla"            # xla | pallas (interpret on CPU)
     cache: object | None = None  # PredicateCache-like (duck-typed)
+    index: object | None = None  # ClusteredStore: pruned (still exact) probes
 
     def __post_init__(self):
         self.n = self.embeddings.shape[0]
+        if self.index is not None:
+            if self.index.n != self.n:
+                raise ValueError(
+                    f"index holds {self.index.n} rows, store has {self.n} — "
+                    f"build the ClusteredStore from the same embeddings")
+            # spot-check content too: a stale index over same-shaped but
+            # different embeddings would silently break exactness
+            rows = [0, self.n // 2, self.n - 1] if self.n else []
+            for i in rows:
+                if not np.array_equal(
+                        np.asarray(self.index.embeddings[i], np.float32),
+                        np.asarray(self.embeddings[self.index.perm[i]],
+                                   np.float32)):
+                    raise ValueError(
+                        "index embeddings disagree with the store — build "
+                        "the ClusteredStore from the same embeddings")
 
     # -------------------- core fused probe --------------------
 
-    def _probe(self, pred: jax.Array, thresholds: jax.Array, *, k: int):
+    def _probe(self, pred: jax.Array, thresholds: jax.Array, *, k: int,
+               need_topk: bool = True):
+        if self.index is not None:
+            # scalar_kernel: match the scalar full-scan kernel bitwise;
+            # need_topk=False (count-only callers) lets a fully-resolved
+            # probe skip the kernel launch entirely
+            counts, topk, _ = self.index.probe_pruned(
+                np.asarray(pred, np.float32)[None],
+                np.asarray(thresholds, np.float32)[None], k=k,
+                impl=self.impl, scalar_kernel=True, need_topk=need_topk)
+            return jnp.asarray(counts[0]), jnp.asarray(topk[0])
         if self.impl == "pallas":
             from repro.kernels.cosine_topk import ops as ct
 
@@ -102,7 +141,13 @@ class SemanticHistogram:
         return _probe_xla(self.embeddings, pred, thresholds, k=k)
 
     def _probe_batched(self, preds: jax.Array, thresholds: jax.Array, *,
-                       k: int):
+                       k: int, need_topk: bool = True):
+        if self.index is not None:
+            counts, topk, _ = self.index.probe_pruned(
+                np.asarray(preds, np.float32),
+                np.asarray(thresholds, np.float32), k=k, impl=self.impl,
+                need_topk=need_topk)
+            return jnp.asarray(counts), jnp.asarray(topk)
         if self.impl == "pallas":
             from repro.kernels.cosine_topk import ops as ct
 
@@ -114,7 +159,8 @@ class SemanticHistogram:
 
     def count_within(self, pred: np.ndarray, threshold: float) -> int:
         counts, _ = self._probe(
-            jnp.asarray(pred), jnp.asarray([threshold], f32), k=1
+            jnp.asarray(pred), jnp.asarray([threshold], f32), k=1,
+            need_topk=False,
         )
         return int(counts[0])
 
@@ -123,6 +169,10 @@ class SemanticHistogram:
 
     def kth_smallest_distance(self, pred: np.ndarray, k: int) -> float:
         k = max(1, min(k, self.n))
+        if self.index is not None:
+            # bound-ordered cluster scan, early-terminated — same value as
+            # the full pass, a fraction of the rows
+            return self.index.kth_smallest(pred, int(k), impl=self.impl)
         _, smallest = self._probe(
             jnp.asarray(pred), jnp.zeros((1,), f32), k=int(k)
         )
@@ -132,6 +182,7 @@ class SemanticHistogram:
 
     def probe_batch(self, preds: np.ndarray, thresholds: np.ndarray, *,
                     k: int = 1, use_cache: bool = True,
+                    need_topk: bool = True,
                     ) -> tuple[jax.Array, jax.Array]:
         """One fused pass for B predicates. preds (B, d); thresholds (B,)
         or (B, T). Returns (counts (B, T) int32, top-k distances (B, k)).
@@ -140,14 +191,19 @@ class SemanticHistogram:
         looked up by quantized (embedding, thresholds, k) key first; only
         the miss subset hits the kernel, and its exact outputs are cached.
         The coalescer passes ``use_cache=False`` — it consults the same
-        cache at submit time, so flushes must not double-count lookups."""
+        cache at submit time, so flushes must not double-count lookups.
+
+        ``need_topk=False`` (count-only callers that discard the top-k)
+        lets a pruned-index probe skip its top-k cluster cover — the
+        returned top-k is then unspecified. Ignored on the cached path:
+        cached values must stay exact for every future key-equal caller."""
         preds = jnp.asarray(preds)
         thr = jnp.asarray(thresholds, f32)
         if thr.ndim == 1:
             thr = thr[:, None]
         k = max(1, min(int(k), self.n))
         if self.cache is None or not use_cache:
-            return self._probe_batched(preds, thr, k=k)
+            return self._probe_batched(preds, thr, k=k, need_topk=need_topk)
         return self._probe_batched_cached(np.asarray(preds, np.float32),
                                           np.asarray(thr), k=k)
 
@@ -182,7 +238,7 @@ class SemanticHistogram:
                           thresholds: np.ndarray) -> np.ndarray:
         """Selectivity of B (predicate, threshold) pairs via one store pass —
         one device round-trip for the whole batch."""
-        counts, _ = self.probe_batch(preds, thresholds, k=1)
+        counts, _ = self.probe_batch(preds, thresholds, k=1, need_topk=False)
         return np.asarray(counts[:, 0]) / self.n
 
     def kth_smallest_batch(self, preds: np.ndarray, k: int) -> np.ndarray:

@@ -185,6 +185,32 @@ def make_corpus(
                   vlm_error=p["vlm_error"], rng=rng)
 
 
+# ---------------- clustered stores (index benchmarks / tests) ----------------
+
+
+def clustered_unit_vectors(
+    n: int, dim: int, *, n_centers: int = 16, spread: float = 0.25,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """(n, dim) unit vectors in tight vMF-ish clumps + (n,) center labels.
+
+    The workload the cluster-pruned index (`repro.index`) is built for:
+    real image-embedding stores are strongly clustered (images of the same
+    concept land together), unlike isotropic Gaussians whose k-means radii
+    approach the sphere diameter and defeat any bound-based pruning.
+    ``spread`` is the per-dimension noise scale relative to unit signal
+    (same convention as ``make_corpus``'s ``img_noise``).
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.standard_normal((n_centers, dim))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    labels = rng.integers(n_centers, size=n)
+    x = centers[labels] + (spread / np.sqrt(dim)) * rng.standard_normal(
+        (n, dim))
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return x.astype(np.float32), labels
+
+
 # ---------------- specificity-model training data (paper §3.1) ----------------
 
 

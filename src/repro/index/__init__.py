@@ -1,0 +1,5 @@
+"""Store indexes that make probes sublinear without giving up exactness."""
+
+from repro.index.clustered import ClusteredStore, build_clustered_store
+
+__all__ = ["ClusteredStore", "build_clustered_store"]

@@ -1,0 +1,394 @@
+"""Cluster-pruned probe index: sublinear *exact* selectivity (paper §2 + §3.2).
+
+Every probe so far streamed the full (N, d) store, even when the implicit
+range query — cosine distance to the predicate under a threshold — matches a
+handful of images. A semantic filter is a range query on the embedding
+sphere, so an IVF-style centroid partition gives *exact* per-cluster count
+bounds and lets a probe skip almost all of a low-selectivity store:
+
+  partition   k-means (``repro.kernels.kmeans``) splits the store into K
+              clusters; the store is **reordered cluster-contiguous** so a
+              cluster is one slice, with ``offsets`` (K+1,), the centroids,
+              and per-cluster radii ``r_c = max ||x - mu_c||``.
+
+  bounds      for predicate p, the kernel's distance is 1 - p.x. Writing
+              x = mu_c + (x - mu_c) and applying Cauchy-Schwarz:
+
+                  dist(p, x) in [d_c - ||p|| r_c,  d_c + ||p|| r_c],
+                  d_c = 1 - p.mu_c
+
+              For unit p on the unit sphere this is exactly the triangle
+              inequality on Euclidean caps (||p-x||^2 = 2 dist); the inner-
+              product form stays exact for *any* p and needs no sqrt.
+
+  classify    against threshold tau, each cluster is
+                all-in    ub_c <= tau - eps   count += size_c, scan nothing
+                all-out   lb_c >  tau + eps   skip
+                boundary  otherwise           scan (the only rows touched)
+              eps (default 1e-4) absorbs the gap between the f64 bound
+              arithmetic here and the kernel's f32 distances, so pruned
+              counts are **exactly** the full-scan counts — never estimates.
+
+  scan        boundary segments are gathered into one buffer, padded to a
+              power-of-two bucket, and scored by ONE
+              ``cosine_topk.cosine_probe_batch_masked`` launch (the valid
+              prefix length is a runtime SMEM scalar, so the kernel compiles
+              per bucket shape, not per subset). The batched probe takes the
+              union of boundary clusters across all B predicates — still one
+              launch per probe call.
+
+Top-k stays exact too: ``probe_pruned`` over-covers with every cluster whose
+lower bound could reach the k-th smallest distance (tau_k = the k-th
+smallest of the size-weighted upper bounds), and ``kth_smallest`` scans
+clusters in ascending-lower-bound order, terminating as soon as the current
+k-th candidate is provably below every unscanned cluster — the paper's
+threshold-calibration probe (§3.2) without the full pass.
+
+Scan-fraction accounting: every launch records rows scanned vs the N rows a
+full scan would stream; ``stats()`` exposes the cumulative fraction for the
+serve driver and ``bench_probe_scaling``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cosine_topk.ref import cosine_probe_batch_masked_ref
+from repro.kernels.kmeans.ops import kmeans
+
+f32 = jnp.float32
+
+__all__ = ["ClusteredStore", "build_clustered_store"]
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _masked_probe_batch_xla(store, n_valid, preds, thr, *, k: int):
+    """XLA twin of ``cosine_probe_batch_masked`` — the jitted ref oracle.
+
+    Per-row distances are bitwise the rows' full-scan distances (the
+    einsum's dot reduction is row-local), so pruned counts match the full
+    batched scan exactly.
+    """
+    return cosine_probe_batch_masked_ref(store, n_valid, preds, thr, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _masked_probe_xla(store, n_valid, pred, thr, *, k: int):
+    """Scalar twin mirroring ``histogram._local_probe``'s ``nd,d->n``
+    einsum, so a pruned one-predicate scan is bitwise the full scalar scan.
+    Deliberately NOT the batched ref at B=1: the scalar and batched einsum
+    contractions may reduce in different orders on some XLA backends."""
+    sims = jnp.einsum("nd,d->n", store.astype(f32), pred.astype(f32))
+    dists = jnp.where(jnp.arange(store.shape[0]) < n_valid,
+                      1.0 - sims, jnp.inf)
+    counts = (dists[None, :] <= thr[:, None]).sum(axis=1)
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    return counts.astype(jnp.int32), -neg_top
+
+
+@dataclasses.dataclass
+class ClusteredStore:
+    """K-cluster partition of an embedding store with exact probe pruning.
+
+    Attach to a ``SemanticHistogram(index=...)`` to route its probes through
+    the pruned path; or call ``probe_pruned`` / ``kth_smallest`` directly.
+    ``embeddings`` is the *reordered* (cluster-contiguous) store; ``perm``
+    maps reordered row -> original row id. Counts and top-k distances are
+    permutation-invariant, so results are interchangeable with a full scan
+    of the original store.
+    """
+
+    embeddings: jax.Array      # (N, d) f32, cluster-contiguous
+    offsets: np.ndarray        # (K+1,) int64 segment boundaries
+    sizes: np.ndarray          # (K,) int64 cluster sizes
+    centroids: np.ndarray      # (K, d) float64
+    radii: np.ndarray          # (K,) float64, max ||x - mu_c|| per cluster
+    perm: np.ndarray           # (N,) original row ids in cluster order
+    eps: float = 1e-4          # bound slack covering f32-vs-f64 roundoff
+    chunk_rows: int = 4096     # kth_smallest: min rows per incremental scan
+    max_row_norm: float = 1.0  # max ||x|| over the store (global dist floor)
+
+    def __post_init__(self):
+        self.n = int(self.embeddings.shape[0])
+        self.k_clusters = int(self.sizes.shape[0])
+        self._lock = threading.Lock()
+        self._cum = {"probes": 0, "launches": 0, "rows_scanned": 0,
+                     "rows_full_equiv": 0}
+
+    # ------------------------------------------------------------- bounds
+
+    def cluster_bounds(self, preds: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """Exact per-cluster distance bounds (lb, ub), each (B, K) float64.
+
+        dist(p, x) = 1 - p.x in [d_c - ||p|| r_c, d_c + ||p|| r_c] for every
+        x in cluster c (Cauchy-Schwarz on x - mu_c); f64 so eps covers the
+        kernel's f32 rounding with orders of magnitude to spare.
+        """
+        p64 = np.asarray(preds, np.float64)
+        d_mu = 1.0 - p64 @ self.centroids.T                 # (B, K)
+        pnorm = np.linalg.norm(p64, axis=1, keepdims=True)
+        rad = pnorm * self.radii[None, :]
+        # global floor: dist = 1 - p.x >= 1 - ||p|| max||x|| for every row,
+        # so a cluster whose centroid the predicate sits inside (d_c < r_c)
+        # still all-outs thresholds below the reachable minimum
+        return np.maximum(d_mu - rad, 1.0 - pnorm * self.max_row_norm), \
+            d_mu + rad
+
+    def _topk_cover(self, lb: np.ndarray, ub: np.ndarray,
+                    k: int) -> np.ndarray:
+        """(B, K) mask of clusters that could hold a top-k distance.
+
+        tau_k — the k-th smallest of the size-weighted upper bounds — is an
+        upper bound on the true k-th smallest distance, so every cluster
+        with lb <= tau_k + eps must be scanned and no other cluster can
+        contribute to the top-k.
+        """
+        nonempty = self.sizes > 0
+        ne_ids = np.flatnonzero(nonempty)
+        cover = np.zeros(lb.shape, bool)
+        for b in range(lb.shape[0]):
+            order = ne_ids[np.argsort(ub[b, ne_ids], kind="stable")]
+            csum = np.cumsum(self.sizes[order])
+            pos = min(int(np.searchsorted(csum, k)), len(order) - 1)
+            tau_k = ub[b, order[pos]]
+            cover[b] = nonempty & (lb[b] <= tau_k + self.eps)
+        return cover
+
+    # -------------------------------------------------------------- scans
+
+    def _gather(self, cluster_ids: np.ndarray) -> tuple[jax.Array, int]:
+        """Concatenate cluster segments, pad to a power-of-two bucket.
+
+        Returns (buffer (bucket, d), valid row count). Padding repeats row 0
+        and is masked to +inf distance by the kernel, so it never scores.
+        When every row is selected (high-selectivity probes prune nothing)
+        the store is already the contiguous answer — no gather copy.
+        """
+        m = int(self.sizes[cluster_ids].sum())
+        if m == self.n:
+            return self.embeddings, m
+        rows = np.concatenate(
+            [np.arange(self.offsets[c], self.offsets[c + 1])
+             for c in cluster_ids]) if len(cluster_ids) else np.empty(0, int)
+        bucket = max(128, 1 << max(0, m - 1).bit_length())
+        pad = np.zeros(bucket - m, np.int64)
+        buf = jnp.take(self.embeddings,
+                       jnp.asarray(np.concatenate([rows, pad])), axis=0)
+        return buf, m
+
+    def _masked_probe(self, buf, m, preds, thr, *, k, impl, interpret,
+                      scalar):
+        """Dispatch a masked subset scan through the same kernel *shape* as
+        the full-scan path it replaces: each impl's scalar and batch kernels
+        reduce the dot product in different orders (VPU reduce vs MXU
+        matmul), so a pruned scalar probe must use the scalar kernel and a
+        pruned batched probe the batch kernel — even at B=1, where
+        ``probe_batch`` without an index still runs the batch kernel —
+        to keep pruned results bitwise equal to the full scan.
+        """
+        nv = jnp.asarray(m, jnp.int32)
+        if impl == "pallas":
+            from repro.kernels.cosine_topk import ops as ct
+
+            if scalar:
+                counts, topk = ct.cosine_probe_masked(
+                    buf, nv, preds[0], thr[0], k=k, interpret=interpret)
+                return counts[None], topk[None]
+            return ct.cosine_probe_batch_masked(buf, nv, preds, thr, k=k,
+                                                interpret=interpret)
+        if scalar:
+            counts, topk = _masked_probe_xla(buf, nv, preds[0], thr[0], k=k)
+            return counts[None], topk[None]
+        return _masked_probe_batch_xla(buf, nv, preds, thr, k=k)
+
+    # -------------------------------------------------------------- probe
+
+    def probe_pruned(self, preds: np.ndarray, thresholds: np.ndarray, *,
+                     k: int = 1, impl: str = "xla", interpret: bool = True,
+                     scalar_kernel: bool = False, need_topk: bool = True,
+                     ) -> tuple[np.ndarray, np.ndarray, dict]:
+        """Pruned batched probe: counts + top-k exactly equal the full scan.
+
+        preds (B, d); thresholds (B,) or (B, T). Classifies every cluster
+        against every (predicate, threshold); all-in clusters contribute
+        their size with zero rows touched, all-out contribute nothing, and
+        the union of boundary (+ top-k cover) segments across the batch is
+        scored by at most ONE masked kernel launch. Returns
+        (counts (B, T) int32, top-k (B, k) float32, per-call stats).
+
+        ``scalar_kernel``: scan with the scalar-probe kernel shape (the
+        histogram's non-batched entry points) instead of the batch kernel —
+        bitwise parity requires matching the full-scan path's kernel.
+        ``need_topk=False`` (count-only callers that discard the top-k)
+        skips the top-k cover: a probe whose every cluster resolves by
+        bounds then launches nothing, and the returned top-k is +inf.
+        """
+        preds = np.asarray(preds, np.float32)
+        thr = np.asarray(thresholds, np.float32)
+        if thr.ndim == 1:
+            thr = thr[:, None]
+        b, t = thr.shape
+        k = max(1, min(int(k), self.n))
+        lb, ub = self.cluster_bounds(preds)                 # (B, K) f64
+        thr64 = thr.astype(np.float64)
+        allin = ub[:, :, None] <= thr64[:, None, :] - self.eps   # (B, K, T)
+        allout = lb[:, :, None] > thr64[:, None, :] + self.eps
+        nonempty = self.sizes > 0
+        boundary = (~(allin | allout)).any(axis=2) & nonempty[None, :]
+        scan_bk = boundary.copy()                           # (B, K)
+        if need_topk:
+            scan_bk |= self._topk_cover(lb, ub, k)
+        in_union = scan_bk.any(axis=0) & nonempty           # (K,)
+        scan_ids = np.flatnonzero(in_union)
+        # a near-total scan gains nothing from pruning: promote it to the
+        # whole store so _gather returns the contiguous embeddings with no
+        # copy — every cluster is then counted by the kernel (still exact)
+        if int(self.sizes[scan_ids].sum()) >= 0.9 * self.n:
+            in_union = nonempty.copy()
+            scan_ids = np.flatnonzero(in_union)
+
+        if len(scan_ids):
+            buf, m = self._gather(scan_ids)
+            counts_s, topk = self._masked_probe(
+                buf, m, jnp.asarray(preds), jnp.asarray(thr), k=k,
+                impl=impl, interpret=interpret, scalar=scalar_kernel)
+        else:                       # every cluster resolved by its bounds
+            m = 0
+            counts_s = np.zeros((b, t), np.int32)
+            topk = jnp.full((b, k), jnp.inf, f32)
+
+        # clusters resolved by bounds alone: add all-in sizes. The union
+        # buffer is scored against *every* predicate, so any cluster in the
+        # union — even one this predicate classified all-in — is already
+        # counted row-by-row by the kernel, exactly; only clusters outside
+        # the union contribute via their bound classification.
+        resolved = nonempty[None, :] & ~in_union[None, :]   # (B, K)
+        extra = ((allin & resolved[:, :, None]).astype(np.int64)
+                 * self.sizes[None, :, None]).sum(axis=1)   # (B, T)
+        counts = (np.asarray(counts_s, np.int64) + extra).astype(np.int32)
+
+        stats = {
+            "launches": 1 if len(scan_ids) else 0,
+            "rows_scanned": m,
+            "rows_full_equiv": self.n,
+            "scan_fraction": m / max(1, self.n),
+            "scanned_clusters": int(len(scan_ids)),
+            "boundary_clusters": int(boundary.sum()),
+            "clusters": self.k_clusters,
+            "batch": b,
+        }
+        self._record(stats, probes=1)
+        return counts, np.asarray(topk), stats
+
+    def kth_smallest(self, pred: np.ndarray, k: int, *, impl: str = "xla",
+                     interpret: bool = True) -> float:
+        """Exact k-th smallest distance via bound-ordered cluster scanning.
+
+        Clusters are visited in ascending lower-bound order, ``chunk_rows``
+        rows at a time; the loop stops as soon as the running k-th candidate
+        is <= the next cluster's lower bound - eps (no unscanned point can
+        beat it). Equals the full-scan value bit for bit — the threshold-
+        calibration primitive (§3.2) without the full pass.
+        """
+        pred = np.asarray(pred, np.float32)
+        k = max(1, min(int(k), self.n))
+        lb, _ = self.cluster_bounds(pred[None])
+        lb = lb[0]
+        ne = np.flatnonzero(self.sizes > 0)
+        order = ne[np.argsort(lb[ne], kind="stable")]
+        preds_j = jnp.asarray(pred)[None, :]
+        thr_j = jnp.zeros((1, 1), f32)
+        best = np.empty(0, np.float32)
+        i, launches, rows_scanned = 0, 0, 0
+        # chunk target: enough rows per launch to amortize dispatch without
+        # defeating early termination on small stores
+        target = max(k, min(self.chunk_rows, max(1, self.n // 8)))
+        while i < len(order):
+            if best.size >= k and best[k - 1] <= lb[order[i]] - self.eps:
+                break
+            j, nrows = i, 0
+            while j < len(order) and (j == i or nrows < target):
+                nrows += int(self.sizes[order[j]])
+                j += 1
+            buf, m = self._gather(order[i:j])
+            _, topk = self._masked_probe(buf, m, preds_j, thr_j,
+                                         k=min(k, m), impl=impl,
+                                         interpret=interpret, scalar=True)
+            got = np.asarray(topk[0])
+            best = np.sort(np.concatenate([best, got[np.isfinite(got)]]),
+                           kind="stable")[:k]
+            launches += 1
+            rows_scanned += m
+            i = j
+        self._record({"launches": launches, "rows_scanned": rows_scanned,
+                      "rows_full_equiv": self.n}, probes=1)
+        return float(best[k - 1])
+
+    # -------------------------------------------------------------- stats
+
+    def _record(self, stats: dict, *, probes: int) -> None:
+        with self._lock:
+            self._cum["probes"] += probes
+            self._cum["launches"] += stats["launches"]
+            self._cum["rows_scanned"] += stats["rows_scanned"]
+            self._cum["rows_full_equiv"] += stats["rows_full_equiv"]
+
+    def stats(self) -> dict:
+        """Cumulative scan accounting; ``scan_fraction`` is rows actually
+        streamed over rows a full-scan probe would have streamed."""
+        with self._lock:
+            d = dict(self._cum)
+        d["scan_fraction"] = (d["rows_scanned"]
+                              / max(1, d["rows_full_equiv"]))
+        return d
+
+    def reset_stats(self) -> None:
+        with self._lock:
+            for key in self._cum:
+                self._cum[key] = 0
+
+
+def build_clustered_store(
+    embeddings: np.ndarray, k_clusters: int, *, iters: int = 8,
+    seed: int = 0, impl: str = "pallas", interpret: bool = True,
+    eps: float = 1e-4, chunk_rows: int = 4096,
+) -> ClusteredStore:
+    """Partition (N, d) embeddings into K clusters for pruned probing.
+
+    Runs Lloyd's k-means (the existing ``repro.kernels.kmeans`` kernel),
+    reorders the store cluster-contiguous, and computes per-cluster radii in
+    float64 (inflated by one part in 1e9 to absorb norm roundoff — the
+    bounds must *never* under-cover). K is clamped to N; empty clusters get
+    zero-width segments and are skipped by every probe.
+    """
+    x = np.asarray(embeddings, np.float32)
+    n, d = x.shape
+    k = max(1, min(int(k_clusters), n))
+    centroids, assign = kmeans(x, k, iters=iters, seed=seed, impl=impl,
+                               interpret=interpret)
+    order = np.argsort(assign, kind="stable")
+    sizes = np.bincount(assign, minlength=k).astype(np.int64)
+    offsets = np.zeros(k + 1, np.int64)
+    offsets[1:] = np.cumsum(sizes)
+    xs = x[order]
+    cent64 = centroids.astype(np.float64)
+    rnorm = np.linalg.norm(xs.astype(np.float64) - cent64[assign[order]],
+                           axis=1)
+    radii = np.zeros(k, np.float64)
+    for c in range(k):
+        if sizes[c]:
+            radii[c] = rnorm[offsets[c]:offsets[c + 1]].max()
+    radii = radii * (1.0 + 1e-9) + 1e-12
+    row_norm = np.linalg.norm(xs.astype(np.float64), axis=1).max() if n else 1.0
+    return ClusteredStore(
+        embeddings=jnp.asarray(xs), offsets=offsets, sizes=sizes,
+        centroids=cent64, radii=radii, perm=order.astype(np.int64),
+        eps=eps, chunk_rows=chunk_rows,
+        max_row_norm=float(row_norm) * (1.0 + 1e-9) + 1e-12)

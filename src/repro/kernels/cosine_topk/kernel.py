@@ -21,6 +21,14 @@ Two entry points:
     batches with B >> 128 (cross-query micro-batching can hand the kernel
     hundreds of predicates at once).
 
+  * ``cosine_probe_batch_masked_blocks`` — the batched probe with the valid
+    row count as a *dynamic* SMEM scalar instead of the static ``n_total``.
+    The cluster-pruned index (``repro.index``) gathers the union of
+    boundary-cluster segments into a power-of-two-padded buffer whose valid
+    prefix length changes every probe; baking that length in statically
+    would retrace per subset size, while the scalar-operand mask gives one
+    compile per padded bucket shape.
+
 Grid: (N / block_n,) for the untiled paths; (N / block_n, B / block_b) for
 the B-tiled path. Outputs are per-block partials merged by ops.py (the
 cross-block merge is O(nblocks * B * k) — negligible).
@@ -46,6 +54,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 f32 = jnp.float32
 
@@ -217,4 +226,188 @@ def cosine_probe_batch_tiled_blocks(
         ],
         interpret=interpret,
     )(store, preds, thresholds)
+    return counts, topk
+
+
+def _probe_masked_kernel(nv_ref, store_ref, pred_ref, thr_ref, counts_ref,
+                         topk_ref, *, k: int, block_n: int):
+    """Scalar twin of ``_probe_batch_masked_kernel`` — same VPU
+    broadcast-reduce as ``_probe_kernel`` so a pruned one-predicate scan is
+    bitwise the full scalar scan (the MXU batch matmul reduces in a
+    different order and can differ in the last ulp)."""
+    bi = pl.program_id(0)
+    block = store_ref[...].astype(f32)            # (block_n, d)
+    pred = pred_ref[...].astype(f32)              # (1, d)
+    sims = jnp.sum(block * pred, axis=-1)
+    dists = 1.0 - sims                            # (block_n,)
+
+    row = bi * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+    dists = jnp.where(row < nv_ref[0, 0], dists, jnp.inf)
+
+    thr = thr_ref[...]                            # (T,)
+    counts_ref[0, :] = jnp.sum(
+        (dists[None, :] <= thr[:, None]).astype(jnp.int32), axis=1
+    )
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    topk_ref[0, :] = -neg_top
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "interpret"))
+def cosine_probe_masked_blocks(
+    store: jax.Array,          # (N_pad, d_pad) — padded by ops.py
+    n_valid: jax.Array,        # (1, 1) int32 — rows < n_valid are live
+    pred: jax.Array,           # (1, d_pad)
+    thresholds: jax.Array,     # (T,)
+    *,
+    k: int,
+    block_n: int = 2048,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    n_pad, d = store.shape
+    t = thresholds.shape[0]
+    nblocks = n_pad // block_n
+    kernel = functools.partial(_probe_masked_kernel, k=k, block_n=block_n)
+    counts, topk = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, t), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, k), f32),
+        ],
+        interpret=interpret,
+    )(n_valid, store, pred, thresholds)
+    return counts, topk
+
+
+def _probe_batch_masked_kernel(nv_ref, store_ref, preds_ref, thr_ref,
+                               counts_ref, topk_ref, *, k: int, block_n: int):
+    bi = pl.program_id(0)
+    block = store_ref[...].astype(f32)            # (block_n, d)
+    preds = preds_ref[...].astype(f32)            # (d, B)
+    sims = jnp.dot(block, preds, preferred_element_type=f32)  # (block_n, B)
+    dists = 1.0 - sims
+
+    # mask rows past the *runtime* valid count with +inf distance — the
+    # valid prefix length varies per probe (pruned boundary subsets), so it
+    # arrives as an SMEM scalar rather than a static trace constant
+    row = bi * block_n + jax.lax.broadcasted_iota(jnp.int32, (block_n, 1), 0)
+    dists = jnp.where(row < nv_ref[0, 0], dists, jnp.inf)
+
+    db = dists.T                                  # (B, block_n)
+    thr = thr_ref[...]                            # (B, T)
+    counts_ref[0] = jnp.sum(
+        (db[:, None, :] <= thr[:, :, None]).astype(jnp.int32), axis=-1
+    )                                             # (B, T)
+    neg_top, _ = jax.lax.top_k(-db, k)
+    topk_ref[0] = -neg_top                        # (B, k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "interpret"))
+def cosine_probe_batch_masked_blocks(
+    store: jax.Array,          # (N_pad, d_pad) — padded by ops.py
+    n_valid: jax.Array,        # (1, 1) int32 — rows < n_valid are live
+    preds: jax.Array,          # (d_pad, B) — predicate panel, column-major
+    thresholds: jax.Array,     # (B, T) per-predicate threshold vectors
+    *,
+    k: int,
+    block_n: int = 2048,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched probe over a dynamically-masked row prefix.
+
+    Identical math to ``cosine_probe_batch_blocks`` but the tail mask reads
+    ``n_valid`` from SMEM at run time: one trace serves every subset length
+    that pads to the same bucket shape. Used by the cluster-pruned index,
+    whose boundary-union scan buffer changes length on every probe.
+    """
+    n_pad, d = store.shape
+    b = preds.shape[1]
+    t = thresholds.shape[1]
+    nblocks = n_pad // block_n
+    kernel = functools.partial(_probe_batch_masked_kernel, k=k,
+                               block_n=block_n)
+    counts, topk = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, b), lambda i: (0, 0)),
+            pl.BlockSpec((b, t), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b, k), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, b, t), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, b, k), f32),
+        ],
+        interpret=interpret,
+    )(n_valid, store, preds, thresholds)
+    return counts, topk
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "block_b", "interpret"))
+def cosine_probe_batch_masked_tiled_blocks(
+    store: jax.Array,          # (N_pad, d_pad) — padded by ops.py
+    n_valid: jax.Array,        # (1, 1) int32 — rows < n_valid are live
+    preds: jax.Array,          # (d_pad, B_pad) — B padded to block_b by ops.py
+    thresholds: jax.Array,     # (B_pad, T)
+    *,
+    k: int,
+    block_n: int = 2048,
+    block_b: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """B-tiled masked probe: grid (nblocks, B_pad/block_b).
+
+    Same composition as ``cosine_probe_batch_tiled_blocks`` — the masked
+    kernel body only consults ``program_id(0)`` (row masking), so the
+    predicate-tile offset lives entirely in the BlockSpec index maps and
+    VMEM per step stays bounded by ``block_b`` for the coalesced pruned
+    batches with B >> 128.
+    """
+    n_pad, d = store.shape
+    b_pad = preds.shape[1]
+    t = thresholds.shape[1]
+    nblocks = n_pad // block_n
+    nbt = b_pad // block_b
+    kernel = functools.partial(_probe_batch_masked_kernel, k=k,
+                               block_n=block_n)
+    counts, topk = pl.pallas_call(
+        kernel,
+        grid=(nblocks, nbt),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_b), lambda i, j: (0, j)),
+            pl.BlockSpec((block_b, t), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_b, t), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_b, k), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, b_pad, t), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, b_pad, k), f32),
+        ],
+        interpret=interpret,
+    )(n_valid, store, preds, thresholds)
     return counts, topk

@@ -14,6 +14,11 @@ VMEM budget (see kernel.py). Pass ``tiled=True``/``False`` to force either
 path — parity between the two is tested for B below, at, and above the
 tile size. Padded predicate columns are zero vectors whose outputs are
 sliced off before the merge, so results are exact.
+
+``cosine_probe_batch_masked`` scores only a *runtime-length* row prefix
+(the valid count travels as an SMEM scalar, not a trace constant) — the
+entry point for the cluster-pruned index's boundary-subset scans, where the
+subset length changes every probe but the padded bucket shape does not.
 """
 
 from __future__ import annotations
@@ -25,8 +30,11 @@ import jax.numpy as jnp
 
 from repro.kernels.cosine_topk.kernel import (
     cosine_probe_batch_blocks,
+    cosine_probe_batch_masked_blocks,
+    cosine_probe_batch_masked_tiled_blocks,
     cosine_probe_batch_tiled_blocks,
     cosine_probe_blocks,
+    cosine_probe_masked_blocks,
 )
 
 f32 = jnp.float32
@@ -118,6 +126,99 @@ def cosine_probe_batch(
         )
     counts = counts_b.sum(axis=0)                          # (B, T)
     # (nblocks, B, kk) -> (B, nblocks*kk) -> per-predicate global top-k
+    flat = topk_b.transpose(1, 0, 2).reshape(b, -1)
+    merged = -jax.lax.top_k(-flat, k)[0]
+    return counts, merged
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def cosine_probe_masked(
+    store: jax.Array,        # (M, d) scan buffer; rows >= n_valid are dead
+    n_valid: jax.Array,      # int32 scalar — live row-prefix length
+    pred: jax.Array,         # (d,)
+    thresholds: jax.Array,   # (T,)
+    *,
+    k: int = 128,
+    block_n: int = 2048,
+    interpret: bool = True,  # CPU container; False on real TPU
+) -> tuple[jax.Array, jax.Array]:
+    """Scalar probe over the first ``n_valid`` rows of ``store``.
+
+    One-predicate twin of ``cosine_probe_batch_masked`` using the scalar
+    kernel's VPU reduce, so a pruned scan's distances are bitwise the full
+    ``cosine_probe`` scan's. Returns (counts (T,), top-k (k,) ascending).
+    """
+    m = store.shape[0]
+    k = min(k, m)
+    block_n = min(block_n, max(128, 1 << (m - 1).bit_length()))
+    sp = _pad_to(_pad_to(store, 128, 1), block_n, 0)
+    pp = _pad_to(pred[None, :].astype(store.dtype), 128, 1)
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(1, 1)
+    kk = min(max(k, 1), block_n)
+    counts_b, topk_b = cosine_probe_masked_blocks(
+        sp, nv, pp, thresholds.astype(f32), k=kk, block_n=block_n,
+        interpret=interpret,
+    )
+    counts = counts_b.sum(axis=0)
+    merged = -jax.lax.top_k(-topk_b.reshape(-1), k)[0]
+    return counts, merged
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "block_b",
+                                             "tiled", "interpret"))
+def cosine_probe_batch_masked(
+    store: jax.Array,        # (M, d) scan buffer; rows >= n_valid are dead
+    n_valid: jax.Array,      # int32 scalar — live row-prefix length
+    preds: jax.Array,        # (B, d) predicate batch
+    thresholds: jax.Array,   # (B, T) per-predicate threshold vectors
+    *,
+    k: int = 128,
+    block_n: int = 2048,
+    block_b: int = 128,
+    tiled: bool | None = None,  # None = auto (tile when B > block_b)
+    interpret: bool = True,  # CPU container; False on real TPU
+) -> tuple[jax.Array, jax.Array]:
+    """Batched probe over the first ``n_valid`` rows of ``store``.
+
+    The cluster-pruned index pads its boundary-union scan buffer to a
+    power-of-two bucket and masks the tail here, so the kernel compiles one
+    trace per bucket shape instead of one per subset length. Dead rows are
+    +inf distance inside the kernel — counts and top-k are exact over the
+    valid prefix (top-k entries past ``n_valid`` come back +inf).
+
+    B-tiled dispatch mirrors ``cosine_probe_batch``: coalesced pruned
+    batches with B > ``block_b`` route through the 2-D-grid masked kernel
+    so the resident predicate panel stays inside the VMEM budget; padded
+    predicate columns are sliced off before the merge.
+
+    Returns (counts (B, T) int32, k smallest distances (B, k) ascending).
+    """
+    m = store.shape[0]
+    b = preds.shape[0]
+    k = min(k, m)
+    block_n = min(block_n, max(128, 1 << (m - 1).bit_length()))
+    sp = _pad_to(_pad_to(store, 128, 1), block_n, 0)
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(1, 1)
+    kk = min(max(k, 1), block_n)
+    thr = thresholds.astype(f32)
+    if tiled is None:
+        tiled = b > block_b
+    if tiled:
+        bb = min(block_b, max(8, 1 << (b - 1).bit_length()))
+        preds_p = _pad_to(preds.astype(store.dtype), bb, 0)
+        pp = _pad_to(preds_p, 128, 1).T                     # (d_pad, B_pad)
+        counts_b, topk_b = cosine_probe_batch_masked_tiled_blocks(
+            sp, nv, pp, _pad_to(thr, bb, 0), k=kk, block_n=block_n,
+            block_b=bb, interpret=interpret,
+        )
+        counts_b = counts_b[:, :b]
+        topk_b = topk_b[:, :b]
+    else:
+        pp = _pad_to(preds.astype(store.dtype), 128, 1).T   # (d_pad, B)
+        counts_b, topk_b = cosine_probe_batch_masked_blocks(
+            sp, nv, pp, thr, k=kk, block_n=block_n, interpret=interpret,
+        )
+    counts = counts_b.sum(axis=0)                           # (B, T)
     flat = topk_b.transpose(1, 0, 2).reshape(b, -1)
     merged = -jax.lax.top_k(-flat, k)[0]
     return counts, merged

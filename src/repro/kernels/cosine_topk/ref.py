@@ -30,3 +30,17 @@ def cosine_probe_batch_ref(store: jax.Array, preds: jax.Array,
         axis=-1).astype(jnp.int32)                          # (B, T)
     neg_top, _ = jax.lax.top_k(-dists, k)
     return counts, -neg_top
+
+
+def cosine_probe_batch_masked_ref(store: jax.Array, n_valid,
+                                  preds: jax.Array, thresholds: jax.Array,
+                                  k: int) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the masked prefix probe: rows >= n_valid are +inf."""
+    sims = jnp.einsum("nd,bd->bn", store.astype(f32), preds.astype(f32))
+    dists = 1.0 - sims                                      # (B, N)
+    live = jnp.arange(store.shape[0])[None, :] < n_valid
+    dists = jnp.where(live, dists, jnp.inf)
+    counts = (dists[:, None, :] <= thresholds[:, :, None]).sum(
+        axis=-1).astype(jnp.int32)
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    return counts, -neg_top

@@ -24,6 +24,14 @@ without any store scan. The run ends with coalescing + cache counters:
 probes fired vs predicates requested, dedup piggybacks, hit/miss/eviction.
 ``--passes`` replays the workload to model hot repeated predicates
 (pass 2+ should be nearly all cache hits). Tuning guide: docs/serving.md.
+
+``--index-clusters K`` (PR 3) builds a cluster-pruned probe index
+(``repro.index.ClusteredStore``): the store is k-means-partitioned into K
+segments and every probe classifies clusters against its threshold with
+exact distance bounds, scanning only boundary clusters — identical counts,
+a fraction of the rows at low selectivity. The run ends with the index's
+scan-fraction counters. Works with every mode above (the coalescer and
+cache sit in front of the pruned probe unchanged). Tuning: docs/index.md.
 """
 
 from __future__ import annotations
@@ -57,9 +65,18 @@ from repro.launch.coalescer import (
 
 def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
                 rate: float = 0.6, spec_steps: int = 600, seed: int = 0,
-                impl: str = "xla"):
+                impl: str = "xla", index_clusters: int = 0):
     corpus = make_corpus(dataset, n_images=n_images, seed=seed)
-    hist = SemanticHistogram(jax.numpy.asarray(corpus.images), impl=impl)
+    index = None
+    if index_clusters > 0:
+        from repro.index import build_clustered_store
+
+        index = build_clustered_store(corpus.images, index_clusters,
+                                      seed=seed, impl=impl)
+        print(f"index: {index.k_clusters} clusters over {index.n} rows "
+              f"(radii p50={float(np.median(index.radii)):.3f})")
+    hist = SemanticHistogram(jax.numpy.asarray(corpus.images), impl=impl,
+                             index=index)
     X, y = specificity_dataset(corpus, n_samples=2000, seed=seed)
     from repro.configs.paper_stack import SpecificityModelConfig
 
@@ -160,6 +177,11 @@ def main(argv=None) -> None:
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"],
                     help="histogram probe backend (pallas = fused kernel, "
                          "interpret mode on CPU)")
+    ap.add_argument("--index-clusters", type=int, default=0,
+                    help=">0: build a cluster-pruned probe index with this "
+                         "many k-means clusters — probes scan only boundary "
+                         "clusters (exact counts, sublinear at low "
+                         "selectivity)")
     ap.add_argument("--concurrency", type=int, default=1,
                     help=">1: plan queries from this many threads through "
                          "a shared predicate coalescer + LRU cache")
@@ -184,7 +206,8 @@ def main(argv=None) -> None:
     print(f"building semantic-histogram stack for '{args.dataset}' "
           f"(probe impl={args.impl})...")
     corpus, estimators = build_stack(args.dataset, seed=args.seed,
-                                     impl=args.impl)
+                                     impl=args.impl,
+                                     index_clusters=args.index_clusters)
     queries = generate_queries(corpus, n_queries=args.queries,
                                n_filters=args.filters, seed=args.seed)
     if args.concurrency > 1:
@@ -196,6 +219,13 @@ def main(argv=None) -> None:
             passes=args.passes)
     else:
         serve_sequential(corpus, estimators, queries, seed=args.seed)
+    index = estimators["specificity"].hist.index
+    if index is not None:
+        s = index.stats()
+        print(f"\nindex: {s['probes']} pruned probes, "
+              f"{s['rows_scanned']}/{s['rows_full_equiv']} rows scanned "
+              f"(scan_fraction={s['scan_fraction']:.0%}) across "
+              f"{s['launches']} kernel launches")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,346 @@
+"""Cluster-pruned probe index (PR 3): exact parity with full scans across
+selectivities / K / impls, bound soundness, early-terminated top-k, the
+cache + batched-calibration interaction, and scan-fraction sublinearity.
+
+The exhaustive acceptance sweep (K x selectivity grid on a bigger store) is
+``@pytest.mark.slow``; the default tier-1 run keeps a fast subset."""
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.histogram import SemanticHistogram
+from repro.core.synthetic import clustered_unit_vectors
+from repro.index import build_clustered_store
+from repro.launch.coalescer import PredicateCache
+
+N, D = 2000, 96
+
+
+@functools.lru_cache(maxsize=4)
+def _store(n=N, seed=0):
+    x, _ = clustered_unit_vectors(n, D, n_centers=16, spread=0.25, seed=seed)
+    return x
+
+
+@functools.lru_cache(maxsize=8)
+def _index(k, n=N, seed=0):
+    return build_clustered_store(_store(n, seed), k, iters=6, seed=0,
+                                 impl="xla")
+
+
+def _thr_at(x, pred, sel):
+    """Threshold hitting ~sel, placed mid-gap so f32 ties can't flake."""
+    d = np.sort(1.0 - x @ pred)
+    kth = max(1, int(round(sel * len(x))))
+    return float(0.5 * (d[kth - 1] + d[min(kth, len(x) - 1)]))
+
+
+# ------------------------------------------------------ masked kernel parity
+
+
+@pytest.mark.parametrize("m,pad,b,t,kk", [
+    (300, 512, 5, 2, 7),       # valid prefix inside one block
+    (2048, 2048, 3, 1, 16),    # valid count == padded size (no dead rows)
+    (100, 128, 1, 3, 128),     # k > valid rows: tail comes back +inf
+])
+def test_masked_kernel_parity(m, pad, b, t, kk, rng):
+    """The masked scalar/batch kernels and their XLA twins against the ref
+    oracle, across block-boundary and k-clamp edges."""
+    from repro.index.clustered import (
+        _masked_probe_batch_xla,
+        _masked_probe_xla,
+    )
+    from repro.kernels.cosine_topk.ops import (
+        cosine_probe_batch_masked,
+        cosine_probe_masked,
+    )
+    from repro.kernels.cosine_topk.ref import cosine_probe_batch_masked_ref
+
+    x = rng.standard_normal((pad, 96)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    preds = x[:b].copy()
+    thr = np.sort(rng.uniform(0.2, 1.8, (b, t)), axis=1).astype(np.float32)
+    k_eff = min(kk, pad)       # the ops wrappers clamp k to the buffer rows
+    nv = jnp.asarray(m, jnp.int32)
+    cr, tr = cosine_probe_batch_masked_ref(
+        jnp.asarray(x), m, jnp.asarray(preds), jnp.asarray(thr), k_eff)
+    for got_c, got_t in (
+        cosine_probe_batch_masked(jnp.asarray(x), nv, jnp.asarray(preds),
+                                  jnp.asarray(thr), k=kk),
+        _masked_probe_batch_xla(jnp.asarray(x), nv, jnp.asarray(preds),
+                                jnp.asarray(thr), k=k_eff),
+    ):
+        assert (np.asarray(got_c) == np.asarray(cr)).all()
+        np.testing.assert_allclose(np.asarray(got_t), np.asarray(tr),
+                                   rtol=1e-4, atol=1e-4)
+    # scalar variants against the ref's first row
+    cs, ts = cosine_probe_masked(jnp.asarray(x), nv, jnp.asarray(preds[0]),
+                                 jnp.asarray(thr[0]), k=kk)
+    assert (np.asarray(cs) == np.asarray(cr)[0]).all()
+    np.testing.assert_allclose(np.asarray(ts), np.asarray(tr)[0],
+                               rtol=1e-4, atol=1e-4)
+    cx, tx = _masked_probe_xla(jnp.asarray(x), nv, jnp.asarray(preds[0]),
+                               jnp.asarray(thr[0]), k=k_eff)
+    assert (np.asarray(cx) == np.asarray(cr)[0]).all()
+    np.testing.assert_allclose(np.asarray(tx), np.asarray(tr)[0],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_masked_tiled_kernel_parity(rng):
+    """B-tiled masked dispatch (coalesced pruned batches with B > block_b)
+    matches the untiled masked kernel and the ref oracle."""
+    from repro.kernels.cosine_topk.ops import cosine_probe_batch_masked
+    from repro.kernels.cosine_topk.ref import cosine_probe_batch_masked_ref
+
+    x = rng.standard_normal((512, 96)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    m, b = 300, 96
+    preds = x[:b].copy()
+    thr = np.full((b, 1), 0.8, np.float32)
+    nv = jnp.asarray(m, jnp.int32)
+    ct, tt = cosine_probe_batch_masked(jnp.asarray(x), nv,
+                                       jnp.asarray(preds), jnp.asarray(thr),
+                                       k=5, block_b=32, tiled=True)
+    cu, tu = cosine_probe_batch_masked(jnp.asarray(x), nv,
+                                       jnp.asarray(preds), jnp.asarray(thr),
+                                       k=5, tiled=False)
+    cr, tr = cosine_probe_batch_masked_ref(jnp.asarray(x), m,
+                                           jnp.asarray(preds),
+                                           jnp.asarray(thr), 5)
+    assert (np.asarray(ct) == np.asarray(cu)).all()
+    assert (np.asarray(ct) == np.asarray(cr)).all()
+    np.testing.assert_allclose(np.asarray(tt), np.asarray(tu), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tt), np.asarray(tr), atol=1e-5)
+
+
+# ----------------------------------------------------------- bound soundness
+
+
+def test_bounds_cover_every_member(rng):
+    x = _store()
+    cs = _index(32)
+    xs = np.asarray(cs.embeddings)
+    preds = np.asarray([x[5], x[900], rng.standard_normal(D) * 0.7],
+                       np.float32)
+    lb, ub = cs.cluster_bounds(preds)
+    for b in range(len(preds)):
+        dists = 1.0 - xs.astype(np.float64) @ preds[b].astype(np.float64)
+        for c in range(cs.k_clusters):
+            seg = dists[cs.offsets[c]:cs.offsets[c + 1]]
+            if seg.size:
+                assert lb[b, c] <= seg.min() + 1e-12
+                assert ub[b, c] >= seg.max() - 1e-12
+
+
+def test_reordered_layout():
+    x = _store()
+    cs = _index(32)
+    assert sorted(cs.perm.tolist()) == list(range(N))
+    assert cs.offsets[0] == 0 and cs.offsets[-1] == N
+    assert (np.diff(cs.offsets) == cs.sizes).all()
+    np.testing.assert_array_equal(np.asarray(cs.embeddings), x[cs.perm])
+
+
+# ------------------------------------------------------- exact probe parity
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_pruned_counts_and_topk_exact(impl, rng):
+    x = _store()
+    cs = _index(32)
+    full = SemanticHistogram(jnp.asarray(x), impl=impl)
+    pruned = SemanticHistogram(jnp.asarray(x), impl=impl, index=cs)
+    for sel in (0.01, 0.5):
+        pred = x[rng.integers(N)]
+        thr = _thr_at(x, pred, sel)
+        assert pruned.count_within(pred, thr) == full.count_within(pred, thr)
+    preds = x[rng.integers(N, size=6)]
+    thrs = np.asarray([_thr_at(x, p, s) for p, s in
+                       zip(preds, (0.005, 0.01, 0.1, 0.5, 0.9, 0.25))],
+                      np.float32)
+    np.testing.assert_array_equal(pruned.selectivity_batch(preds, thrs),
+                                  full.selectivity_batch(preds, thrs))
+    cf, tf = full.probe_batch(preds, thrs, k=9)
+    cp, tp = pruned.probe_batch(preds, thrs, k=9)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cp))
+    np.testing.assert_array_equal(np.asarray(tf), np.asarray(tp))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_kth_smallest_exact(impl):
+    x = _store()
+    cs = _index(32)
+    full = SemanticHistogram(jnp.asarray(x), impl=impl)
+    pruned = SemanticHistogram(jnp.asarray(x), impl=impl, index=cs)
+    for k in (1, 7, 64, N):
+        assert pruned.kth_smallest_distance(x[11], k) == \
+            full.kth_smallest_distance(x[11], k)
+    kb = pruned.kth_smallest_batch(x[:5], 17)
+    np.testing.assert_array_equal(kb, full.kth_smallest_batch(x[:5], 17))
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_single_predicate_batch_bitwise(impl):
+    """probe_batch at B=1 runs the *batch* kernel on the full-scan path, so
+    the pruned path must too (the scalar kernel's VPU reduce differs in the
+    last ulp from the batch MXU matmul) — a one-predicate coalescer flush
+    or single-miss cache bucket must stay bitwise-identical."""
+    x = _store()
+    cs = _index(32)
+    full = SemanticHistogram(jnp.asarray(x), impl=impl)
+    pruned = SemanticHistogram(jnp.asarray(x), impl=impl, index=cs)
+    preds = x[42:43]
+    thrs = np.asarray([0.35], np.float32)
+    cf, tf = full.probe_batch(preds, thrs, k=8)
+    cp, tp = pruned.probe_batch(preds, thrs, k=8)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cp))
+    np.testing.assert_array_equal(np.asarray(tf), np.asarray(tp))
+
+
+def test_multi_threshold_probe_exact(rng):
+    x = _store()
+    cs = _index(32)
+    full = SemanticHistogram(jnp.asarray(x))
+    pruned = SemanticHistogram(jnp.asarray(x), index=cs)
+    thr = np.sort(rng.uniform(0.01, 1.9, (4, 3)), axis=1).astype(np.float32)
+    cf, tf = full.probe_batch(x[:4], thr, k=5)
+    cp, tp = pruned.probe_batch(x[:4], thr, k=5)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cp))
+    np.testing.assert_array_equal(np.asarray(tf), np.asarray(tp))
+
+
+def test_degenerate_k_and_extreme_thresholds():
+    x = _store()
+    full = SemanticHistogram(jnp.asarray(x))
+    # K=1: every probe is one boundary cluster — still exact
+    cs1 = build_clustered_store(x, 1, iters=2, seed=0, impl="xla")
+    h1 = SemanticHistogram(jnp.asarray(x), index=cs1)
+    assert h1.count_within(x[0], 0.4) == full.count_within(x[0], 0.4)
+    # K > N clamps to N singleton clusters
+    small = x[:40]
+    csn = build_clustered_store(small, 1000, iters=2, seed=0, impl="xla")
+    assert csn.k_clusters == 40
+    hn = SemanticHistogram(jnp.asarray(small), index=csn)
+    fs = SemanticHistogram(jnp.asarray(small))
+    assert hn.count_within(x[0], 0.4) == fs.count_within(x[0], 0.4)
+    # all-in / all-out classification at extreme thresholds: count-only
+    # probes that fully resolve by bounds launch nothing at all
+    cs = _index(32)
+    h = SemanticHistogram(jnp.asarray(x), index=cs)
+    cs.reset_stats()
+    assert h.count_within(x[0], 2.5) == N       # every cluster all-in
+    assert h.count_within(x[0], -0.1) == 0      # every cluster all-out
+    st = cs.stats()
+    assert st["rows_scanned"] == 0 and st["launches"] == 0
+    assert st["probes"] == 2
+
+
+def test_mismatched_index_rejected():
+    x = _store()
+    cs = _index(32)
+    with pytest.raises(ValueError, match="same embeddings"):
+        SemanticHistogram(jnp.asarray(x[:100]), index=cs)
+    # same shape, different content: a stale index must be rejected too
+    other, _ = clustered_unit_vectors(N, 96, n_centers=16, spread=0.25,
+                                      seed=99)
+    with pytest.raises(ValueError, match="same embeddings"):
+        SemanticHistogram(jnp.asarray(other), index=cs)
+
+
+# ------------------------------------------------ sublinearity + one launch
+
+
+def test_low_selectivity_scans_fraction():
+    x = _store()
+    cs = _index(64)
+    pruned = SemanticHistogram(jnp.asarray(x), index=cs)
+    full = SemanticHistogram(jnp.asarray(x))
+    pred = x[123]
+    thr = _thr_at(x, pred, 0.01)
+    cs.reset_stats()
+    assert pruned.count_within(pred, thr) == full.count_within(pred, thr)
+    assert cs.stats()["scan_fraction"] <= 1 / 3
+    # kth calibration is early-terminated, not a full pass
+    cs.reset_stats()
+    pruned.kth_smallest_distance(pred, 16)
+    assert cs.stats()["scan_fraction"] <= 1 / 3
+
+
+def test_batched_probe_is_one_launch(rng):
+    x = _store()
+    cs = _index(32)
+    pruned = SemanticHistogram(jnp.asarray(x), index=cs)
+    preds = x[rng.integers(N, size=8)]
+    thrs = np.full(8, 0.3, np.float32)
+    cs.reset_stats()
+    pruned.probe_batch(preds, thrs, k=4)
+    st = cs.stats()
+    assert st["probes"] == 1 and st["launches"] == 1
+
+
+# ------------------------------------- cache + batched calibration interplay
+
+
+@pytest.mark.parametrize("with_index", [False, True])
+def test_cache_kth_batch_hits_bitwise_and_keys_distinguish_k(with_index):
+    """kth_smallest_batch through a PredicateCache-attached histogram:
+    repeat calls are pure cache hits and bitwise-identical; k participates
+    in the key so k=7/k=9/selectivity probes never collide."""
+    x = _store()
+    cache = PredicateCache(256)
+    idx = _index(32) if with_index else None
+    hist = SemanticHistogram(jnp.asarray(x), cache=cache, index=idx)
+    preds = x[:5]
+    k7_first = hist.kth_smallest_batch(preds, 7)
+    misses0 = cache.stats()["misses"]
+    assert misses0 == 5 and cache.stats()["hits"] == 0
+    k7_again = hist.kth_smallest_batch(preds, 7)
+    st = cache.stats()
+    assert st["hits"] == 5 and st["misses"] == misses0
+    np.testing.assert_array_equal(k7_first, k7_again)      # bitwise hits
+    # a different k is a different key (miss), and a different answer shape
+    k9 = hist.kth_smallest_batch(preds, 9)
+    assert cache.stats()["misses"] == misses0 + 5
+    assert not np.array_equal(k7_first, k9)
+    # selectivity probes (k=1, real thresholds) don't collide either
+    thrs = np.full(5, 0.4, np.float32)
+    sel = hist.selectivity_batch(preds, thrs)
+    assert cache.stats()["misses"] == misses0 + 10
+    plain = SemanticHistogram(jnp.asarray(x))
+    np.testing.assert_array_equal(sel, plain.selectivity_batch(preds, thrs))
+    np.testing.assert_array_equal(k7_first, plain.kth_smallest_batch(preds, 7))
+
+
+# ----------------------------------------------- exhaustive acceptance sweep
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("k_clusters", [8, 64, 256])
+def test_pruned_parity_sweep(k_clusters, rng):
+    """Acceptance grid: selectivities {0.1%, 1%, 10%, 50%} x K {8, 64, 256}
+    — pruned counts exactly equal, top-k distances exactly equal."""
+    n = 4000
+    x, _ = clustered_unit_vectors(n, D, n_centers=32, spread=0.25, seed=3)
+    cs = build_clustered_store(x, k_clusters, iters=6, seed=0, impl="xla")
+    impls = ("xla", "pallas") if k_clusters == 64 else ("xla",)
+    for impl in impls:
+        full = SemanticHistogram(jnp.asarray(x), impl=impl)
+        pruned = SemanticHistogram(jnp.asarray(x), impl=impl, index=cs)
+        for sel in (0.001, 0.01, 0.1, 0.5):
+            preds = np.stack([x[rng.integers(n)],
+                              x[rng.integers(n)]])
+            thrs = np.asarray([_thr_at(x, p, sel) for p in preds],
+                              np.float32)
+            for j, p in enumerate(preds):
+                assert pruned.count_within(p, float(thrs[j])) == \
+                    full.count_within(p, float(thrs[j]))
+            cf, tf = full.probe_batch(preds, thrs, k=16)
+            cp, tp = pruned.probe_batch(preds, thrs, k=16)
+            np.testing.assert_array_equal(np.asarray(cf), np.asarray(cp))
+            np.testing.assert_array_equal(np.asarray(tf), np.asarray(tp))
+            k_cal = max(1, int(sel * n))
+            assert pruned.kth_smallest_distance(preds[0], k_cal) == \
+                full.kth_smallest_distance(preds[0], k_cal)
