@@ -36,6 +36,56 @@ from repro.analysis.roofline import HBM_BW, LINK_BW
 from repro.core.histogram import _local_probe, _local_probe_batch
 
 
+# child for the sharded-pruned section: 4 forced host devices, sharded
+# full-scan vs sharded per-shard-pruned probes over the same clustered store
+_SHARDED_CHILD = """
+import time
+import numpy as np
+import jax.numpy as jnp
+from repro.core.histogram import SemanticHistogram
+from repro.core.synthetic import clustered_unit_vectors
+from repro.index import build_sharded_clustered_store
+from repro.launch.mesh import make_probe_mesh
+
+n, d, k_shard, s = 100_000, 256, 160, 4     # K ~ sqrt(n/s) per shard
+xc, _ = clustered_unit_vectors(n, d, n_centers=64, spread=0.25, seed=0)
+mesh = make_probe_mesh(s)
+t0 = time.perf_counter()
+sidx = build_sharded_clustered_store(xc, k_shard, s, iters=6, seed=0,
+                                     impl="xla")
+build_s = time.perf_counter() - t0
+print(f"ROW|probe_sharded_index_build|N={n},S={s},K={k_shard}/shard|"
+      f"{build_s*1e6:.0f}|per-shard kmeans+reorder+radii")
+full = SemanticHistogram(jnp.asarray(xc), mesh=mesh)
+pruned = SemanticHistogram(jnp.asarray(xc), mesh=mesh, index=sidx)
+pred = xc[17]
+ds = np.sort(1.0 - xc @ pred)
+for sel in (0.001, 0.01, 0.1):
+    kth = max(1, int(sel * n))
+    thr = float(0.5 * (ds[kth - 1] + ds[kth]))
+    c_full = full.count_within(pred, thr)      # warm + reference
+    sidx.reset_stats()
+    c_prn = pruned.count_within(pred, thr)     # warm pruned shapes
+    assert c_full == c_prn, (sel, c_full, c_prn)
+    iters = 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        full.count_within(pred, thr)
+    full_us = (time.perf_counter() - t0) / iters * 1e6
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pruned.count_within(pred, thr)
+    prn_us = (time.perf_counter() - t0) / iters * 1e6
+    st = sidx.stats()
+    per = [p["scan_fraction"] for p in st["per_shard"]]
+    print(f"ROW|probe_sharded_pruned_cpu|N={n},S={s},sel={sel:.1%}|"
+          f"{prn_us:.0f}|scan_frac={st['scan_fraction']:.1%},"
+          f"shard_spread={min(per):.1%}..{max(per):.1%},"
+          f"full={full_us:.0f}us,speedup={full_us/prn_us:.1f}x,"
+          f"count_diff={c_full - c_prn}")
+"""
+
+
 def main() -> list[str]:
     rows = [csv_row("bench", "config", "us_per_call", "derived")]
     rng = np.random.default_rng(0)
@@ -228,6 +278,32 @@ def main() -> list[str]:
         "probe_pruned_kth", f"N={n_idx},K={k_idx},k=128", "-",
         f"scan_frac={cs.stats()['scan_fraction']:.1%},"
         f"err={abs(kth_full-kth_prn):.1e}"))
+
+    # per-shard pruned probes on a host-local mesh: the PR-4 composition.
+    # Forcing host devices must happen before jax initializes, so this
+    # section runs in a subprocess (same trick as repro.launch.dryrun);
+    # the child prints ROW|-delimited fields the parent re-emits as CSV.
+    # Acceptance: sharded-pruned scan fraction < 10% at <= 1% selectivity
+    # on a clustered 100k store over >= 4 host-local shards.
+    import os
+    import subprocess
+
+    child = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CHILD],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ,
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+             # without this, jax's accelerator-plugin probe can stall the
+             # child for minutes (see tests/conftest.py)
+             "JAX_PLATFORMS": "cpu",
+             "PYTHONPATH": str(_ROOT / "src")})
+    if child.returncode:
+        rows.append(csv_row("probe_sharded_pruned_cpu", "S=4", "-",
+                            f"FAILED:{child.stderr.strip()[-200:]}"))
+    else:
+        for line in child.stdout.splitlines():
+            if line.startswith("ROW|"):
+                rows.append(csv_row(*line.split("|")[1:]))
 
     # v5e analytic: per-chip probe time for a pod-scale store
     for total in (1e8, 1e9):

@@ -9,8 +9,12 @@ Scans README.md and docs/*.md for shell commands (``python -m pkg.mod``,
     module's source (argparse drift),
   * README's pytest line disagrees with ROADMAP.md's tier-1 command,
   * a load-bearing serving flag (``REQUIRED_FLAGS``) is no longer shown in
-    any documented command — removing ``--concurrency`` or
-    ``--index-clusters`` from the docs is drift in the other direction.
+    any documented command — removing ``--concurrency``,
+    ``--index-clusters`` or ``--shards`` from the docs is drift in the
+    other direction,
+  * a load-bearing counter surface (``REQUIRED_TOPICS``) is no longer
+    described anywhere in README/docs — e.g. the per-shard scan-fraction
+    counters the sharded index (PR 4) exposes must stay documented.
 
 Run directly (``python scripts/check_docs.py``) or via
 ``python scripts/smoke_all.py --check-docs``. Exit code 1 on any drift.
@@ -33,7 +37,17 @@ _PYTEST = re.compile(r"python -m pytest[^\n`]*")
 # module -> flags the docs must keep showing in at least one command (the
 # serving entrypoints users copy-paste; silently dropping one is drift too)
 REQUIRED_FLAGS = {
-    "repro.launch.serve": ("--concurrency", "--index-clusters"),
+    "repro.launch.serve": ("--concurrency", "--index-clusters", "--shards"),
+}
+
+# substrings README/docs must keep mentioning somewhere (operator-facing
+# observability surfaces: dropping the words means nobody can find the
+# counters) -> the reason shown on failure
+REQUIRED_TOPICS = {
+    "per-shard scan fraction": "the sharded index's per_shard counters "
+                               "(index.stats()['per_shard'], printed by "
+                               "serve --shards at exit) must stay "
+                               "documented",
 }
 
 
@@ -89,6 +103,15 @@ def main() -> int:
             if flag not in seen_flags.get(mod, set()):
                 errors.append(f"README.md/docs: no documented `python -m "
                               f"{mod}` command shows `{flag}`")
+
+    # load-bearing counter/topic surfaces must stay described somewhere
+    all_text = "\n".join(
+        p.read_text().lower()
+        for p in [readme, *sorted((REPO / "docs").glob("*.md"))])
+    for topic, why in REQUIRED_TOPICS.items():
+        if topic.lower() not in all_text:
+            errors.append(f"README.md/docs: no mention of "
+                          f"\"{topic}\" — {why}")
 
     # tier-1 command in README must match ROADMAP's verbatim
     roadmap = (REPO / "ROADMAP.md").read_text()

@@ -1,11 +1,15 @@
 """Dev loop: run a reduced forward+train+prefill+decode for every arch on CPU,
 plus a batched semantic-histogram probe smoke (pallas-interpret vs xla vs
 per-predicate loop), a coalescer + predicate-cache smoke (cross-query
-micro-batching, LRU hits, B-tiled kernel parity), and a cluster-pruned
-index smoke (build + pruned-vs-full parity + sublinear scan fraction) so
-hot-path regressions surface here first. ``--check-docs`` additionally runs
+micro-batching, LRU hits, B-tiled kernel parity), a cluster-pruned
+index smoke (build + pruned-vs-full parity + sublinear scan fraction), and
+a sharded-pruned smoke (per-shard indexes on a 4-shard host mesh, in a
+subprocess so this process keeps its 1-device view) so hot-path regressions
+surface here first. ``--check-docs`` additionally runs
 scripts/check_docs.py (README/docs drift vs actual entrypoints)."""
 
+import os
+import subprocess
 import sys
 import traceback
 
@@ -185,6 +189,56 @@ def run_index_smoke():
           f"low-sel scan_fraction={frac:.0%}")
 
 
+_SHARDED_SMOKE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax.numpy as jnp
+from repro.core.histogram import SemanticHistogram
+from repro.core.synthetic import clustered_unit_vectors
+from repro.index import build_sharded_clustered_store
+from repro.launch.mesh import make_probe_mesh
+
+x, _ = clustered_unit_vectors(800, 64, n_centers=8, spread=0.2, seed=2)
+mesh = make_probe_mesh(4)
+sidx = build_sharded_clustered_store(x, 8, 4, iters=4, impl="xla")
+full = SemanticHistogram(jnp.asarray(x), mesh=mesh)
+pruned = SemanticHistogram(jnp.asarray(x), mesh=mesh, index=sidx)
+d = np.sort(1.0 - x @ x[3])
+thr_low = float(0.5 * (d[7] + d[8]))            # ~1% selectivity
+preds = x[:4]
+thrs = np.asarray([thr_low, 0.5, 1.0, 1.9], np.float32)
+cf, tf = full.probe_batch(preds, thrs, k=6)
+cp, tp = pruned.probe_batch(preds, thrs, k=6)
+assert (np.asarray(cf) == np.asarray(cp)).all()
+assert np.array_equal(np.asarray(tf), np.asarray(tp))
+assert pruned.kth_smallest_distance(x[3], 9) == \\
+    full.kth_smallest_distance(x[3], 9)
+sidx.reset_stats()
+assert pruned.count_within(x[3], thr_low) == full.count_within(x[3], thr_low)
+st = sidx.stats()
+assert st["scan_fraction"] < 0.5, st["scan_fraction"]
+assert len(st["per_shard"]) == 4
+print(f"{st['scan_fraction']:.0%}")
+"""
+
+
+def run_sharded_smoke():
+    """Per-shard pruned probes over a 4-shard host-local mesh: sharded-
+    pruned counts/top-k/kth bitwise equal the sharded full scan, low-
+    selectivity probes scan a fraction per shard. Runs in a subprocess —
+    the forced device count must precede jax init, and this process must
+    keep seeing 1 device (JAX_PLATFORMS=cpu skips the multi-minute
+    accelerator-plugin probe in the child)."""
+    env = {**os.environ, "JAX_PLATFORMS": "cpu"}
+    env.pop("XLA_FLAGS", None)          # the child sets its own
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SMOKE],
+                       capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    frac = r.stdout.strip().splitlines()[-1]
+    print(f"OK  sharded_index            pruned==full over 4 shards, "
+          f"low-sel scan_fraction={frac}")
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     fails = []
@@ -194,7 +248,8 @@ if __name__ == "__main__":
         if check_docs_main() != 0:
             fails.append("check_docs")
     archs = argv or list(ASSIGNED)
-    for smoke in (run_probe_smoke, run_coalescer_smoke, run_index_smoke):
+    for smoke in (run_probe_smoke, run_coalescer_smoke, run_index_smoke,
+                  run_sharded_smoke):
         try:
             smoke()
         except Exception:

@@ -32,6 +32,17 @@ stay exactly equal to the full scan (the bounds are conservative by
 cluster scanning with early termination (§3.2 threshold calibration without
 the full pass).
 
+Sharded pruning (PR 4): at pod scale the two subsystems compose. Build a
+``repro.index.ShardedClusteredStore`` (one k-means sub-index per contiguous
+shard row-block) and construct with ``mesh=`` + ``index=``: every probe
+plans all shards on the host (exact f64 Cauchy-Schwarz bounds per shard),
+gathers only boundary segments into a per-shard bucket, and launches ONE
+shard_map whose body scans the local bucket via the masked cosine_topk
+kernels before the same O(B*k) psum/all-gather combine — bitwise equal to
+the full-scan sharded path, a fraction of the rows per chip. ``mesh=``
+without an index routes through ``make_sharded_probe`` (full scan, local
+kernels + tiny collectives). Per-shard scan fractions: ``index.stats()``.
+
 Serving layer (PR 2): ``probe_batch`` is cache-aware — construct with
 ``cache=PredicateCache(...)`` (see ``repro.launch.coalescer``; any object
 with the same ``key``/``get``/``put`` surface works, the histogram only
@@ -81,6 +92,33 @@ def _local_probe_batch(store, preds, thresholds, k):
     return counts, -neg_top
 
 
+def _masked_local_probe(store, n_valid, pred, thresholds, k):
+    """``_local_probe`` over the first ``n_valid`` rows of a scan buffer.
+
+    The einsum's dot reduction is row-local, so each valid row's distance is
+    bitwise the distance ``_local_probe`` computes for that row in a full
+    scan — the invariant the pruned sharded path's parity rests on. Dead
+    rows score +inf (never counted, never in the top-k)."""
+    sims = jnp.einsum("nd,d->n", store.astype(f32), pred.astype(f32))
+    dists = jnp.where(jnp.arange(store.shape[0]) < n_valid,
+                      1.0 - sims, jnp.inf)
+    counts = (dists[None, :] <= thresholds[:, None]).sum(axis=1)
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    return counts, -neg_top
+
+
+def _masked_local_probe_batch(store, n_valid, preds, thresholds, k):
+    """Batched twin of ``_masked_local_probe`` (mirrors the ``nd,bd->bn``
+    contraction of ``_local_probe_batch`` so pruned batched scans stay
+    bitwise the full batched scan's per-row distances)."""
+    sims = jnp.einsum("nd,bd->bn", store.astype(f32), preds.astype(f32))
+    dists = jnp.where(jnp.arange(store.shape[0])[None, :] < n_valid,
+                      1.0 - sims, jnp.inf)
+    counts = (dists[:, None, :] <= thresholds[:, :, None]).sum(axis=-1)
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    return counts, -neg_top
+
+
 # Module-level jitted probes: shared across every SemanticHistogram instance
 # (jax.jit caches traces per (shapes, static k) on the *function object*, so
 # hoisting out of __post_init__ removes the per-instance retrace).
@@ -97,14 +135,41 @@ def _probe_batch_xla(store, preds, thresholds, *, k: int):
 @dataclasses.dataclass
 class SemanticHistogram:
     embeddings: jax.Array        # (N, d) unit vectors
-    mesh: object | None = None   # sharded probe when set
+    mesh: object | None = None   # sharded probes when set
     impl: str = "xla"            # xla | pallas (interpret on CPU)
     cache: object | None = None  # PredicateCache-like (duck-typed)
-    index: object | None = None  # ClusteredStore: pruned (still exact) probes
+    index: object | None = None  # ClusteredStore (single-device) or
+    #                              ShardedClusteredStore (with mesh=)
 
     def __post_init__(self):
         self.n = self.embeddings.shape[0]
+        self._sharded_probes = {}    # (pruned, batched, k) -> callable
+        self._store_sharded = None   # lazily placed (full or reordered)
+        if self.mesh is not None:
+            self._data_axes = _mesh_data_axes(self.mesh)
+            n_shards = 1
+            for a in self._data_axes:
+                n_shards *= self.mesh.shape[a]
+            self._n_shards = n_shards
+            if self.n % n_shards:
+                raise ValueError(
+                    f"store rows ({self.n}) must divide the mesh's "
+                    f"{n_shards} data shards evenly")
         if self.index is not None:
+            sharded_index = hasattr(self.index, "shards")
+            if sharded_index and self.mesh is None:
+                raise ValueError(
+                    "a ShardedClusteredStore index needs mesh=... (use "
+                    "build_clustered_store for single-device probing)")
+            if self.mesh is not None and not sharded_index:
+                raise ValueError(
+                    "mesh=... needs a ShardedClusteredStore index (use "
+                    "build_sharded_clustered_store, one sub-index per "
+                    "shard)")
+            if sharded_index and self.index.n_shards != self._n_shards:
+                raise ValueError(
+                    f"index has {self.index.n_shards} shards, mesh has "
+                    f"{self._n_shards} — rebuild the index for this mesh")
             if self.index.n != self.n:
                 raise ValueError(
                     f"index holds {self.index.n} rows, store has {self.n} — "
@@ -121,10 +186,56 @@ class SemanticHistogram:
                         "index embeddings disagree with the store — build "
                         "the ClusteredStore from the same embeddings")
 
+    # -------------------- sharded routing --------------------
+
+    def _sharded_probe(self, *, k: int, batched: bool):
+        """Build-and-cache one sharded probe per (pruned, batched, k).
+
+        Sharded probes always run the scan under shard_map with O(B*k)
+        collectives; with a ShardedClusteredStore attached the scan is the
+        pruned masked-kernel launch, bitwise equal to the full-scan sharded
+        path for the same ``impl``."""
+        key = (self.index is not None, batched, k)
+        probe = self._sharded_probes.get(key)
+        if probe is None:
+            if self.index is not None:
+                if self._store_sharded is None:
+                    from jax.sharding import NamedSharding, PartitionSpec
+                    self._store_sharded = jax.device_put(
+                        self.index.embeddings,
+                        NamedSharding(self.mesh,
+                                      PartitionSpec(self._data_axes)))
+                probe = make_sharded_pruned_probe(
+                    self.mesh, self.index, k=k, batched=batched,
+                    impl=self.impl, store=self._store_sharded)
+            else:
+                if self._store_sharded is None:
+                    from jax.sharding import NamedSharding, PartitionSpec
+                    self._store_sharded = jax.device_put(
+                        self.embeddings,
+                        NamedSharding(self.mesh,
+                                      PartitionSpec(self._data_axes)))
+                inner = jax.jit(make_sharded_probe(
+                    self.mesh, k=k, batched=batched, impl=self.impl))
+                store = self._store_sharded
+
+                def probe(preds, thresholds, *, need_topk=True,
+                          _inner=inner, _store=store):
+                    return _inner(_store, jnp.asarray(preds),
+                                  jnp.asarray(thresholds, f32))
+
+            self._sharded_probes[key] = probe
+        return probe
+
     # -------------------- core fused probe --------------------
 
     def _probe(self, pred: jax.Array, thresholds: jax.Array, *, k: int,
                need_topk: bool = True):
+        if self.mesh is not None:
+            counts, topk = self._sharded_probe(k=k, batched=False)(
+                np.asarray(pred, np.float32),
+                np.asarray(thresholds, np.float32), need_topk=need_topk)
+            return jnp.asarray(counts), jnp.asarray(topk)
         if self.index is not None:
             # scalar_kernel: match the scalar full-scan kernel bitwise;
             # need_topk=False (count-only callers) lets a fully-resolved
@@ -142,6 +253,11 @@ class SemanticHistogram:
 
     def _probe_batched(self, preds: jax.Array, thresholds: jax.Array, *,
                        k: int, need_topk: bool = True):
+        if self.mesh is not None:
+            counts, topk = self._sharded_probe(k=k, batched=True)(
+                np.asarray(preds, np.float32),
+                np.asarray(thresholds, np.float32), need_topk=need_topk)
+            return jnp.asarray(counts), jnp.asarray(topk)
         if self.index is not None:
             counts, topk, _ = self.index.probe_pruned(
                 np.asarray(preds, np.float32),
@@ -169,6 +285,14 @@ class SemanticHistogram:
 
     def kth_smallest_distance(self, pred: np.ndarray, k: int) -> float:
         k = max(1, min(k, self.n))
+        if self.mesh is not None:
+            # sharded calibration: one thr=0 probe — each shard contributes
+            # its exact local top-min(k, shard_rows) (pruned: via the top-k
+            # cover), and the O(k) combine resorts, so topk[k-1] is the
+            # exact global k-th, bitwise the full-pass value
+            _, smallest = self._probe(
+                jnp.asarray(pred), jnp.zeros((1,), f32), k=int(k))
+            return float(smallest[k - 1])
         if self.index is not None:
             # bound-ordered cluster scan, early-terminated — same value as
             # the full pass, a fraction of the rows
@@ -255,7 +379,16 @@ class SemanticHistogram:
         return np.asarray(1.0 - sims)
 
 
-def make_sharded_probe(mesh, *, k: int = 128, batched: bool = False):
+def _mesh_data_axes(mesh) -> tuple[str, ...]:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not axes:
+        raise ValueError(f"mesh {dict(mesh.shape)} has no 'pod'/'data' axis "
+                         f"to shard the store over")
+    return axes
+
+
+def make_sharded_probe(mesh, *, k: int = 128, batched: bool = False,
+                       impl: str = "xla", interpret: bool = True):
     """shard_map probe over a ('pod','data')-sharded store: local fused pass,
     psum of counts, all-gather + resort of per-shard top-k. Used by the probe
     scaling benchmark and the multi-pod serve path.
@@ -264,25 +397,49 @@ def make_sharded_probe(mesh, *, k: int = 128, batched: bool = False):
     ``batched=True``: preds (B, d), thresholds (B, T) -> (counts (B, T),
     top (B, k)) — psum of the (B, T) counts, all-gather of the per-shard
     (B, k) top-k along a fresh shard axis, then a per-predicate resort.
-    Collective traffic stays O(B*k), independent of the store size."""
+    Collective traffic stays O(B*k), independent of the store size.
+
+    ``impl='pallas'`` scans each shard with the fused cosine_topk kernels
+    (interpret mode on CPU) instead of the jnp einsum — the kernel-shape
+    twin the pruned sharded path (``make_sharded_pruned_probe``) must match
+    for bitwise parity. Each shard's local top-k is clamped to its row
+    count, so ``k`` may exceed the per-shard rows (threshold calibration
+    asks for k up to N); the merged result is still the exact global top-k.
+    """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    data_axes = _mesh_data_axes(mesh)
+
+    def _scan(store, preds, thresholds, kk):
+        if impl == "pallas":
+            from repro.kernels.cosine_topk import ops as ct
+
+            if preds.ndim == 2:
+                return ct.cosine_probe_batch(store, preds, thresholds, k=kk,
+                                             interpret=interpret)
+            return ct.cosine_probe(store, preds, thresholds, k=kk,
+                                   interpret=interpret)
+        if preds.ndim == 2:
+            return _local_probe_batch(store, preds, thresholds, kk)
+        return _local_probe(store, preds, thresholds, kk)
 
     def probe(store, pred, thresholds):
-        counts, local_top = _local_probe(store, pred, thresholds, k)
+        kk = min(k, store.shape[0])
+        counts, local_top = _scan(store, pred, thresholds, kk)
         counts = jax.lax.psum(counts, data_axes)
         gathered = jax.lax.all_gather(local_top, data_axes, tiled=True)
-        return counts, -jax.lax.top_k(-gathered, k)[0]
+        return counts, -jax.lax.top_k(-gathered,
+                                      min(k, gathered.shape[0]))[0]
 
     def probe_batch(store, preds, thresholds):
-        counts, local_top = _local_probe_batch(store, preds, thresholds, k)
+        kk = min(k, store.shape[0])
+        counts, local_top = _scan(store, preds, thresholds, kk)
         counts = jax.lax.psum(counts, data_axes)
-        # (nshards, B, k) -> (B, nshards*k) -> per-predicate resort
+        # (nshards, B, kk) -> (B, nshards*kk) -> per-predicate resort
         gathered = jax.lax.all_gather(local_top, data_axes)
         flat = jnp.moveaxis(gathered, 0, 1).reshape(local_top.shape[0], -1)
-        return counts, -jax.lax.top_k(-flat, k)[0]
+        return counts, -jax.lax.top_k(-flat, min(k, flat.shape[1]))[0]
 
     return shard_map(
         probe_batch if batched else probe, mesh=mesh,
@@ -290,3 +447,140 @@ def make_sharded_probe(mesh, *, k: int = 128, batched: bool = False):
         out_specs=(P(), P()),
         check_rep=False,
     )
+
+
+def make_sharded_pruned_probe(mesh, index, *, k: int = 128,
+                              batched: bool = False, impl: str = "xla",
+                              interpret: bool = True, store=None):
+    """Cluster-pruned twin of ``make_sharded_probe`` — sublinear per shard.
+
+    ``index`` is a ``repro.index.ShardedClusteredStore`` whose shard blocks
+    match the mesh's ('pod','data') row partition. The returned
+    ``probe(preds, thresholds, need_topk=True)`` plans every shard on the
+    host (exact f64 Cauchy-Schwarz bounds — x64 is off inside traces, and
+    the plan is O(S*K*B) host flops), gathers each shard's boundary-union
+    segments into one power-of-two bucket, and launches ONE shard_map whose
+    body scans only its local bucket through the masked cosine_topk kernels
+    (``impl='pallas'``) or their jnp twins (``impl='xla'``), then runs the
+    same O(B*k) psum / all-gather combine as the full-scan path. Counts and
+    top-k are bitwise equal to ``make_sharded_probe`` with the same
+    ``impl`` — all-in/all-out clusters are resolved by bounds (eps covers
+    the f32 kernel roundoff), and the per-shard top-k cover keeps each
+    shard's local top-k exact.
+
+    The bucket is uniform across shards (shard_map needs one shape), so
+    the launch costs max-over-shards boundary rows per chip — uneven
+    boundary work shows up in ``index.stats()['per_shard']``, not in
+    correctness. Bucket sizes are power-of-two, so the jit compiles
+    O(log shard_rows) shapes per (k, batched). ``need_topk=False``
+    (count-only callers) skips the top-k cover; a probe whose every cluster
+    resolves by bounds then launches nothing at all and the returned top-k
+    is +inf. ``store`` overrides the pre-placed reordered store (it must be
+    ``index.embeddings`` under the mesh's data sharding); by default it is
+    placed here once per factory.
+
+    The gather and the scan are two separate device dispatches on purpose:
+    fused into one program, XLA folds the segment gather into the distance
+    contraction and is then free to re-associate the dot's reduction —
+    the per-row distances drift an ulp from the full scan's and bitwise
+    parity dies (optimization_barrier does not stop it). Materializing the
+    per-shard buckets between two shard_maps pins the scan's operand, the
+    same reason ``ClusteredStore._gather`` runs its ``jnp.take`` eagerly
+    outside the jitted masked probe.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    data_axes = _mesh_data_axes(mesh)
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    if n_shards != index.n_shards:
+        raise ValueError(
+            f"index has {index.n_shards} shards but the mesh's data axes "
+            f"hold {n_shards} devices — rebuild the index for this mesh")
+    kk = max(1, min(int(k), index.shard_rows))   # per-shard cover / gather
+    k_final = max(1, min(int(k), index.n))
+    if store is None:
+        store = jax.device_put(index.embeddings,
+                               NamedSharding(mesh, P(data_axes)))
+
+    gather = jax.jit(shard_map(
+        lambda store_l, idx_l: jnp.take(store_l, idx_l[0], axis=0),
+        mesh=mesh, in_specs=(P(data_axes), P(data_axes)),
+        out_specs=P(data_axes), check_rep=False,
+    ))
+
+    def body(buf, nv_l, extra_l, preds, thr):
+        if impl == "pallas":
+            from repro.kernels.cosine_topk import ops as ct
+
+            if batched:
+                counts, top = ct.cosine_probe_batch_masked(
+                    buf, nv_l[0], preds, thr, k=kk, interpret=interpret)
+            else:
+                counts, top = ct.cosine_probe_masked(
+                    buf, nv_l[0], preds, thr, k=kk, interpret=interpret)
+        elif batched:
+            counts, top = _masked_local_probe_batch(buf, nv_l[0], preds,
+                                                    thr, kk)
+        else:
+            counts, top = _masked_local_probe(buf, nv_l[0], preds, thr, kk)
+        counts = jax.lax.psum(counts.astype(jnp.int32) + extra_l[0],
+                              data_axes)
+        if batched:
+            gathered = jax.lax.all_gather(top, data_axes)   # (S, B, kk)
+            flat = jnp.moveaxis(gathered, 0, 1).reshape(top.shape[0], -1)
+            return counts, -jax.lax.top_k(-flat, k_final)[0]
+        flat = jax.lax.all_gather(top, data_axes, tiled=True)   # (S*kk,)
+        return counts, -jax.lax.top_k(-flat, k_final)[0]
+
+    sharded = jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(data_axes), P(data_axes), P(data_axes), P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    ))
+
+    def probe(preds, thresholds, *, need_topk: bool = True):
+        preds = np.asarray(preds, np.float32)
+        thr = np.asarray(thresholds, np.float32)
+        if batched and thr.ndim == 1:
+            thr = thr[:, None]
+        p2 = preds if batched else preds[None, :]
+        t2 = thr if batched else thr[None, :]
+        b, t = t2.shape
+        plans = index.plan_shards(p2, t2, k=kk, need_topk=need_topk)
+        m_max = max(p.m for p in plans)
+        if m_max == 0:              # every cluster on every shard resolved
+            counts = np.sum([p.extra for p in plans],
+                            axis=0).astype(np.int32)        # (B, T)
+            top = np.full((b, k_final), np.inf, np.float32)
+            index.record(plans, launched=False)
+            return (counts, top) if batched else (counts[0], top[0])
+        if all(p.m == index.shard_rows for p in plans):
+            # every shard promoted to a full scan (high selectivity prunes
+            # nothing): the store itself is the buffer — no gather copy,
+            # exactly the worst case of the full-scan path and no more
+            buf = store
+            nv = np.full(n_shards, index.shard_rows, np.int32)
+        else:
+            bucket = min(max(128, 1 << (max(m_max, kk) - 1).bit_length()),
+                         index.shard_rows)
+            idx = np.zeros((n_shards, bucket), np.int32)
+            nv = np.zeros(n_shards, np.int32)
+            for s, plan in enumerate(plans):
+                if plan.m:
+                    idx[s, :plan.m] = index.shards[s].scan_rows(
+                        plan.scan_ids)
+                    nv[s] = plan.m
+            buf = gather(store, jnp.asarray(idx))   # (S*bucket, d) sharded
+        extra = np.stack([p.extra.astype(np.int32) for p in plans])
+        if not batched:
+            extra = extra[:, 0, :]                          # (S, T)
+        counts, top = sharded(buf, jnp.asarray(nv), jnp.asarray(extra),
+                              jnp.asarray(preds), jnp.asarray(thr))
+        index.record(plans, launched=True)
+        return np.asarray(counts), np.asarray(top)
+
+    return probe

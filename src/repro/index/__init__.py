@@ -1,5 +1,19 @@
 """Store indexes that make probes sublinear without giving up exactness."""
 
-from repro.index.clustered import ClusteredStore, build_clustered_store
+from repro.index.clustered import (
+    ClusteredStore,
+    ScanPlan,
+    build_clustered_store,
+)
+from repro.index.sharded import (
+    ShardedClusteredStore,
+    build_sharded_clustered_store,
+)
 
-__all__ = ["ClusteredStore", "build_clustered_store"]
+__all__ = [
+    "ClusteredStore",
+    "ScanPlan",
+    "ShardedClusteredStore",
+    "build_clustered_store",
+    "build_sharded_clustered_store",
+]

@@ -64,7 +64,7 @@ from repro.kernels.kmeans.ops import kmeans
 
 f32 = jnp.float32
 
-__all__ = ["ClusteredStore", "build_clustered_store"]
+__all__ = ["ClusteredStore", "ScanPlan", "build_clustered_store"]
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -90,6 +90,25 @@ def _masked_probe_xla(store, n_valid, pred, thr, *, k: int):
     counts = (dists[None, :] <= thr[:, None]).sum(axis=1)
     neg_top, _ = jax.lax.top_k(-dists, k)
     return counts.astype(jnp.int32), -neg_top
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanPlan:
+    """Host-side classification of one (batched) probe against the clusters.
+
+    The plan is what survives the exact bound arithmetic: which clusters the
+    kernel must actually scan (``scan_ids`` — boundary clusters, plus the
+    top-k cover when the caller needs top-k), how many rows that is (``m``),
+    and the counts already *resolved* by bounds alone (``extra`` — all-in
+    sizes of clusters outside the scan union). It deliberately carries no
+    device buffers, so the sharded probe can plan every shard on the host
+    and launch one shard_map over the per-shard gathered segments.
+    """
+
+    scan_ids: np.ndarray        # cluster ids the kernel must scan (union)
+    m: int                      # rows those clusters hold
+    extra: np.ndarray           # (B, T) int64 — bound-resolved counts
+    boundary_clusters: int      # boundary classifications across the batch
 
 
 @dataclasses.dataclass
@@ -161,6 +180,55 @@ class ClusteredStore:
             cover[b] = nonempty & (lb[b] <= tau_k + self.eps)
         return cover
 
+    # ------------------------------------------------------------ planning
+
+    def plan_scan(self, preds: np.ndarray, thr: np.ndarray, *, k: int = 1,
+                  need_topk: bool = True) -> ScanPlan:
+        """Classify every cluster for a batched probe; return the ScanPlan.
+
+        preds (B, d); thr (B, T). All-in / all-out clusters resolve to
+        ``extra`` counts without touching a row; the scan union is the
+        boundary clusters across the batch (plus the top-k cover when
+        ``need_topk``). A near-total union (>= 90% of rows) is promoted to
+        the whole store so the gather below degenerates to the contiguous
+        embeddings — the kernel then counts every cluster row-by-row, which
+        is still exact, and the worst case costs ~the full scan and no more.
+        """
+        lb, ub = self.cluster_bounds(preds)                  # (B, K) f64
+        thr64 = np.asarray(thr, np.float64)
+        allin = ub[:, :, None] <= thr64[:, None, :] - self.eps   # (B, K, T)
+        allout = lb[:, :, None] > thr64[:, None, :] + self.eps
+        nonempty = self.sizes > 0
+        boundary = (~(allin | allout)).any(axis=2) & nonempty[None, :]
+        scan_bk = boundary.copy()                            # (B, K)
+        if need_topk:
+            scan_bk |= self._topk_cover(lb, ub, max(1, min(int(k), self.n)))
+        in_union = scan_bk.any(axis=0) & nonempty            # (K,)
+        scan_ids = np.flatnonzero(in_union)
+        if int(self.sizes[scan_ids].sum()) >= 0.9 * self.n:
+            in_union = nonempty.copy()
+            scan_ids = np.flatnonzero(in_union)
+        # clusters resolved by bounds alone: add all-in sizes. The scan
+        # buffer is scored against *every* predicate, so any cluster in the
+        # union — even one this predicate classified all-in — is counted
+        # row-by-row by the kernel, exactly; only clusters outside the
+        # union contribute via their bound classification.
+        resolved = nonempty[None, :] & ~in_union[None, :]    # (B, K)
+        extra = ((allin & resolved[:, :, None]).astype(np.int64)
+                 * self.sizes[None, :, None]).sum(axis=1)    # (B, T)
+        return ScanPlan(scan_ids=scan_ids,
+                        m=int(self.sizes[scan_ids].sum()), extra=extra,
+                        boundary_clusters=int(boundary.sum()))
+
+    def scan_rows(self, cluster_ids: np.ndarray) -> np.ndarray:
+        """Local row indices of the given clusters' segments, concatenated
+        in cluster order (the layout is cluster-contiguous)."""
+        if not len(cluster_ids):
+            return np.empty(0, np.int64)
+        return np.concatenate(
+            [np.arange(self.offsets[c], self.offsets[c + 1])
+             for c in cluster_ids])
+
     # -------------------------------------------------------------- scans
 
     def _gather(self, cluster_ids: np.ndarray) -> tuple[jax.Array, int]:
@@ -174,9 +242,7 @@ class ClusteredStore:
         m = int(self.sizes[cluster_ids].sum())
         if m == self.n:
             return self.embeddings, m
-        rows = np.concatenate(
-            [np.arange(self.offsets[c], self.offsets[c + 1])
-             for c in cluster_ids]) if len(cluster_ids) else np.empty(0, int)
+        rows = self.scan_rows(cluster_ids)
         bucket = max(128, 1 << max(0, m - 1).bit_length())
         pad = np.zeros(bucket - m, np.int64)
         buf = jnp.take(self.embeddings,
@@ -236,26 +302,10 @@ class ClusteredStore:
             thr = thr[:, None]
         b, t = thr.shape
         k = max(1, min(int(k), self.n))
-        lb, ub = self.cluster_bounds(preds)                 # (B, K) f64
-        thr64 = thr.astype(np.float64)
-        allin = ub[:, :, None] <= thr64[:, None, :] - self.eps   # (B, K, T)
-        allout = lb[:, :, None] > thr64[:, None, :] + self.eps
-        nonempty = self.sizes > 0
-        boundary = (~(allin | allout)).any(axis=2) & nonempty[None, :]
-        scan_bk = boundary.copy()                           # (B, K)
-        if need_topk:
-            scan_bk |= self._topk_cover(lb, ub, k)
-        in_union = scan_bk.any(axis=0) & nonempty           # (K,)
-        scan_ids = np.flatnonzero(in_union)
-        # a near-total scan gains nothing from pruning: promote it to the
-        # whole store so _gather returns the contiguous embeddings with no
-        # copy — every cluster is then counted by the kernel (still exact)
-        if int(self.sizes[scan_ids].sum()) >= 0.9 * self.n:
-            in_union = nonempty.copy()
-            scan_ids = np.flatnonzero(in_union)
+        plan = self.plan_scan(preds, thr, k=k, need_topk=need_topk)
 
-        if len(scan_ids):
-            buf, m = self._gather(scan_ids)
+        if len(plan.scan_ids):
+            buf, m = self._gather(plan.scan_ids)
             counts_s, topk = self._masked_probe(
                 buf, m, jnp.asarray(preds), jnp.asarray(thr), k=k,
                 impl=impl, interpret=interpret, scalar=scalar_kernel)
@@ -264,23 +314,16 @@ class ClusteredStore:
             counts_s = np.zeros((b, t), np.int32)
             topk = jnp.full((b, k), jnp.inf, f32)
 
-        # clusters resolved by bounds alone: add all-in sizes. The union
-        # buffer is scored against *every* predicate, so any cluster in the
-        # union — even one this predicate classified all-in — is already
-        # counted row-by-row by the kernel, exactly; only clusters outside
-        # the union contribute via their bound classification.
-        resolved = nonempty[None, :] & ~in_union[None, :]   # (B, K)
-        extra = ((allin & resolved[:, :, None]).astype(np.int64)
-                 * self.sizes[None, :, None]).sum(axis=1)   # (B, T)
-        counts = (np.asarray(counts_s, np.int64) + extra).astype(np.int32)
+        counts = (np.asarray(counts_s, np.int64) + plan.extra
+                  ).astype(np.int32)
 
         stats = {
-            "launches": 1 if len(scan_ids) else 0,
+            "launches": 1 if len(plan.scan_ids) else 0,
             "rows_scanned": m,
             "rows_full_equiv": self.n,
             "scan_fraction": m / max(1, self.n),
-            "scanned_clusters": int(len(scan_ids)),
-            "boundary_clusters": int(boundary.sum()),
+            "scanned_clusters": int(len(plan.scan_ids)),
+            "boundary_clusters": plan.boundary_clusters,
             "clusters": self.k_clusters,
             "batch": b,
         }

@@ -1,0 +1,174 @@
+"""Per-shard cluster-pruned index: sublinear probes that survive sharding.
+
+PR 3's ``ClusteredStore`` made single-device probes sublinear at low
+selectivity, but the pod-scale path (``make_sharded_probe``) still streamed
+every shard end to end — the two headline subsystems were mutually
+exclusive. This module shards the index itself:
+
+  partition    the (N, d) store is split into ``n_shards`` contiguous row
+               blocks — the SAME partition ``NamedSharding(mesh,
+               P(('pod','data')))`` induces, so shard s's sub-index
+               describes exactly the rows device s holds. Each block gets
+               its own k-means partition (a ``ClusteredStore`` over the
+               local slice): cluster-contiguous local layout, f64 centroids
+               and radii *per shard*.
+
+  why per-shard radii   a global clustering would scatter a cluster's
+               members across shards, so a boundary cluster would drag
+               every shard into the scan. Clustering each shard's rows
+               independently keeps segments local (a boundary segment is
+               one contiguous slice of one device's memory) and lets the
+               bound classification prune *per shard* — shards whose local
+               clusters all resolve by bounds contribute zero scanned rows
+               to the launch, which is how scan fraction stays sublinear at
+               pod scale and how boundary work imbalance becomes visible
+               (see ``stats()['per_shard']``).
+
+  probe        ``repro.core.histogram.make_sharded_pruned_probe`` plans all
+               shards on the host (exact Cauchy-Schwarz bounds, f64 — jax
+               x64 is off, so bound arithmetic cannot live in the traced
+               body), gathers each shard's boundary segments into a common
+               power-of-two bucket, and launches ONE shard_map whose body
+               scans only the local bucket via the masked cosine_topk
+               kernels, then does the existing O(B*k) psum / all-gather
+               combine. Counts and top-k stay bitwise equal to the
+               full-scan sharded path.
+
+Stats: every shard's sub-index keeps its own thread-safe scan accounting
+(rows it actually streamed vs the rows a full shard scan would), aggregated
+by ``stats()`` with a ``per_shard`` breakdown — uneven boundary work across
+shards is the new perf surface, and the serve driver prints it at exit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.clustered import ClusteredStore, build_clustered_store
+
+__all__ = ["ShardedClusteredStore", "build_sharded_clustered_store"]
+
+
+@dataclasses.dataclass
+class ShardedClusteredStore:
+    """One ``ClusteredStore`` per contiguous shard row-block of the store.
+
+    ``embeddings`` is the reordered (N, d) store: shard blocks in order,
+    each block cluster-contiguous; place it with the mesh's data sharding
+    and every device holds exactly its sub-index's rows. ``perm`` maps
+    reordered row -> original row id (counts and top-k distances are
+    permutation-invariant, so results are interchangeable with any scan of
+    the original store). Attach to ``SemanticHistogram(mesh=..., index=...)``
+    to route every probe through the pruned sharded path.
+    """
+
+    shards: list[ClusteredStore]   # per-shard sub-index over its row block
+    shard_rows: int                # rows per shard (uniform)
+    embeddings: jax.Array          # (N, d) f32, shard-blocked + reordered
+    perm: np.ndarray               # (N,) original row ids in stored order
+
+    def __post_init__(self):
+        self.n = int(self.embeddings.shape[0])
+        self.n_shards = len(self.shards)
+        self.k_clusters = self.shards[0].k_clusters if self.shards else 0
+        self.eps = self.shards[0].eps if self.shards else 1e-4
+        self._lock = threading.Lock()
+        self._probes = 0
+        self._launches = 0
+
+    # ------------------------------------------------------------ planning
+
+    def plan_shards(self, preds: np.ndarray, thr: np.ndarray, *, k: int,
+                    need_topk: bool = True) -> list:
+        """One exact ``ScanPlan`` per shard for a (B, d) x (B, T) probe.
+
+        ``k`` is the per-shard top-k cover size (the combine gathers that
+        many candidates per shard), already clamped by the caller to the
+        shard row count.
+        """
+        return [s.plan_scan(preds, thr, k=k, need_topk=need_topk)
+                for s in self.shards]
+
+    # -------------------------------------------------------------- stats
+
+    def record(self, plans: list, *, launched: bool) -> None:
+        """Account one sharded probe: per-shard rows into each sub-index
+        (their scan fractions diverge when boundary work is uneven), the
+        probe/launch tally here."""
+        for shard, plan in zip(self.shards, plans):
+            shard._record({"launches": 1 if (launched and plan.m) else 0,
+                           "rows_scanned": plan.m if launched else 0,
+                           "rows_full_equiv": shard.n}, probes=1)
+        with self._lock:
+            self._probes += 1
+            self._launches += 1 if launched else 0
+
+    def stats(self) -> dict:
+        """Aggregate scan accounting + ``per_shard`` breakdown.
+
+        ``launches`` counts shard_map launches (one per probe that scanned
+        anything anywhere); ``per_shard[s]['scan_fraction']`` is shard s's
+        rows streamed over the rows a full shard scan would have streamed —
+        the spread across shards measures boundary-work imbalance.
+        """
+        per = [s.stats() for s in self.shards]
+        with self._lock:
+            d = {"probes": self._probes, "launches": self._launches}
+        d["rows_scanned"] = sum(p["rows_scanned"] for p in per)
+        d["rows_full_equiv"] = sum(p["rows_full_equiv"] for p in per)
+        d["scan_fraction"] = (d["rows_scanned"]
+                              / max(1, d["rows_full_equiv"]))
+        d["per_shard"] = [{"rows_scanned": p["rows_scanned"],
+                           "rows_full_equiv": p["rows_full_equiv"],
+                           "scan_fraction": p["scan_fraction"]}
+                          for p in per]
+        return d
+
+    def reset_stats(self) -> None:
+        for s in self.shards:
+            s.reset_stats()
+        with self._lock:
+            self._probes = 0
+            self._launches = 0
+
+
+def build_sharded_clustered_store(
+    embeddings: np.ndarray, k_clusters: int, n_shards: int, *,
+    iters: int = 8, seed: int = 0, impl: str = "pallas",
+    interpret: bool = True, eps: float = 1e-4, chunk_rows: int = 4096,
+) -> ShardedClusteredStore:
+    """K-means-partition each of ``n_shards`` contiguous row blocks.
+
+    The block partition matches ``NamedSharding(mesh, P(('pod','data')))``
+    row-major device order, so the reordered store can be placed on the
+    mesh and every device's slice is exactly its sub-index. ``k_clusters``
+    is per shard (size per-shard K by the local row count: K ~ sqrt(N/S)).
+    N must divide evenly — jax requires the same for the sharded store.
+    Per-shard k-means seeds differ so identical shard contents don't
+    collapse to identical (possibly bad) local optima.
+    """
+    x = np.asarray(embeddings, np.float32)
+    n = x.shape[0]
+    if n_shards < 1 or n % n_shards:
+        raise ValueError(
+            f"store rows ({n}) must divide evenly into n_shards "
+            f"({n_shards}) — same constraint as the mesh sharding")
+    rows = n // n_shards
+    shards, perm, parts = [], [], []
+    for s in range(n_shards):
+        cs = build_clustered_store(
+            x[s * rows:(s + 1) * rows], k_clusters, iters=iters,
+            seed=seed + s, impl=impl, interpret=interpret, eps=eps,
+            chunk_rows=chunk_rows)
+        shards.append(cs)
+        perm.append(s * rows + cs.perm)
+        parts.append(np.asarray(cs.embeddings))
+    return ShardedClusteredStore(
+        shards=shards, shard_rows=rows,
+        embeddings=jnp.asarray(np.concatenate(parts)),
+        perm=np.concatenate(perm))

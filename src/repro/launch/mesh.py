@@ -21,6 +21,24 @@ def make_local_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_probe_mesh(n_shards: int):
+    """1-D ('data',) mesh over ``n_shards`` local devices — the sharded
+    histogram-probe mesh (``serve --shards``, the sharded-index tests and
+    bench). On CPU, run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to get N
+    host-local shards; on real hardware this takes the first N chips."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    if n_shards < 1 or n_shards > len(devs):
+        raise ValueError(
+            f"n_shards={n_shards} but {len(devs)} device(s) visible — set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_shards} "
+            f"(before jax initializes) for host-local shards")
+    return Mesh(np.asarray(devs[:n_shards]), ("data",))
+
+
 def mesh_axis_sizes(mesh) -> dict:
     return dict(mesh.shape)
 

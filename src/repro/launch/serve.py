@@ -32,6 +32,16 @@ exact distance bounds, scanning only boundary clusters — identical counts,
 a fraction of the rows at low selectivity. The run ends with the index's
 scan-fraction counters. Works with every mode above (the coalescer and
 cache sit in front of the pruned probe unchanged). Tuning: docs/index.md.
+
+``--shards S`` (PR 4) runs every probe sharded over an S-device
+('data',) mesh (``repro.core.histogram.make_sharded_probe``); on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=S`` first to fake S
+host devices. Composed with ``--index-clusters K`` it builds a
+*per-shard* pruned index (``repro.index.ShardedClusteredStore``, K
+k-means clusters per shard): each probe plans all shards on the host and
+one shard_map scans only the boundary segments — the run then ends with
+the aggregate AND per-shard scan-fraction counters, whose spread shows
+boundary-work imbalance across shards. See docs/index.md.
 """
 
 from __future__ import annotations
@@ -65,10 +75,25 @@ from repro.launch.coalescer import (
 
 def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
                 rate: float = 0.6, spec_steps: int = 600, seed: int = 0,
-                impl: str = "xla", index_clusters: int = 0):
+                impl: str = "xla", index_clusters: int = 0,
+                shards: int = 0):
     corpus = make_corpus(dataset, n_images=n_images, seed=seed)
+    mesh = None
+    if shards > 0:
+        from repro.launch.mesh import make_probe_mesh
+
+        mesh = make_probe_mesh(shards)
+        print(f"mesh: {shards} probe shard(s), "
+              f"{corpus.images.shape[0] // shards} rows each")
     index = None
-    if index_clusters > 0:
+    if index_clusters > 0 and mesh is not None:
+        from repro.index import build_sharded_clustered_store
+
+        index = build_sharded_clustered_store(
+            corpus.images, index_clusters, shards, seed=seed, impl=impl)
+        print(f"index: {index.n_shards} shards x {index.k_clusters} "
+              f"clusters over {index.n} rows")
+    elif index_clusters > 0:
         from repro.index import build_clustered_store
 
         index = build_clustered_store(corpus.images, index_clusters,
@@ -76,7 +101,7 @@ def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
         print(f"index: {index.k_clusters} clusters over {index.n} rows "
               f"(radii p50={float(np.median(index.radii)):.3f})")
     hist = SemanticHistogram(jax.numpy.asarray(corpus.images), impl=impl,
-                             index=index)
+                             mesh=mesh, index=index)
     X, y = specificity_dataset(corpus, n_samples=2000, seed=seed)
     from repro.configs.paper_stack import SpecificityModelConfig
 
@@ -181,7 +206,13 @@ def main(argv=None) -> None:
                     help=">0: build a cluster-pruned probe index with this "
                          "many k-means clusters — probes scan only boundary "
                          "clusters (exact counts, sublinear at low "
-                         "selectivity)")
+                         "selectivity); with --shards, K clusters per shard")
+    ap.add_argument("--shards", type=int, default=0,
+                    help=">0: shard every probe over this many devices "
+                         "(('data',) mesh; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count first). "
+                         "Composes with --index-clusters: per-shard pruned "
+                         "probes, per-shard scan counters at exit")
     ap.add_argument("--concurrency", type=int, default=1,
                     help=">1: plan queries from this many threads through "
                          "a shared predicate coalescer + LRU cache")
@@ -207,7 +238,8 @@ def main(argv=None) -> None:
           f"(probe impl={args.impl})...")
     corpus, estimators = build_stack(args.dataset, seed=args.seed,
                                      impl=args.impl,
-                                     index_clusters=args.index_clusters)
+                                     index_clusters=args.index_clusters,
+                                     shards=args.shards)
     queries = generate_queries(corpus, n_queries=args.queries,
                                n_filters=args.filters, seed=args.seed)
     if args.concurrency > 1:
@@ -226,6 +258,12 @@ def main(argv=None) -> None:
               f"{s['rows_scanned']}/{s['rows_full_equiv']} rows scanned "
               f"(scan_fraction={s['scan_fraction']:.0%}) across "
               f"{s['launches']} kernel launches")
+        if "per_shard" in s:
+            fr = [p["scan_fraction"] for p in s["per_shard"]]
+            print("per-shard scan fraction: ["
+                  + ", ".join(f"{f:.0%}" for f in fr)
+                  + f"] (spread {max(fr) - min(fr):.0%} = boundary-work "
+                  f"imbalance across shards)")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,54 @@
 # Smoke tests and benches must see 1 CPU device — do NOT set
-# xla_force_host_platform_device_count here (dryrun.py sets it for itself).
+# xla_force_host_platform_device_count here (multi-device tests run their
+# scripts through the run_multidevice fixture's subprocess instead, and
+# dryrun.py sets it for itself).
+import json
+import subprocess
+import sys
+import textwrap
+
 import numpy as np
 import pytest
+
+# Prepended to every run_multidevice script: forces the device count before
+# jax initializes and imports the names every multi-device script uses.
+_MULTIDEVICE_PRELUDE = """\
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import jax, jax.numpy as jnp, numpy as np, json
+from jax.sharding import NamedSharding, PartitionSpec as P
+"""
 
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def run_multidevice():
+    """Run a script under N forced host devices in a subprocess.
+
+    The main test process must keep its single-device view (jax locks the
+    device count at first init), so every multi-device test runs its body
+    out-of-process. The script sees ``jax``/``jnp``/``np``/``json`` and the
+    sharding aliases pre-imported (plus ``src`` on PYTHONPATH) and must
+    ``print(json.dumps(...))`` a dict as its last stdout line — the
+    fixture asserts a zero exit and returns that dict.
+    """
+
+    def run(script: str, *, devices: int = 8, timeout: int = 600) -> dict:
+        src = (_MULTIDEVICE_PRELUDE.format(n=devices)
+               + textwrap.dedent(script))
+        # JAX_PLATFORMS=cpu is load-bearing: without it jax probes for
+        # accelerator plugins in the stripped env and a ~7s script takes
+        # ~8 minutes wall (measured) waiting on the probe timeouts
+        r = subprocess.run(
+            [sys.executable, "-c", src], capture_output=True, text=True,
+            timeout=timeout,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                 "HOME": "/root", "JAX_PLATFORMS": "cpu"})
+        assert r.returncode == 0, r.stderr[-2000:]
+        return json.loads(r.stdout.strip().splitlines()[-1])
+
+    return run

@@ -281,6 +281,53 @@ def test_batched_probe_is_one_launch(rng):
     assert st["probes"] == 1 and st["launches"] == 1
 
 
+# --------------------------------------------- stats under concurrent load
+
+
+def test_stats_reconcile_under_concurrent_probes():
+    """Hammer the thread-safe scan-fraction stats from N planner threads
+    through the coalescer (plus direct probes racing them): every counter
+    must reconcile exactly with the probes fired — no lost updates (guards
+    the thread-safe stats claim from PR 3)."""
+    import threading
+
+    from repro.launch.coalescer import CoalescerConfig, PredicateCoalescer
+
+    x = _store()
+    cs = _index(32)
+    cs.reset_stats()
+    hist = SemanticHistogram(jnp.asarray(x), index=cs)
+    n_threads = 12
+    with PredicateCoalescer(
+            hist, CoalescerConfig(max_batch=8, window_ms=20)) as coal:
+
+        def worker(i):
+            # distinct (pred, thr) per call: no in-flight dedup, no cache
+            pred = x[(37 * i) % N]
+            thr = np.asarray([0.25 + 0.01 * i], np.float32)
+            coal.selectivity_batch(pred[None], thr)
+            hist.probe_batch(x[(11 * i) % N][None],
+                             np.asarray([0.3 + 0.01 * i], np.float32),
+                             k=3)
+
+        ts = [threading.Thread(target=worker, args=(i,))
+              for i in range(n_threads)]
+        [t.start() for t in ts]
+        [t.join(timeout=120) for t in ts]
+        assert not any(t.is_alive() for t in ts)
+        coal_stats = coal.stats()
+
+    st = cs.stats()
+    # one probe_pruned per coalescer flush + one per direct probe_batch
+    assert st["probes"] == coal_stats["probes_fired"] + n_threads
+    # every probe accounts exactly one full-store equivalent...
+    assert st["rows_full_equiv"] == st["probes"] * N
+    # ...scans no more than that, and fires at most one launch per probe
+    assert 0 <= st["rows_scanned"] <= st["rows_full_equiv"]
+    assert st["launches"] <= st["probes"]
+    assert st["scan_fraction"] == st["rows_scanned"] / st["rows_full_equiv"]
+
+
 # ------------------------------------- cache + batched calibration interplay
 
 

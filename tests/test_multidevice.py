@@ -1,20 +1,12 @@
-"""Multi-device behaviour (8 forced host devices, subprocess so the main test
-process keeps its single-device view): sharded histogram probe, two-stage
-compressed gradient all-reduce, elastic mesh restore."""
-
-import json
-import subprocess
-import sys
-import textwrap
+"""Multi-device behaviour (8 forced host devices via the ``run_multidevice``
+conftest fixture, so the main test process keeps its single-device view):
+sharded histogram probe, two-stage compressed gradient all-reduce, elastic
+mesh restore. The sharded-index parity matrix lives in
+``test_sharded_index.py`` on the same fixture."""
 
 import pytest
 
-SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp, numpy as np, json
-    from jax.sharding import NamedSharding, PartitionSpec as P
-
+SCRIPT = """
     mesh = jax.make_mesh((2, 4), ("pod", "data"))
     out = {}
 
@@ -58,19 +50,12 @@ SCRIPT = textwrap.dedent("""
     out["int8_rel_err"] = float(rel)
 
     print(json.dumps(out))
-""")
+"""
 
 
 @pytest.mark.slow
-def test_multidevice_probe_and_compression():
-    # 8 forced host devices compile several shard_map programs; under heavy
-    # container CPU throttling that can take minutes (measured ~7s unloaded)
-    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                       text=True, timeout=600,
-                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
-    assert r.returncode == 0, r.stderr[-2000:]
-    out = json.loads(r.stdout.strip().splitlines()[-1])
+def test_multidevice_probe_and_compression(run_multidevice):
+    out = run_multidevice(SCRIPT, devices=8)
     assert out["counts_match"]
     assert out["topk_err"] < 1e-5
     assert out["batched_counts_match"]

@@ -86,6 +86,45 @@ def test_error_feedback_contracts(seed, codec):
     assert drift < 0.15, drift
 
 
+@given(seed=st.integers(0, 2**32 - 1), thr=st.floats(0.02, 1.9),
+       k_clusters=st.integers(1, 12))
+@settings(max_examples=15, deadline=None)
+def test_cluster_bound_classification_sound(seed, thr, k_clusters):
+    """Index invariant (repro.index): for arbitrary unit-vector stores and
+    thresholds, a cluster classified all-in/all-out by the exact Cauchy-
+    Schwarz bounds never misclassifies a row (checked against the
+    histogram's ``distances()``), and the boundary fraction is monotone in
+    the threshold slack."""
+    from repro.core.histogram import SemanticHistogram
+    from repro.index import build_clustered_store
+
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((160, 32)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    cs = build_clustered_store(x, k_clusters, iters=3, seed=0, impl="xla")
+    pred = x[rng.integers(160)]
+    lb, ub = cs.cluster_bounds(pred[None])
+    lb, ub = lb[0], ub[0]
+    hist = SemanticHistogram(cs.embeddings)      # reordered store
+    d = hist.distances(pred)                     # the kernel's f32 dists
+    for c in range(cs.k_clusters):
+        seg = d[cs.offsets[c]:cs.offsets[c + 1]]
+        if not seg.size:
+            continue
+        if ub[c] <= thr - cs.eps:                # all-in: every row counted
+            assert (seg <= thr).all()
+        if lb[c] > thr + cs.eps:                 # all-out: no row counted
+            assert (seg > thr).all()
+    # boundary fraction is monotone nondecreasing in the slack: widening
+    # eps can only move clusters from resolved to boundary, never back
+    sizes_ok = cs.sizes > 0
+    fracs = []
+    for slack in (0.0, cs.eps, 0.01, 0.1):
+        boundary = ~(ub <= thr - slack) & ~(lb > thr + slack) & sizes_ok
+        fracs.append(boundary.sum() / max(1, sizes_ok.sum()))
+    assert all(a <= b + 1e-12 for a, b in zip(fracs, fracs[1:]))
+
+
 @given(st.integers(0, 2**32 - 1), st.floats(0.05, 0.9))
 @settings(max_examples=20, deadline=None)
 def test_topk_mask_keeps_largest(seed, frac):

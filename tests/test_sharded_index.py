@@ -1,0 +1,245 @@
+"""Per-shard cluster-pruned probes on the pod mesh (PR 4).
+
+Bitwise-parity matrix on a host-local mesh (``run_multidevice`` conftest
+fixture): sharded-pruned vs sharded-full-scan vs unsharded full scan,
+scalar + batched, count-only and top-k, both kernel impls. The exhaustive
+K x selectivity x shard-count sweep is ``@pytest.mark.slow``; tier-1 keeps
+a fast subset plus in-process (single-device) construction/validation
+tests that need no subprocess.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.histogram import SemanticHistogram
+from repro.core.synthetic import clustered_unit_vectors
+from repro.index import build_clustered_store, build_sharded_clustered_store
+
+# ------------------------------------------------- in-process (one device)
+
+
+def test_build_partitions_match_mesh_layout():
+    x, _ = clustered_unit_vectors(600, 32, n_centers=8, spread=0.2, seed=0)
+    sidx = build_sharded_clustered_store(x, 6, 3, iters=3, impl="xla")
+    assert sidx.n_shards == 3 and sidx.shard_rows == 200
+    assert sorted(sidx.perm.tolist()) == list(range(600))
+    xs = np.asarray(sidx.embeddings)
+    np.testing.assert_array_equal(xs, x[sidx.perm])
+    # each shard's perm stays inside its contiguous row block
+    for s in range(3):
+        blk = sidx.perm[s * 200:(s + 1) * 200]
+        assert blk.min() >= s * 200 and blk.max() < (s + 1) * 200
+        np.testing.assert_array_equal(xs[s * 200:(s + 1) * 200], x[blk])
+
+
+def test_build_and_histogram_validation():
+    x, _ = clustered_unit_vectors(400, 32, n_centers=4, spread=0.2, seed=1)
+    with pytest.raises(ValueError, match="divide evenly"):
+        build_sharded_clustered_store(x, 4, 3)
+    sidx = build_sharded_clustered_store(x, 4, 2, iters=2, impl="xla")
+    with pytest.raises(ValueError, match="needs mesh"):
+        SemanticHistogram(jnp.asarray(x), index=sidx)
+    from repro.launch.mesh import make_probe_mesh
+
+    mesh1 = make_probe_mesh(1)
+    with pytest.raises(ValueError, match="rebuild the index"):
+        SemanticHistogram(jnp.asarray(x), mesh=mesh1, index=sidx)
+    flat = build_clustered_store(x, 4, iters=2, impl="xla")
+    with pytest.raises(ValueError, match="ShardedClusteredStore"):
+        SemanticHistogram(jnp.asarray(x), mesh=mesh1, index=flat)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_one_shard_mesh_parity_inprocess(impl):
+    """A 1-device ('data',) mesh exercises the whole sharded-pruned path
+    (host plan -> gather -> masked scan -> combine) without a subprocess;
+    results must be bitwise the unsharded paths' of the same impl."""
+    from repro.launch.mesh import make_probe_mesh
+
+    x, _ = clustered_unit_vectors(700, 64, n_centers=8, spread=0.2, seed=2)
+    sidx = build_sharded_clustered_store(x, 12, 1, iters=4, impl="xla")
+    mesh = make_probe_mesh(1)
+    pruned = SemanticHistogram(jnp.asarray(x), mesh=mesh, impl=impl,
+                               index=sidx)
+    full = SemanticHistogram(jnp.asarray(x), mesh=mesh, impl=impl)
+    d = np.sort(1.0 - x @ x[3])
+    thr_low = float(0.5 * (d[6] + d[7]))            # ~1% selectivity
+    for thr in (thr_low, 0.5, 1.9):
+        assert pruned.count_within(x[3], thr) == full.count_within(x[3], thr)
+    preds = x[:4]
+    thrs = np.asarray([thr_low, 0.4, 0.9, 1.5], np.float32)
+    cf, tf = full.probe_batch(preds, thrs, k=6)
+    cp, tp = pruned.probe_batch(preds, thrs, k=6)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cp))
+    np.testing.assert_array_equal(np.asarray(tf), np.asarray(tp))
+    assert pruned.kth_smallest_distance(x[3], 9) == \
+        full.kth_smallest_distance(x[3], 9)
+
+
+# --------------------------------------------- fast tier-1 parity (4 shards)
+
+FAST_SCRIPT = """
+    from repro.core.histogram import SemanticHistogram
+    from repro.core.synthetic import clustered_unit_vectors
+    from repro.index import build_sharded_clustered_store
+    from repro.launch.mesh import make_probe_mesh
+
+    out = {"fail": []}
+    def check(name, ok):
+        if not ok:
+            out["fail"].append(name)
+
+    n, d, s = 1200, 64, 4
+    x, _ = clustered_unit_vectors(n, d, n_centers=12, spread=0.25, seed=0)
+    mesh = make_probe_mesh(s)
+    sidx = build_sharded_clustered_store(x, 12, s, iters=4, impl="xla")
+    oracle = SemanticHistogram(jnp.asarray(x))             # unsharded
+    full = SemanticHistogram(jnp.asarray(x), mesh=mesh)    # sharded full
+    pruned = SemanticHistogram(jnp.asarray(x), mesh=mesh, index=sidx)
+
+    ds = np.sort(1.0 - x @ x[3])
+    thr_low = float(0.5 * (ds[11] + ds[12]))               # ~1% selectivity
+
+    # scalar counts: pruned == sharded-full == unsharded, low/mid/high thr
+    for thr in (thr_low, 0.5, 1.2, 1.9):
+        c = (pruned.count_within(x[3], thr), full.count_within(x[3], thr),
+             oracle.count_within(x[3], thr))
+        check(f"count@{thr:.2f}:{c}", c[0] == c[1] == c[2])
+
+    # count-only probes that fully resolve by bounds launch nothing
+    sidx.reset_stats()
+    check("allin", pruned.count_within(x[3], 2.5) == n)
+    check("allout", pruned.count_within(x[3], -0.1) == 0)
+    st = sidx.stats()
+    check("no-launch", st["launches"] == 0 and st["rows_scanned"] == 0
+          and st["probes"] == 2)
+
+    # batched: counts AND top-k bitwise across all three paths
+    preds = x[:5]
+    thrs = np.asarray([thr_low, 0.3, 0.6, 1.0, 1.9], np.float32)
+    sidx.reset_stats()
+    cp, tp = pruned.probe_batch(preds, thrs, k=7)
+    cf, tf = full.probe_batch(preds, thrs, k=7)
+    co, to = oracle.probe_batch(preds, thrs, k=7)
+    cp, tp, cf, tf = map(np.asarray, (cp, tp, cf, tf))
+    co, to = np.asarray(co), np.asarray(to)
+    check("bat-counts-full", (cp == cf).all())
+    check("bat-topk-full", np.array_equal(tp, tf))
+    check("bat-counts-oracle", (cp == co).all())
+    check("bat-topk-oracle", np.array_equal(tp, to))
+    check("bat-one-launch", sidx.stats()["launches"] == 1)
+
+    # multi-threshold batched probe (B, T) counts
+    thr2 = np.stack([np.asarray([thr_low, 0.8], np.float32),
+                     np.asarray([0.4, 1.6], np.float32)])
+    c2p, _ = pruned.probe_batch(x[:2], thr2, k=3)
+    c2f, _ = full.probe_batch(x[:2], thr2, k=3)
+    check("bat-multi-thr", (np.asarray(c2p) == np.asarray(c2f)).all())
+
+    # kth-smallest calibration, incl. k > shard_rows (300)
+    for k in (1, 7, 500):
+        kp = pruned.kth_smallest_distance(x[3], k)
+        kf = full.kth_smallest_distance(x[3], k)
+        ko = oracle.kth_smallest_distance(x[3], k)
+        check(f"kth@{k}:{kp}!={kf}|{ko}", kp == kf == ko)
+
+    # low-selectivity scalar probe scans a fraction of the rows, and the
+    # stats reconcile: every probe accounts all shards' full-equiv rows
+    sidx.reset_stats()
+    pruned.count_within(x[3], thr_low)
+    st = sidx.stats()
+    check("scan-frac", st["scan_fraction"] < 0.5)
+    check("per-shard-len", len(st["per_shard"]) == s)
+    check("reconcile", st["rows_full_equiv"] == st["probes"] * n
+          and st["rows_scanned"] == sum(p["rows_scanned"]
+                                        for p in st["per_shard"]))
+    out["scan_fraction"] = st["scan_fraction"]
+
+    # pallas impl: masked-kernel sharded pruning == pallas sharded full scan
+    xp, _ = clustered_unit_vectors(512, 64, n_centers=8, spread=0.2, seed=3)
+    sp = build_sharded_clustered_store(xp, 8, s, iters=3, impl="xla")
+    fullp = SemanticHistogram(jnp.asarray(xp), mesh=mesh, impl="pallas")
+    prunedp = SemanticHistogram(jnp.asarray(xp), mesh=mesh, impl="pallas",
+                                index=sp)
+    dp = np.sort(1.0 - xp @ xp[5])
+    tl = float(0.5 * (dp[5] + dp[6]))
+    check("pallas-count", prunedp.count_within(xp[5], tl)
+          == fullp.count_within(xp[5], tl))
+    c3p, t3p = prunedp.probe_batch(xp[:3], np.asarray([tl, 0.5, 1.8],
+                                                      np.float32), k=5)
+    c3f, t3f = fullp.probe_batch(xp[:3], np.asarray([tl, 0.5, 1.8],
+                                                    np.float32), k=5)
+    check("pallas-bat-counts", (np.asarray(c3p) == np.asarray(c3f)).all())
+    check("pallas-bat-topk", np.array_equal(np.asarray(t3p),
+                                            np.asarray(t3f)))
+    print(json.dumps(out))
+"""
+
+
+def test_sharded_pruned_parity_fast(run_multidevice):
+    out = run_multidevice(FAST_SCRIPT, devices=4)
+    assert not out["fail"], out["fail"]
+    assert out["scan_fraction"] < 0.5
+
+
+# ------------------------------------- exhaustive sweep (slow, acceptance)
+
+SWEEP_SCRIPT = """
+    from repro.core.histogram import SemanticHistogram
+    from repro.core.synthetic import clustered_unit_vectors
+    from repro.index import build_sharded_clustered_store
+    from repro.launch.mesh import make_probe_mesh
+
+    s = {shards}
+    out = {{"fail": []}}
+    n, d = 4000, 96
+    x, _ = clustered_unit_vectors(n, d, n_centers=32, spread=0.25, seed=3)
+    mesh = make_probe_mesh(s)
+    rng = np.random.default_rng(1)
+    for k_shard in (4, 32):
+        sidx = build_sharded_clustered_store(x, k_shard, s, iters=5,
+                                             impl="xla")
+        impls = ("xla", "pallas") if k_shard == 32 else ("xla",)
+        for impl in impls:
+            full = SemanticHistogram(jnp.asarray(x), mesh=mesh, impl=impl)
+            pruned = SemanticHistogram(jnp.asarray(x), mesh=mesh,
+                                       impl=impl, index=sidx)
+            sels = (0.001, 0.01, 0.1, 0.5) if impl == "xla" else (0.01,)
+            for sel in sels:
+                tag = f"S={{s}},K={{k_shard}},{{impl}},sel={{sel}}"
+                preds = np.stack([x[rng.integers(n)], x[rng.integers(n)]])
+                thrs = []
+                for p in preds:
+                    dd = np.sort(1.0 - x @ p)
+                    kth = max(1, int(round(sel * n)))
+                    thrs.append(0.5 * (dd[kth - 1] + dd[min(kth, n - 1)]))
+                thrs = np.asarray(thrs, np.float32)
+                for j, p in enumerate(preds):
+                    cp = pruned.count_within(p, float(thrs[j]))
+                    cf = full.count_within(p, float(thrs[j]))
+                    if cp != cf:
+                        out["fail"].append(f"{{tag}} count {{cp}}!={{cf}}")
+                cf, tf = full.probe_batch(preds, thrs, k=16)
+                cp, tp = pruned.probe_batch(preds, thrs, k=16)
+                if not (np.asarray(cf) == np.asarray(cp)).all():
+                    out["fail"].append(f"{{tag}} batched counts")
+                if not np.array_equal(np.asarray(tf), np.asarray(tp)):
+                    out["fail"].append(f"{{tag}} batched topk")
+                if impl == "xla":
+                    k_cal = max(1, int(sel * n))
+                    if pruned.kth_smallest_distance(preds[0], k_cal) != \\
+                            full.kth_smallest_distance(preds[0], k_cal):
+                        out["fail"].append(f"{{tag}} kth@{{k_cal}}")
+    print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shards", [4, 8])
+def test_sharded_pruned_parity_sweep(run_multidevice, shards):
+    """Acceptance grid: K x selectivity x shard count x impl — sharded-
+    pruned counts and top-k bitwise equal the sharded full scan."""
+    out = run_multidevice(SWEEP_SCRIPT.format(shards=shards),
+                          devices=shards, timeout=900)
+    assert not out["fail"], out["fail"]
