@@ -8,11 +8,20 @@ layer: cross-query coalescing (one probe for G concurrent queries' filters
 vs one probe per query) and the LRU predicate cache on a hot workload
 (repeated predicates skip the scan entirely), (d) the cluster-pruned index:
 scan fraction + speedup vs selectivity on a clustered store (exact counts,
-sublinear rows at low selectivity), and (e) the sharded-probe collective
+sublinear rows at low selectivity), (e) the sharded-probe collective
 cost model: counts/top-k combine is O(B*k), so probe latency stays flat as
-the store scales across chips (DESIGN.md §2).
+the store scales across chips (DESIGN.md §2), and (f) boundary-mass-
+balanced index builds: on a Zipf-skewed grouped store, contiguous shard
+blocks concentrate one concept's boundary rows on a few shards and every
+probe pays the max — the balanced+split build packs clusters onto shards
+by boundary mass, so the max per-shard boundary rows (and measured probe
+wall time) drop, counts and top-k bitwise unchanged.
 
 CSV: bench,config,us_per_call,derived
+
+Every run also persists the rows machine-readably to
+``BENCH_probe_scaling.json`` at the repo root (rows + config + git sha),
+so the perf trajectory stays trackable across PRs.
 """
 
 from __future__ import annotations
@@ -86,8 +95,93 @@ for sel in (0.001, 0.01, 0.1):
 """
 
 
+# child for the boundary-balanced build section (PR 5): a Zipf-skewed
+# *grouped* store (head concept's rows contiguous, the ingest order real
+# stores have) over 4 host shards — the contiguous build concentrates the
+# head concept's boundary rows on the shards that hold it, the
+# balanced+split build packs clusters onto shards by boundary mass.
+# Acceptance: balanced max per-shard boundary rows < contiguous (and probe
+# wall time drops) at <= 1% selectivity, count_diff=0, bitwise top-k.
+_BALANCED_CHILD = """
+import time
+import numpy as np
+import jax.numpy as jnp
+from repro.core.histogram import SemanticHistogram
+from repro.core.synthetic import clustered_unit_vectors
+from repro.index import build_sharded_clustered_store
+from repro.launch.mesh import make_probe_mesh
+
+n, d, k_shard, s = 100_000, 256, 160, 4
+xc, _ = clustered_unit_vectors(n, d, n_centers=64, spread=0.25, seed=0,
+                               skew=1.3, grouped=True)
+mesh = make_probe_mesh(s)
+full = SemanticHistogram(jnp.asarray(xc), mesh=mesh)
+pred = xc[17]                       # head-concept member (label 0 is first)
+ds = np.sort(1.0 - xc @ pred)
+builds = {}
+for name, kw in (("contiguous", {}),
+                 ("balanced", dict(balance="boundary", split_radius=0.35))):
+    t0 = time.perf_counter()
+    sidx = build_sharded_clustered_store(xc, k_shard, s, iters=6, seed=0,
+                                         impl="xla", **kw)
+    build_s = time.perf_counter() - t0
+    mass = sidx.boundary_mass()
+    print(f"ROW|probe_balanced_build|N={n},S={s},zipf1.3,{name}|"
+          f"{build_s*1e6:.0f}|mass_spread={mass.max() - mass.min():.0f},"
+          f"mass_max={mass.max():.0f}")
+    builds[name] = sidx
+# one histogram per build, reused across selectivities: the sharded pruned
+# probe jits per factory, so rebuilding per sel would re-time compilation
+hists = {name: SemanticHistogram(jnp.asarray(xc), mesh=mesh, index=sidx)
+         for name, sidx in builds.items()}
+for sel in (0.001, 0.01):
+    kth = max(1, int(sel * n))
+    thr = float(0.5 * (ds[kth - 1] + ds[kth]))
+    thr_j = np.asarray([thr], np.float32)
+    c_full = full.count_within(pred, thr)
+    cf, tf = full.probe_batch(pred[None], thr_j, k=16)
+    res = {}
+    for name, sidx in builds.items():
+        h = hists[name]
+        cp, tp = h.probe_batch(pred[None], thr_j, k=16)   # warm + parity
+        bitwise = ((np.asarray(cp) == np.asarray(cf)).all()
+                   and np.array_equal(np.asarray(tp), np.asarray(tf)))
+        sidx.reset_stats()
+        c_prn = h.count_within(pred, thr)                 # warm count path
+        assert c_prn == c_full, (name, sel, c_prn, c_full)
+        st1 = sidx.stats()                                # one-probe stats
+        h.count_within(pred, thr)                         # settle caches
+        iters = 5
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            h.count_within(pred, thr)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        res[name] = (us, st1["max_shard_rows_scanned"])
+        print(f"ROW|probe_balanced_cpu|N={n},S={s},sel={sel:.1%},{name}|"
+              f"{us:.0f}|max_shard_rows={st1['max_shard_rows_scanned']},"
+              f"spread={st1['spread']:.1%},"
+              f"max_frac={st1['max_scan_fraction']:.1%},"
+              f"count_diff={c_prn - c_full},topk_bitwise={bitwise}")
+    (c_us, c_rows), (b_us, b_rows) = res["contiguous"], res["balanced"]
+    print(f"ROW|probe_balanced_cpu|N={n},S={s},sel={sel:.1%},summary|-|"
+          f"max_shard_rows {c_rows}->{b_rows} "
+          f"({c_rows / max(1, b_rows):.1f}x),time {c_us:.0f}->{b_us:.0f}us "
+          f"({c_us / b_us:.1f}x)")
+"""
+
+
 def main() -> list[str]:
     rows = [csv_row("bench", "config", "us_per_call", "derived")]
+    recs: list[dict] = []
+
+    def add(bench, config, us_per_call, derived) -> None:
+        """One row, both as display CSV and as a machine-readable record
+        destined for BENCH_probe_scaling.json."""
+        rows.append(csv_row(bench, config, us_per_call, derived))
+        recs.append({"bench": str(bench), "config": str(config),
+                     "us_per_call": str(us_per_call),
+                     "derived": str(derived)})
+
     rng = np.random.default_rng(0)
     pred = jnp.asarray(rng.standard_normal(1152), jnp.float32)
     thr = jnp.asarray([0.5], jnp.float32)
@@ -100,8 +194,8 @@ def main() -> list[str]:
         for _ in range(iters):
             jax.block_until_ready(f(store, pred, thr))
         us = (time.perf_counter() - t0) / iters * 1e6
-        rows.append(csv_row("probe_measured_cpu", f"N={n}", f"{us:.0f}",
-                            f"{n*1152*4/(us/1e6)/1e9:.1f}GB/s"))
+        add("probe_measured_cpu", f"N={n}", f"{us:.0f}",
+            f"{n*1152*4/(us/1e6)/1e9:.1f}GB/s")
 
     # batched multi-predicate probe: one store pass for B predicates.
     # Amortized µs/predicate must collapse vs the B=1 row — that's the PR's
@@ -121,9 +215,9 @@ def main() -> list[str]:
         us = (time.perf_counter() - t0) / iters * 1e6 / bsz
         if base_us is None:
             base_us = us
-        rows.append(csv_row(
+        add(
             "probe_batched_cpu", f"N={n},B={bsz}", f"{us:.0f}",
-            f"{n*1152*4/(us/1e6)/1e9:.1f}GB/s/pred,speedup={base_us/us:.1f}x"))
+            f"{n*1152*4/(us/1e6)/1e9:.1f}GB/s/pred,speedup={base_us/us:.1f}x")
 
     # parity: batched == per-predicate scalar loop (same store)
     bsz = 32
@@ -137,8 +231,8 @@ def main() -> list[str]:
         cs, ts = f1(store, preds[j], thrs[j])
         max_cnt = max(max_cnt, int(jnp.abs(cb[j] - cs).max()))
         max_top = max(max_top, float(jnp.abs(tb[j] - ts).max()))
-    rows.append(csv_row("probe_batched_parity", f"N={n},B={bsz}", "-",
-                        f"count_diff={max_cnt},topk_maxerr={max_top:.2e}"))
+    add("probe_batched_parity", f"N={n},B={bsz}", "-",
+        f"count_diff={max_cnt},topk_maxerr={max_top:.2e}")
 
     # serving layer: coalesced vs sequential per-query probing.
     # Q concurrent queries x F filters: sequential = Q probes of B=F (one
@@ -164,10 +258,10 @@ def main() -> list[str]:
         if seq_us is None:
             seq_us = us
         label = ("sequential" if group == 1 else f"coalesced_g{group}")
-        rows.append(csv_row(
+        add(
             "probe_coalesced_cpu",
             f"N={n},Q={q_tot},F={n_filters},{label}", f"{us:.0f}",
-            f"probes={q_tot // group},speedup={seq_us/us:.1f}x"))
+            f"probes={q_tot // group},speedup={seq_us/us:.1f}x")
 
     # the real subsystem: PredicateCoalescer end-to-end, Q submitter threads
     # through the micro-batch window (includes lock/window/key overhead the
@@ -200,11 +294,11 @@ def main() -> list[str]:
                 lambda p: coal.selectivity_batch(p, thr_f), q_preds))
         us = (time.perf_counter() - t0) / (q_tot * n_filters) * 1e6
         st = coal.stats()
-    rows.append(csv_row(
+    add(
         "probe_coalescer_real_cpu",
         f"N={n},Q={q_tot},F={n_filters},window=8ms", f"{us:.0f}",
         f"probes={st['probes_fired']},hit_rate="
-        f"{st['cache']['hit_rate']:.0%},speedup={seq_us/us:.1f}x"))
+        f"{st['cache']['hit_rate']:.0%},speedup={seq_us/us:.1f}x")
 
     # LRU predicate cache on a hot workload: R requests over U unique
     # predicates (hit rate 1 - U/R); hits skip the store scan entirely.
@@ -221,9 +315,9 @@ def main() -> list[str]:
             hist.selectivity_batch(hot, thr_hot)
         us = (time.perf_counter() - t0) / (uniq * reps) * 1e6
         hr = (f",hit_rate={cache.stats()['hit_rate']:.0%}" if cache else "")
-        rows.append(csv_row("probe_cached_cpu",
-                            f"N={n},req={uniq * reps},uniq={uniq},{label}",
-                            f"{us:.0f}", f"us/request{hr}"))
+        add("probe_cached_cpu",
+            f"N={n},req={uniq * reps},uniq={uniq},{label}",
+            f"{us:.0f}", f"us/request{hr}")
 
     # cluster-pruned index: scan fraction + speedup vs selectivity on a
     # *clustered* store (image embeddings clump by concept; isotropic
@@ -241,8 +335,8 @@ def main() -> list[str]:
     t0 = time.perf_counter()
     cs = build_clustered_store(xc, k_idx, iters=6, seed=0, impl="xla")
     build_s = time.perf_counter() - t0
-    rows.append(csv_row("probe_index_build", f"N={n_idx},K={k_idx}",
-                        f"{build_s*1e6:.0f}", "kmeans+reorder+radii"))
+    add("probe_index_build", f"N={n_idx},K={k_idx}",
+        f"{build_s*1e6:.0f}", "kmeans+reorder+radii")
     hist_full = SemanticHistogram(jnp.asarray(xc))
     hist_idx = SemanticHistogram(jnp.asarray(xc), index=cs)
     pred_idx = xc[17]
@@ -264,20 +358,20 @@ def main() -> list[str]:
             hist_idx.count_within(pred_idx, thr)
         prn_us = (time.perf_counter() - t0) / iters * 1e6
         frac = cs.stats()["scan_fraction"]
-        rows.append(csv_row(
+        add(
             "probe_pruned_cpu", f"N={n_idx},K={k_idx},sel={sel:.1%}",
             f"{prn_us:.0f}",
             f"scan_frac={frac:.1%},full={full_us:.0f}us,"
-            f"speedup={full_us/prn_us:.1f}x,count_diff={c_full-c_prn}"))
+            f"speedup={full_us/prn_us:.1f}x,count_diff={c_full-c_prn}")
 
     # pruned threshold calibration: bound-ordered early-terminated kth
     cs.reset_stats()
     kth_full = hist_full.kth_smallest_distance(pred_idx, 128)
     kth_prn = hist_idx.kth_smallest_distance(pred_idx, 128)
-    rows.append(csv_row(
+    add(
         "probe_pruned_kth", f"N={n_idx},K={k_idx},k=128", "-",
         f"scan_frac={cs.stats()['scan_fraction']:.1%},"
-        f"err={abs(kth_full-kth_prn):.1e}"))
+        f"err={abs(kth_full-kth_prn):.1e}")
 
     # per-shard pruned probes on a host-local mesh: the PR-4 composition.
     # Forcing host devices must happen before jax initializes, so this
@@ -298,12 +392,29 @@ def main() -> list[str]:
              "JAX_PLATFORMS": "cpu",
              "PYTHONPATH": str(_ROOT / "src")})
     if child.returncode:
-        rows.append(csv_row("probe_sharded_pruned_cpu", "S=4", "-",
-                            f"FAILED:{child.stderr.strip()[-200:]}"))
+        add("probe_sharded_pruned_cpu", "S=4", "-",
+            f"FAILED:{child.stderr.strip()[-200:]}")
     else:
         for line in child.stdout.splitlines():
             if line.startswith("ROW|"):
-                rows.append(csv_row(*line.split("|")[1:]))
+                add(*line.split("|")[1:])
+
+    # boundary-mass-balanced vs contiguous index build on a Zipf-skewed
+    # grouped store (PR 5) — same forced-host-devices subprocess trick
+    child = subprocess.run(
+        [sys.executable, "-c", _BALANCED_CHILD],
+        capture_output=True, text=True, timeout=1800,
+        env={**os.environ,
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+             "JAX_PLATFORMS": "cpu",
+             "PYTHONPATH": str(_ROOT / "src")})
+    if child.returncode:
+        add("probe_balanced_cpu", "S=4", "-",
+            f"FAILED:{child.stderr.strip()[-200:]}")
+    else:
+        for line in child.stdout.splitlines():
+            if line.startswith("ROW|"):
+                add(*line.split("|")[1:])
 
     # v5e analytic: per-chip probe time for a pod-scale store
     for total in (1e8, 1e9):
@@ -311,12 +422,39 @@ def main() -> list[str]:
         bytes_chip = per_chip * 1152 * 4
         t_mem = bytes_chip / HBM_BW
         t_coll = (128 * 4 * 2) / LINK_BW  # all-gather top-k + psum counts
-        rows.append(csv_row(
+        add(
             "probe_v5e_analytic", f"N={total:.0e},256chips",
             f"{(t_mem + t_coll)*1e6:.0f}",
-            f"mem={t_mem*1e6:.0f}us,coll={t_coll*1e6:.2f}us"))
-    rows.append(csv_row("probe_v5e_analytic", "conclusion", "-",
-                        "collective O(k) -> probe scales linearly in N/chips"))
+            f"mem={t_mem*1e6:.0f}us,coll={t_coll*1e6:.2f}us")
+    add("probe_v5e_analytic", "conclusion", "-",
+        "collective O(k) -> probe scales linearly in N/chips")
+
+    # persist the run machine-readably at the repo root: rows + the store
+    # configs the headline rows used + the git sha, so per-PR trajectories
+    # (scan fractions, max-shard rows, speedups) are diffable across PRs
+    import json
+
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"], cwd=_ROOT,
+                             capture_output=True, text=True,
+                             timeout=30).stdout.strip() or None
+    except OSError:
+        sha = None
+    (_ROOT / "BENCH_probe_scaling.json").write_text(json.dumps({
+        "bench": "bench_probe_scaling",
+        "git_sha": sha,
+        "config": {
+            "single_device": {"dims": 1152, "store_rows": [10_000, 100_000,
+                                                           500_000]},
+            "pruned_index": {"n": 100_000, "dims": 256, "k_clusters": 256},
+            "sharded": {"n": 100_000, "dims": 256, "shards": 4,
+                        "k_per_shard": 160},
+            "balanced": {"n": 100_000, "dims": 256, "shards": 4,
+                         "k_per_shard": 160, "zipf_skew": 1.3,
+                         "grouped": True, "split_radius": 0.35},
+        },
+        "rows": recs,
+    }, indent=1) + "\n")
     return rows
 
 

@@ -37,7 +37,8 @@ _PYTEST = re.compile(r"python -m pytest[^\n`]*")
 # module -> flags the docs must keep showing in at least one command (the
 # serving entrypoints users copy-paste; silently dropping one is drift too)
 REQUIRED_FLAGS = {
-    "repro.launch.serve": ("--concurrency", "--index-clusters", "--shards"),
+    "repro.launch.serve": ("--concurrency", "--index-clusters", "--shards",
+                           "--split-radius", "--balance-boundary"),
 }
 
 # substrings README/docs must keep mentioning somewhere (operator-facing
@@ -48,6 +49,11 @@ REQUIRED_TOPICS = {
                                "(index.stats()['per_shard'], printed by "
                                "serve --shards at exit) must stay "
                                "documented",
+    "boundary mass": "the boundary-mass-balanced build (PR 5: size x "
+                     "radius packing, serve --balance-boundary, "
+                     "index.boundary_mass()) must stay documented — it is "
+                     "what controls the max per-shard rows every sharded "
+                     "probe pays",
 }
 
 
@@ -62,7 +68,9 @@ def _module_file(mod: str) -> Path | None:
 
 def _check_file(path: Path, errors: list[str],
                 seen_flags: dict[str, set] | None = None) -> None:
-    text = path.read_text()
+    # join shell line continuations so a flag on a wrapped line still
+    # counts as part of its command
+    text = path.read_text().replace("\\\n", " ")
     rel = path.relative_to(REPO)
     for m in _CMD.finditer(text):
         target, flagstr = m.group(1), m.group(2) or ""

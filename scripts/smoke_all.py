@@ -2,10 +2,12 @@
 plus a batched semantic-histogram probe smoke (pallas-interpret vs xla vs
 per-predicate loop), a coalescer + predicate-cache smoke (cross-query
 micro-batching, LRU hits, B-tiled kernel parity), a cluster-pruned
-index smoke (build + pruned-vs-full parity + sublinear scan fraction), and
-a sharded-pruned smoke (per-shard indexes on a 4-shard host mesh, in a
-subprocess so this process keeps its 1-device view) so hot-path regressions
-surface here first. ``--check-docs`` additionally runs
+index smoke (build + pruned-vs-full parity + sublinear scan fraction), a
+sharded-pruned smoke (per-shard indexes on a 4-shard host mesh, in a
+subprocess so this process keeps its 1-device view), and a balanced-build
+smoke (boundary-mass-balanced partitioning on a Zipf-skewed store: exact
+counts, shrinking per-shard spread) so hot-path regressions surface here
+first. ``--check-docs`` additionally runs
 scripts/check_docs.py (README/docs drift vs actual entrypoints)."""
 
 import os
@@ -239,6 +241,63 @@ def run_sharded_smoke():
           f"low-sel scan_fraction={frac}")
 
 
+_BALANCED_SMOKE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax.numpy as jnp
+from repro.core.histogram import SemanticHistogram
+from repro.core.synthetic import clustered_unit_vectors
+from repro.index import build_sharded_clustered_store
+from repro.launch.mesh import make_probe_mesh
+
+n, s = 4000, 4
+# Zipf-skewed + grouped: the head concept's rows are contiguous, so the
+# contiguous build concentrates its boundary mass on shards 0-1
+x, _ = clustered_unit_vectors(n, 64, n_centers=12, spread=0.22, seed=5,
+                              skew=1.5, grouped=True)
+mesh = make_probe_mesh(s)
+contig = build_sharded_clustered_store(x, 12, s, iters=5, impl="xla")
+bal = build_sharded_clustered_store(x, 12, s, iters=5, impl="xla",
+                                    balance="boundary", split_radius=0.35)
+full = SemanticHistogram(jnp.asarray(x), mesh=mesh)
+pred = x[0]                           # head-concept probe
+dd = np.sort(1.0 - x @ pred)
+thr = float(0.5 * (dd[39] + dd[40]))  # ~1% selectivity
+stats = {}
+for name, sidx in (("contig", contig), ("balanced", bal)):
+    h = SemanticHistogram(jnp.asarray(x), mesh=mesh, index=sidx)
+    sidx.reset_stats()
+    assert h.count_within(pred, thr) == full.count_within(pred, thr), name
+    cp, tp = h.probe_batch(x[:3], np.asarray([thr, 0.6, 1.5], np.float32),
+                           k=5)
+    cf, tf = full.probe_batch(x[:3], np.asarray([thr, 0.6, 1.5],
+                                                np.float32), k=5)
+    assert (np.asarray(cp) == np.asarray(cf)).all(), name
+    assert np.array_equal(np.asarray(tp), np.asarray(tf)), name
+    stats[name] = sidx.stats()
+assert stats["balanced"]["spread"] < stats["contig"]["spread"], stats
+assert (stats["balanced"]["max_shard_rows_scanned"]
+        < stats["contig"]["max_shard_rows_scanned"]), stats
+print(f"{stats['contig']['spread']:.0%}->{stats['balanced']['spread']:.0%}")
+"""
+
+
+def run_balanced_smoke():
+    """Boundary-mass-balanced build on a Zipf-skewed grouped store:
+    counts/top-k stay bitwise equal to the sharded full scan AND the
+    per-shard scan-fraction spread (plus the max-shard boundary rows every
+    probe pays) shrinks vs the contiguous build. Subprocess for the same
+    forced-device-count reason as the sharded smoke."""
+    env = {**os.environ, "JAX_PLATFORMS": "cpu"}
+    env.pop("XLA_FLAGS", None)          # the child sets its own
+    r = subprocess.run([sys.executable, "-c", _BALANCED_SMOKE],
+                       capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stderr[-2000:]
+    spread = r.stdout.strip().splitlines()[-1]
+    print(f"OK  balanced_index           counts==full, spread {spread} "
+          f"contig->balanced")
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     fails = []
@@ -249,7 +308,7 @@ if __name__ == "__main__":
             fails.append("check_docs")
     archs = argv or list(ASSIGNED)
     for smoke in (run_probe_smoke, run_coalescer_smoke, run_index_smoke,
-                  run_sharded_smoke):
+                  run_sharded_smoke, run_balanced_smoke):
         try:
             smoke()
         except Exception:

@@ -190,7 +190,7 @@ def make_corpus(
 
 def clustered_unit_vectors(
     n: int, dim: int, *, n_centers: int = 16, spread: float = 0.25,
-    seed: int = 0,
+    seed: int = 0, skew: float = 0.0, grouped: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
     """(n, dim) unit vectors in tight vMF-ish clumps + (n,) center labels.
 
@@ -200,11 +200,25 @@ def clustered_unit_vectors(
     approach the sphere diameter and defeat any bound-based pruning.
     ``spread`` is the per-dimension noise scale relative to unit signal
     (same convention as ``make_corpus``'s ``img_noise``).
+
+    ``skew > 0`` draws cluster sizes Zipf (weight ``1/rank^skew``; label 0
+    is the biggest clump — SemCEB/SemBench-style head-heavy concept
+    distributions). ``grouped=True`` emits rows grouped by label (the
+    ingest order real stores have: images arrive batched by source or
+    concept), which is the order that concentrates one concept's boundary
+    mass onto whichever contiguous shard blocks hold it — the pathology
+    the boundary-balanced sharded build exists to fix.
     """
     rng = np.random.default_rng(seed)
     centers = rng.standard_normal((n_centers, dim))
     centers /= np.linalg.norm(centers, axis=1, keepdims=True)
-    labels = rng.integers(n_centers, size=n)
+    if skew > 0:
+        w = 1.0 / np.arange(1, n_centers + 1, dtype=np.float64) ** skew
+        labels = rng.choice(n_centers, size=n, p=w / w.sum())
+    else:
+        labels = rng.integers(n_centers, size=n)
+    if grouped:
+        labels = np.sort(labels, kind="stable")
     x = centers[labels] + (spread / np.sqrt(dim)) * rng.standard_normal(
         (n, dim))
     x /= np.linalg.norm(x, axis=1, keepdims=True)

@@ -4,6 +4,7 @@ from repro.index.clustered import (
     ClusteredStore,
     ScanPlan,
     build_clustered_store,
+    store_from_fragments,
 )
 from repro.index.sharded import (
     ShardedClusteredStore,
@@ -16,4 +17,5 @@ __all__ = [
     "ShardedClusteredStore",
     "build_clustered_store",
     "build_sharded_clustered_store",
+    "store_from_fragments",
 ]

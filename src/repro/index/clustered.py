@@ -52,6 +52,7 @@ serve driver and ``bench_probe_scaling``.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
 from functools import partial
 
@@ -64,7 +65,8 @@ from repro.kernels.kmeans.ops import kmeans
 
 f32 = jnp.float32
 
-__all__ = ["ClusteredStore", "ScanPlan", "build_clustered_store"]
+__all__ = ["ClusteredStore", "ScanPlan", "build_clustered_store",
+           "store_from_fragments"]
 
 
 @partial(jax.jit, static_argnames=("k",))
@@ -398,30 +400,21 @@ class ClusteredStore:
                 self._cum[key] = 0
 
 
-def build_clustered_store(
-    embeddings: np.ndarray, k_clusters: int, *, iters: int = 8,
-    seed: int = 0, impl: str = "pallas", interpret: bool = True,
-    eps: float = 1e-4, chunk_rows: int = 4096,
-) -> ClusteredStore:
-    """Partition (N, d) embeddings into K clusters for pruned probing.
-
-    Runs Lloyd's k-means (the existing ``repro.kernels.kmeans`` kernel),
-    reorders the store cluster-contiguous, and computes per-cluster radii in
-    float64 (inflated by one part in 1e9 to absorb norm roundoff — the
-    bounds must *never* under-cover). K is clamped to N; empty clusters get
-    zero-width segments and are skipped by every probe.
-    """
-    x = np.asarray(embeddings, np.float32)
-    n, d = x.shape
-    k = max(1, min(int(k_clusters), n))
-    centroids, assign = kmeans(x, k, iters=iters, seed=seed, impl=impl,
-                               interpret=interpret)
+def _assemble_store(x: np.ndarray, cent64: np.ndarray, assign: np.ndarray,
+                    *, eps: float, chunk_rows: int,
+                    perm_base: np.ndarray | None = None) -> ClusteredStore:
+    """Reorder ``x`` cluster-contiguous for a given (centroids, assignment)
+    and compute the exact f64 per-cluster radii (inflated by one part in
+    1e9 to absorb norm roundoff — the bounds must *never* under-cover).
+    ``perm_base`` relabels rows of ``x`` to external row ids (the fragment
+    builder passes global ids; default is ``arange(n)``)."""
+    n = x.shape[0]
+    k = len(cent64)
     order = np.argsort(assign, kind="stable")
     sizes = np.bincount(assign, minlength=k).astype(np.int64)
     offsets = np.zeros(k + 1, np.int64)
     offsets[1:] = np.cumsum(sizes)
     xs = x[order]
-    cent64 = centroids.astype(np.float64)
     rnorm = np.linalg.norm(xs.astype(np.float64) - cent64[assign[order]],
                            axis=1)
     radii = np.zeros(k, np.float64)
@@ -430,8 +423,125 @@ def build_clustered_store(
             radii[c] = rnorm[offsets[c]:offsets[c + 1]].max()
     radii = radii * (1.0 + 1e-9) + 1e-12
     row_norm = np.linalg.norm(xs.astype(np.float64), axis=1).max() if n else 1.0
+    perm = order if perm_base is None else np.asarray(perm_base)[order]
     return ClusteredStore(
         embeddings=jnp.asarray(xs), offsets=offsets, sizes=sizes,
-        centroids=cent64, radii=radii, perm=order.astype(np.int64),
-        eps=eps, chunk_rows=chunk_rows,
+        centroids=np.asarray(cent64, np.float64), radii=radii,
+        perm=perm.astype(np.int64), eps=eps, chunk_rows=chunk_rows,
         max_row_norm=float(row_norm) * (1.0 + 1e-9) + 1e-12)
+
+
+def _split_fat_clusters(x: np.ndarray, cent64: np.ndarray,
+                        assign: np.ndarray, *, split_radius: float,
+                        max_clusters: int, seed: int,
+                        iters: int = 6) -> tuple[np.ndarray, np.ndarray]:
+    """Recursively 2-means-split radius-outlier clusters.
+
+    Lloyd's local optima merge concept clumps into one wide cluster that
+    straddles every probe's boundary (docs/index.md pathology); splitting it
+    restores tight radii without oversegmenting the rest of the store.
+    Widest-first: clusters with radius > ``split_radius`` and >= 2 members
+    are popped from a max-radius heap, split by a local 2-means, and the
+    children re-queued while they stay over budget — until the heap drains
+    or ``max_clusters`` is hit. A degenerate split (all members on one side,
+    e.g. duplicated points) marks the cluster unsplittable, so the loop
+    always terminates. Only the assignment changes; bounds stay exact
+    because radii are recomputed from the actual members downstream.
+    """
+    x64 = x.astype(np.float64)
+    cents = [c for c in np.asarray(cent64, np.float64)]
+    assign = np.asarray(assign).copy()
+
+    def over_budget(c):
+        m = np.flatnonzero(assign == c)
+        if len(m) < 2:
+            return None
+        r = np.linalg.norm(x64[m] - cents[c], axis=1).max()
+        return (-r, c) if r > split_radius else None
+
+    heap = [e for c in range(len(cents)) if (e := over_budget(c))]
+    heapq.heapify(heap)
+    while heap and len(cents) < max_clusters:
+        _, c = heapq.heappop(heap)
+        m = np.flatnonzero(assign == c)
+        # the local 2-means runs on the xla assignment path: the split is a
+        # host-side build decision (no probe-parity constraint), and the
+        # subsets are far too small to amortize a pallas dispatch each
+        sub_c, sub_a = kmeans(x[m], 2, iters=iters,
+                              seed=seed + 7919 * (len(cents) + c),
+                              impl="xla")
+        if (sub_a == sub_a[0]).all():
+            continue                       # unsplittable (duplicates etc.)
+        new_id = len(cents)
+        cents[c] = sub_c[0].astype(np.float64)
+        cents.append(sub_c[1].astype(np.float64))
+        assign[m[sub_a == 1]] = new_id
+        for cc in (c, new_id):
+            if (e := over_budget(cc)):
+                heapq.heappush(heap, e)
+    return np.asarray(cents), assign
+
+
+def build_clustered_store(
+    embeddings: np.ndarray, k_clusters: int, *, iters: int = 8,
+    seed: int = 0, impl: str = "pallas", interpret: bool = True,
+    eps: float = 1e-4, chunk_rows: int = 4096,
+    split_radius: float | None = None, max_clusters: int | None = None,
+) -> ClusteredStore:
+    """Partition (N, d) embeddings into K clusters for pruned probing.
+
+    Runs Lloyd's k-means (the existing ``repro.kernels.kmeans`` kernel),
+    reorders the store cluster-contiguous, and computes per-cluster radii in
+    float64. K is clamped to N; empty clusters get zero-width segments and
+    are skipped by every probe.
+
+    ``split_radius``: after Lloyd's converges, recursively split every
+    cluster whose radius exceeds this budget with a local 2-means
+    (widest-first) until all clusters fit the budget, turn out
+    unsplittable, or the total hits ``max_clusters`` (default ``4 * K``,
+    clamped to N). Splitting only refines the partition — probes stay
+    bitwise equal to the full scan — but turns the fat-cluster pathology
+    (one wide cluster boundary for every probe) into tight segments bounds
+    can actually prune. See docs/index.md.
+    """
+    x = np.asarray(embeddings, np.float32)
+    n, d = x.shape
+    k = max(1, min(int(k_clusters), n))
+    centroids, assign = kmeans(x, k, iters=iters, seed=seed, impl=impl,
+                               interpret=interpret)
+    cent64 = centroids.astype(np.float64)
+    if split_radius is not None and split_radius > 0:
+        cap = min(n, 4 * k if max_clusters is None else int(max_clusters))
+        cent64, assign = _split_fat_clusters(
+            x, cent64, assign, split_radius=float(split_radius),
+            max_clusters=max(k, cap), seed=seed)
+    return _assemble_store(x, cent64, assign, eps=eps, chunk_rows=chunk_rows)
+
+
+def store_from_fragments(
+    embeddings: np.ndarray, fragments: list[tuple[np.ndarray, np.ndarray]],
+    *, eps: float = 1e-4, chunk_rows: int = 4096,
+) -> ClusteredStore:
+    """Build a ``ClusteredStore`` whose clusters are exactly the given
+    ``(row_ids, centroid)`` fragments — no k-means run.
+
+    The boundary-balanced sharded build (``repro.index.sharded``) clusters
+    the store *globally*, packs clusters onto shards by boundary mass, and
+    hands each shard its assigned fragments; this constructor turns one
+    shard's fragments into a local sub-index. ``row_ids`` index into
+    ``embeddings`` and must be disjoint across fragments; ``perm`` carries
+    them through, so the sub-index remembers each row's external id. Radii
+    are recomputed exactly over each fragment's actual members (a fragment
+    of a split cluster is at most as wide as its parent), so bounds stay
+    exact.
+    """
+    x = np.asarray(embeddings, np.float32)
+    rows = np.concatenate([np.asarray(r, np.int64) for r, _ in fragments]) \
+        if fragments else np.empty(0, np.int64)
+    assign = np.concatenate(
+        [np.full(len(r), i, np.int64) for i, (r, _) in enumerate(fragments)]
+    ) if fragments else np.empty(0, np.int64)
+    cent64 = np.asarray([c for _, c in fragments], np.float64) \
+        if fragments else np.empty((0, x.shape[1]), np.float64)
+    return _assemble_store(x[rows], cent64, assign, eps=eps,
+                           chunk_rows=chunk_rows, perm_base=rows)

@@ -36,20 +36,40 @@ exclusive. This module shards the index itself:
 
 Stats: every shard's sub-index keeps its own thread-safe scan accounting
 (rows it actually streamed vs the rows a full shard scan would), aggregated
-by ``stats()`` with a ``per_shard`` breakdown — uneven boundary work across
-shards is the new perf surface, and the serve driver prints it at exit.
+by ``stats()`` with a ``per_shard`` breakdown plus the canonical
+``spread`` / ``max_scan_fraction`` fields — uneven boundary work across
+shards is the perf surface this module's *build* now optimizes.
+
+Boundary-mass balancing (PR 5): the shard_map bucket is uniform (one shape
+across shards), so every probe pays the **max** per-shard boundary rows —
+the min-max cost the contiguous build leaves to chance. With
+``balance="boundary"`` the build clusters the store *globally* (after
+fat-cluster splitting), scores each cluster's expected boundary mass
+(``size x radius``: a random threshold cuts a cluster with probability
+proportional to its radius and pays its size in rows when it does), and
+packs clusters onto shards with a greedy LPT min-max packer under the hard
+equal-rows-per-shard constraint — splitting clusters at shard edges when
+packing requires it (``perm`` makes any reordering result-invariant, and a
+fragment's radius is recomputed from its actual members, so bounds stay
+exact). Probes are bitwise unchanged; only *where* boundary rows live
+moves, which is exactly what the max-over-shards launch cost measures.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.index.clustered import ClusteredStore, build_clustered_store
+from repro.index.clustered import (
+    ClusteredStore,
+    build_clustered_store,
+    store_from_fragments,
+)
 
 __all__ = ["ShardedClusteredStore", "build_sharded_clustered_store"]
 
@@ -71,6 +91,12 @@ class ShardedClusteredStore:
     shard_rows: int                # rows per shard (uniform)
     embeddings: jax.Array          # (N, d) f32, shard-blocked + reordered
     perm: np.ndarray               # (N,) original row ids in stored order
+    balance: str = "contiguous"    # partitioning strategy used at build
+    # predicted per-shard boundary mass of the *contiguous* row-block
+    # partition under the balanced build's global clustering — the
+    # counterfactual serve prints next to boundary_mass() (balanced builds
+    # only; None for contiguous builds, which have no global clustering)
+    contiguous_mass: np.ndarray | None = None
 
     def __post_init__(self):
         self.n = int(self.embeddings.shape[0])
@@ -108,13 +134,26 @@ class ShardedClusteredStore:
             self._probes += 1
             self._launches += 1 if launched else 0
 
+    def boundary_mass(self) -> np.ndarray:
+        """Predicted boundary mass per shard: ``sum(size_c * radius_c)``
+        over each shard's clusters — the build-time proxy for how many rows
+        a threshold landing uniformly at random forces that shard to scan.
+        The balanced build minimizes the max of exactly this vector."""
+        return np.asarray([float((s.sizes * s.radii).sum())
+                           for s in self.shards])
+
     def stats(self) -> dict:
         """Aggregate scan accounting + ``per_shard`` breakdown.
 
         ``launches`` counts shard_map launches (one per probe that scanned
         anything anywhere); ``per_shard[s]['scan_fraction']`` is shard s's
-        rows streamed over the rows a full shard scan would have streamed —
-        the spread across shards measures boundary-work imbalance.
+        rows streamed over the rows a full shard scan would have streamed.
+        ``spread`` (max - min per-shard scan fraction) and
+        ``max_scan_fraction`` are the canonical imbalance fields — the
+        uniform shard_map bucket makes every probe pay the *max* shard's
+        boundary rows, so ``max_scan_fraction`` is what a probe actually
+        costs and ``spread`` is the headroom rebalancing can recover.
+        ``max_shard_rows_scanned`` is the same max in absolute rows.
         """
         per = [s.stats() for s in self.shards]
         with self._lock:
@@ -127,6 +166,11 @@ class ShardedClusteredStore:
                            "rows_full_equiv": p["rows_full_equiv"],
                            "scan_fraction": p["scan_fraction"]}
                           for p in per]
+        fracs = [p["scan_fraction"] for p in d["per_shard"]]
+        d["max_scan_fraction"] = max(fracs, default=0.0)
+        d["spread"] = (max(fracs) - min(fracs)) if fracs else 0.0
+        d["max_shard_rows_scanned"] = max(
+            (p["rows_scanned"] for p in d["per_shard"]), default=0)
         return d
 
     def reset_stats(self) -> None:
@@ -137,20 +181,96 @@ class ShardedClusteredStore:
             self._launches = 0
 
 
+def _pack_boundary_balanced(
+    gcs: ClusteredStore, n_shards: int, rows: int,
+) -> list[list[tuple[np.ndarray, np.ndarray]]]:
+    """Greedy LPT min-max pack of global clusters onto shards.
+
+    Items are the global store's clusters scored by boundary mass
+    ``size x radius``; each is assigned whole to the currently-lightest
+    shard with row capacity left (longest-processing-time order), and when
+    the lightest shard cannot hold a whole cluster the cluster is *split at
+    the shard edge*: members are ordered by distance to the centroid, the
+    near core fills the shard (tight fragment radius), and the far shell
+    re-enters the worklist as a new item with its own (smaller or equal)
+    mass. Row capacities sum to N, so packing always completes with every
+    shard exactly full. Returns per-shard ``(global_row_ids, centroid)``
+    fragment lists.
+    """
+    # per-cluster member ids (global row ids) sorted near-to-far, plus the
+    # matching centroid distances so fragment masses need no re-norm pass
+    xs = np.asarray(gcs.embeddings, np.float64)   # one host copy, not K
+    items = []                       # max-heap on mass: (-mass, tiebreak, ...)
+    tiebreak = 0
+    for c in range(gcs.k_clusters):
+        if not gcs.sizes[c]:
+            continue
+        members = gcs.perm[gcs.offsets[c]:gcs.offsets[c + 1]]
+        seg = xs[gcs.offsets[c]:gcs.offsets[c + 1]]
+        dist = np.linalg.norm(seg - gcs.centroids[c], axis=1)
+        order = np.argsort(dist, kind="stable")
+        members, dist = members[order], dist[order]
+        items.append((-float(len(members) * dist[-1]), tiebreak,
+                      members, dist, gcs.centroids[c]))
+        tiebreak += 1
+    heapq.heapify(items)
+
+    cap = [rows] * n_shards
+    load = [(0.0, s) for s in range(n_shards)]      # min-heap on mass
+    heapq.heapify(load)
+    frags: list[list[tuple[np.ndarray, np.ndarray]]] = \
+        [[] for _ in range(n_shards)]
+    while items:
+        neg_mass, _, members, dist, cent = heapq.heappop(items)
+        # lightest shard with capacity (full shards drop out of the heap)
+        while cap[load[0][1]] == 0:
+            heapq.heappop(load)
+        mass, s = heapq.heappop(load)
+        take = min(len(members), cap[s])
+        frags[s].append((members[:take], cent))
+        cap[s] -= take
+        placed_mass = float(take * dist[take - 1])  # fragment's own radius
+        heapq.heappush(load, (mass + placed_mass, s))
+        if take < len(members):                     # far shell re-enters
+            rest, rdist = members[take:], dist[take:]
+            tiebreak += 1
+            heapq.heappush(items, (-float(len(rest) * rdist[-1]), tiebreak,
+                                   rest, rdist, cent))
+    return frags
+
+
 def build_sharded_clustered_store(
     embeddings: np.ndarray, k_clusters: int, n_shards: int, *,
     iters: int = 8, seed: int = 0, impl: str = "pallas",
     interpret: bool = True, eps: float = 1e-4, chunk_rows: int = 4096,
+    balance: str = "contiguous", split_radius: float | None = None,
+    max_clusters: int | None = None,
 ) -> ShardedClusteredStore:
-    """K-means-partition each of ``n_shards`` contiguous row blocks.
+    """Partition the store into ``n_shards`` equal row blocks of K clusters.
 
     The block partition matches ``NamedSharding(mesh, P(('pod','data')))``
     row-major device order, so the reordered store can be placed on the
     mesh and every device's slice is exactly its sub-index. ``k_clusters``
     is per shard (size per-shard K by the local row count: K ~ sqrt(N/S)).
     N must divide evenly — jax requires the same for the sharded store.
-    Per-shard k-means seeds differ so identical shard contents don't
-    collapse to identical (possibly bad) local optima.
+
+    ``balance`` picks the partitioning strategy:
+
+    * ``"contiguous"`` (default, PR 4): each shard is whatever contiguous
+      row block the *original order* happens to give it, clustered locally
+      (per-shard k-means seeds differ so identical shard contents don't
+      collapse to identical local optima). Ingest order that groups rows by
+      concept concentrates a clump's boundary mass on whichever shards hold
+      it — and the uniform shard_map bucket makes every probe pay the max.
+    * ``"boundary"``: cluster globally (``k_clusters * n_shards`` clusters,
+      post fat-cluster splitting), score each cluster's boundary mass
+      (``size x radius``), and greedily pack clusters onto shards to
+      minimize the max per-shard mass under the hard equal-rows constraint
+      (clusters split at shard edges when packing requires it — see
+      ``_pack_boundary_balanced``). Counts/top-k stay bitwise equal to any
+      other partition: ``perm`` makes reordering result-invariant.
+
+    ``split_radius`` (either mode) forwards to the fat-cluster splitter.
     """
     x = np.asarray(embeddings, np.float32)
     n = x.shape[0]
@@ -159,12 +279,49 @@ def build_sharded_clustered_store(
             f"store rows ({n}) must divide evenly into n_shards "
             f"({n_shards}) — same constraint as the mesh sharding")
     rows = n // n_shards
+    if not 1 <= int(k_clusters) <= rows:
+        raise ValueError(
+            f"k_clusters={k_clusters} must be in [1, shard_rows={rows}] — "
+            f"each shard holds {rows} rows ({n} rows / {n_shards} shards) "
+            f"and k-means cannot place more centroids than rows")
+    if balance not in ("contiguous", "boundary"):
+        raise ValueError(f"balance={balance!r}: expected 'contiguous' or "
+                         f"'boundary'")
+
+    if balance == "boundary":
+        gcs = build_clustered_store(
+            x, int(k_clusters) * n_shards, iters=iters, seed=seed,
+            impl=impl, interpret=interpret, eps=eps, chunk_rows=chunk_rows,
+            split_radius=split_radius, max_clusters=max_clusters)
+        # counterfactual: the contiguous row-block partition's predicted
+        # mass under the same global clustering (each row contributes its
+        # cluster's radius to the block that holds it)
+        cluster_of = np.empty(n, np.int64)
+        cluster_of[gcs.perm] = np.repeat(np.arange(gcs.k_clusters),
+                                         gcs.sizes)
+        contiguous_mass = gcs.radii[cluster_of].reshape(n_shards,
+                                                        rows).sum(axis=1)
+        frags = _pack_boundary_balanced(gcs, n_shards, rows)
+        shards, perm, parts = [], [], []
+        for s in range(n_shards):
+            cs = store_from_fragments(x, frags[s], eps=eps,
+                                      chunk_rows=chunk_rows)
+            shards.append(cs)
+            perm.append(cs.perm)        # already global row ids
+            parts.append(np.asarray(cs.embeddings))
+        return ShardedClusteredStore(
+            shards=shards, shard_rows=rows,
+            embeddings=jnp.asarray(np.concatenate(parts)),
+            perm=np.concatenate(perm), balance="boundary",
+            contiguous_mass=contiguous_mass)
+
     shards, perm, parts = [], [], []
     for s in range(n_shards):
         cs = build_clustered_store(
             x[s * rows:(s + 1) * rows], k_clusters, iters=iters,
             seed=seed + s, impl=impl, interpret=interpret, eps=eps,
-            chunk_rows=chunk_rows)
+            chunk_rows=chunk_rows, split_radius=split_radius,
+            max_clusters=max_clusters)
         shards.append(cs)
         perm.append(s * rows + cs.perm)
         parts.append(np.asarray(cs.embeddings))

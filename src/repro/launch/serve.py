@@ -42,6 +42,17 @@ k-means clusters per shard): each probe plans all shards on the host and
 one shard_map scans only the boundary segments — the run then ends with
 the aggregate AND per-shard scan-fraction counters, whose spread shows
 boundary-work imbalance across shards. See docs/index.md.
+
+``--split-radius R`` / ``--balance-boundary`` (PR 5) make the *build*
+boundary-aware: fat clusters (radius > R) are recursively 2-means-split
+until pruning bounds get traction, and with ``--balance-boundary`` the
+sharded index is built from a *global* clustering whose clusters are
+packed onto shards by boundary mass (size x radius, greedy min-max LPT
+under the equal-rows constraint, splitting clusters at shard edges) —
+the uniform shard_map bucket means every probe pays the max per-shard
+boundary rows, and balancing is what shrinks that max. The build prints
+the per-shard boundary-mass spread before/after; results stay bitwise
+identical either way. See docs/index.md.
 """
 
 from __future__ import annotations
@@ -76,9 +87,17 @@ from repro.launch.coalescer import (
 def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
                 rate: float = 0.6, spec_steps: int = 600, seed: int = 0,
                 impl: str = "xla", index_clusters: int = 0,
-                shards: int = 0):
+                shards: int = 0, split_radius: float = 0.0,
+                balance_boundary: bool = False):
     corpus = make_corpus(dataset, n_images=n_images, seed=seed)
     mesh = None
+    if balance_boundary and (shards <= 0 or index_clusters <= 0):
+        raise ValueError("--balance-boundary repartitions the sharded "
+                         "pruned index — it needs --shards and "
+                         "--index-clusters")
+    if split_radius > 0 and index_clusters <= 0:
+        raise ValueError("--split-radius tunes the pruned-index build — "
+                         "it needs --index-clusters")
     if shards > 0:
         from repro.launch.mesh import make_probe_mesh
 
@@ -86,20 +105,39 @@ def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
         print(f"mesh: {shards} probe shard(s), "
               f"{corpus.images.shape[0] // shards} rows each")
     index = None
+    sr = split_radius if split_radius > 0 else None
     if index_clusters > 0 and mesh is not None:
         from repro.index import build_sharded_clustered_store
 
         index = build_sharded_clustered_store(
-            corpus.images, index_clusters, shards, seed=seed, impl=impl)
-        print(f"index: {index.n_shards} shards x {index.k_clusters} "
-              f"clusters over {index.n} rows")
+            corpus.images, index_clusters, shards, seed=seed, impl=impl,
+            balance="boundary" if balance_boundary else "contiguous",
+            split_radius=sr)
+        print(f"index: {index.n_shards} shards x ~{index.k_clusters} "
+              f"clusters over {index.n} rows ({index.balance} partition"
+              f"{f', split_radius={split_radius}' if sr else ''})")
+        mass = index.boundary_mass()
+        if index.contiguous_mass is not None:
+            cm = index.contiguous_mass
+            print(f"boundary mass/shard: contiguous "
+                  f"[{', '.join(f'{m:.0f}' for m in cm)}] "
+                  f"(spread {cm.max() - cm.min():.0f}) -> balanced "
+                  f"[{', '.join(f'{m:.0f}' for m in mass)}] "
+                  f"(spread {mass.max() - mass.min():.0f})")
+        else:
+            print(f"boundary mass/shard: "
+                  f"[{', '.join(f'{m:.0f}' for m in mass)}] "
+                  f"(spread {mass.max() - mass.min():.0f}; "
+                  f"--balance-boundary repartitions to even it out)")
     elif index_clusters > 0:
         from repro.index import build_clustered_store
 
         index = build_clustered_store(corpus.images, index_clusters,
-                                      seed=seed, impl=impl)
+                                      seed=seed, impl=impl,
+                                      split_radius=sr)
         print(f"index: {index.k_clusters} clusters over {index.n} rows "
-              f"(radii p50={float(np.median(index.radii)):.3f})")
+              f"(radii p50={float(np.median(index.radii)):.3f}"
+              f"{f', split_radius={split_radius}' if sr else ''})")
     hist = SemanticHistogram(jax.numpy.asarray(corpus.images), impl=impl,
                              mesh=mesh, index=index)
     X, y = specificity_dataset(corpus, n_samples=2000, seed=seed)
@@ -213,6 +251,19 @@ def main(argv=None) -> None:
                          "--xla_force_host_platform_device_count first). "
                          "Composes with --index-clusters: per-shard pruned "
                          "probes, per-shard scan counters at exit")
+    ap.add_argument("--split-radius", type=float, default=0.0,
+                    help=">0: split fat clusters at index build until "
+                         "every cluster's radius fits this budget (local "
+                         "2-means, widest first) — fixes the one-wide-"
+                         "cluster pathology that defeats pruning")
+    ap.add_argument("--balance-boundary", action="store_true",
+                    help="with --shards + --index-clusters: cluster "
+                         "globally and pack clusters onto shards by "
+                         "boundary mass (size x radius, min-max LPT under "
+                         "equal rows/shard) instead of taking contiguous "
+                         "row blocks — evens the max per-shard boundary "
+                         "rows every probe pays; prints the before/after "
+                         "per-shard mass spread")
     ap.add_argument("--concurrency", type=int, default=1,
                     help=">1: plan queries from this many threads through "
                          "a shared predicate coalescer + LRU cache")
@@ -239,7 +290,9 @@ def main(argv=None) -> None:
     corpus, estimators = build_stack(args.dataset, seed=args.seed,
                                      impl=args.impl,
                                      index_clusters=args.index_clusters,
-                                     shards=args.shards)
+                                     shards=args.shards,
+                                     split_radius=args.split_radius,
+                                     balance_boundary=args.balance_boundary)
     queries = generate_queries(corpus, n_queries=args.queries,
                                n_filters=args.filters, seed=args.seed)
     if args.concurrency > 1:
@@ -262,8 +315,9 @@ def main(argv=None) -> None:
             fr = [p["scan_fraction"] for p in s["per_shard"]]
             print("per-shard scan fraction: ["
                   + ", ".join(f"{f:.0%}" for f in fr)
-                  + f"] (spread {max(fr) - min(fr):.0%} = boundary-work "
-                  f"imbalance across shards)")
+                  + f"] (spread {s['spread']:.0%} = boundary-work "
+                  f"imbalance; probes pay the max, "
+                  f"{s['max_scan_fraction']:.0%})")
 
 
 if __name__ == "__main__":

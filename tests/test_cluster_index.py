@@ -361,6 +361,65 @@ def test_cache_kth_batch_hits_bitwise_and_keys_distinguish_k(with_index):
     np.testing.assert_array_equal(k7_first, plain.kth_smallest_batch(preds, 7))
 
 
+# ------------------------------------------------------ fat-cluster splitting
+
+
+def test_split_tightens_radii_and_stays_exact(rng):
+    """An undersized K leaves Lloyd's with fat merged clusters whose radius
+    spans concept clumps; split_radius recursively 2-means them until every
+    cluster fits the budget — strictly more clusters, bounded radii, and
+    probes bitwise equal to the full scan (splitting only refines the
+    partition)."""
+    x = _store()
+    fat = build_clustered_store(x, 4, iters=6, seed=0, impl="xla")
+    split = build_clustered_store(x, 4, iters=6, seed=0, impl="xla",
+                                  split_radius=0.35)
+    assert split.k_clusters > fat.k_clusters
+    assert fat.radii.max() > 0.35          # the pathology was present
+    assert split.radii[split.sizes > 0].max() <= 0.35 * (1 + 1e-6)
+    # still a valid partition of the same rows
+    assert sorted(split.perm.tolist()) == list(range(N))
+    np.testing.assert_array_equal(np.asarray(split.embeddings),
+                                  x[split.perm])
+    assert split.sizes.sum() == N
+    full = SemanticHistogram(jnp.asarray(x))
+    pruned = SemanticHistogram(jnp.asarray(x), index=split)
+    preds = x[rng.integers(N, size=4)]
+    thrs = np.asarray([_thr_at(x, p, s) for p, s in
+                       zip(preds, (0.01, 0.1, 0.5, 0.9))], np.float32)
+    cf, tf = full.probe_batch(preds, thrs, k=7)
+    cp, tp = pruned.probe_batch(preds, thrs, k=7)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cp))
+    np.testing.assert_array_equal(np.asarray(tf), np.asarray(tp))
+    # and the split index prunes where the fat one couldn't: a
+    # low-selectivity probe's boundary union shrinks
+    pred = x[9]
+    thr = np.asarray([[_thr_at(x, pred, 0.01)]], np.float32)
+    m_fat = fat.plan_scan(pred[None], thr, need_topk=False).m
+    m_split = split.plan_scan(pred[None], thr, need_topk=False).m
+    assert m_split < m_fat
+
+
+def test_split_respects_max_clusters_and_terminates_on_duplicates():
+    # duplicated rows: no 2-means can shrink the radius below the budget —
+    # the splitter must mark such clusters unsplittable and terminate
+    dup = np.tile(_store()[:8], (50, 1))
+    cs = build_clustered_store(dup, 2, iters=3, seed=0, impl="xla",
+                               split_radius=1e-9)
+    assert cs.sizes.sum() == 400
+    full = SemanticHistogram(jnp.asarray(dup))
+    h = SemanticHistogram(jnp.asarray(dup), index=cs)
+    assert h.count_within(dup[0], 0.5) == full.count_within(dup[0], 0.5)
+    # max_clusters caps the recursion no matter how wide the clusters stay
+    x = _store()
+    capped = build_clustered_store(x, 4, iters=4, seed=0, impl="xla",
+                                   split_radius=0.05, max_clusters=10)
+    assert capped.k_clusters <= 10
+    hc = SemanticHistogram(jnp.asarray(x), index=capped)
+    fs = SemanticHistogram(jnp.asarray(x))
+    assert hc.count_within(x[3], 0.4) == fs.count_within(x[3], 0.4)
+
+
 # ----------------------------------------------- exhaustive acceptance sweep
 
 

@@ -37,6 +37,14 @@ def test_build_and_histogram_validation():
     x, _ = clustered_unit_vectors(400, 32, n_centers=4, spread=0.2, seed=1)
     with pytest.raises(ValueError, match="divide evenly"):
         build_sharded_clustered_store(x, 4, 3)
+    # k_clusters is per shard and can't exceed the shard's rows — caught
+    # up front with the actual numbers, not deep inside k-means
+    with pytest.raises(ValueError, match=r"shard_rows=200"):
+        build_sharded_clustered_store(x, 201, 2)
+    with pytest.raises(ValueError, match="k_clusters=0"):
+        build_sharded_clustered_store(x, 0, 2)
+    with pytest.raises(ValueError, match="balance="):
+        build_sharded_clustered_store(x, 4, 2, balance="bogus")
     sidx = build_sharded_clustered_store(x, 4, 2, iters=2, impl="xla")
     with pytest.raises(ValueError, match="needs mesh"):
         SemanticHistogram(jnp.asarray(x), index=sidx)
@@ -65,6 +73,66 @@ def test_one_shard_mesh_parity_inprocess(impl):
     full = SemanticHistogram(jnp.asarray(x), mesh=mesh, impl=impl)
     d = np.sort(1.0 - x @ x[3])
     thr_low = float(0.5 * (d[6] + d[7]))            # ~1% selectivity
+    for thr in (thr_low, 0.5, 1.9):
+        assert pruned.count_within(x[3], thr) == full.count_within(x[3], thr)
+    preds = x[:4]
+    thrs = np.asarray([thr_low, 0.4, 0.9, 1.5], np.float32)
+    cf, tf = full.probe_batch(preds, thrs, k=6)
+    cp, tp = pruned.probe_batch(preds, thrs, k=6)
+    np.testing.assert_array_equal(np.asarray(cf), np.asarray(cp))
+    np.testing.assert_array_equal(np.asarray(tf), np.asarray(tp))
+    assert pruned.kth_smallest_distance(x[3], 9) == \
+        full.kth_smallest_distance(x[3], 9)
+
+
+def test_balanced_build_layout_and_packing():
+    """Boundary-balanced builds keep every structural invariant the mesh
+    placement relies on: equal rows per shard, a global permutation, shard
+    embeddings = x[perm] blockwise — while shrinking the per-shard
+    boundary-mass spread the contiguous build leaves to ingest order."""
+    x, _ = clustered_unit_vectors(1200, 48, n_centers=10, spread=0.22,
+                                  seed=7, skew=1.5, grouped=True)
+    contig = build_sharded_clustered_store(x, 10, 4, iters=4, impl="xla")
+    bal = build_sharded_clustered_store(x, 10, 4, iters=4, impl="xla",
+                                        balance="boundary",
+                                        split_radius=0.35)
+    assert bal.balance == "boundary" and contig.balance == "contiguous"
+    assert bal.n_shards == 4 and bal.shard_rows == 300
+    assert sorted(bal.perm.tolist()) == list(range(1200))
+    xs = np.asarray(bal.embeddings)
+    np.testing.assert_array_equal(xs, x[bal.perm])
+    for s in range(4):
+        shard = bal.shards[s]
+        assert shard.n == 300
+        assert shard.sizes.sum() == 300
+        # each sub-index's perm carries the global row ids of its block
+        np.testing.assert_array_equal(
+            np.asarray(shard.embeddings), x[bal.perm[s * 300:(s + 1) * 300]])
+    # the packer's objective: max per-shard boundary mass shrinks vs the
+    # contiguous partition of the same store
+    assert bal.boundary_mass().max() < contig.boundary_mass().max()
+    assert bal.contiguous_mass is not None and contig.contiguous_mass is None
+    # canonical stats fields exist before any probe
+    st = bal.stats()
+    assert st["spread"] == 0.0 and st["max_scan_fraction"] == 0.0
+    assert st["max_shard_rows_scanned"] == 0
+
+
+def test_balanced_one_shard_mesh_parity_inprocess():
+    """balance='boundary' on a 1-device mesh: the degenerate pack (every
+    cluster onto the one shard) must still be bitwise the unsharded scan."""
+    from repro.launch.mesh import make_probe_mesh
+
+    x, _ = clustered_unit_vectors(700, 64, n_centers=8, spread=0.2, seed=2,
+                                  skew=1.2, grouped=True)
+    sidx = build_sharded_clustered_store(x, 12, 1, iters=4, impl="xla",
+                                         balance="boundary",
+                                         split_radius=0.3)
+    mesh = make_probe_mesh(1)
+    pruned = SemanticHistogram(jnp.asarray(x), mesh=mesh, index=sidx)
+    full = SemanticHistogram(jnp.asarray(x), mesh=mesh)
+    d = np.sort(1.0 - x @ x[3])
+    thr_low = float(0.5 * (d[6] + d[7]))
     for thr in (thr_low, 0.5, 1.9):
         assert pruned.count_within(x[3], thr) == full.count_within(x[3], thr)
     preds = x[:4]
@@ -183,6 +251,89 @@ def test_sharded_pruned_parity_fast(run_multidevice):
     assert out["scan_fraction"] < 0.5
 
 
+BALANCED_FAST_SCRIPT = """
+    from repro.core.histogram import SemanticHistogram
+    from repro.core.synthetic import clustered_unit_vectors
+    from repro.index import build_sharded_clustered_store
+    from repro.launch.mesh import make_probe_mesh
+
+    out = {"fail": []}
+    def check(name, ok):
+        if not ok:
+            out["fail"].append(name)
+
+    n, s = 1600, 4
+    x, _ = clustered_unit_vectors(n, 64, n_centers=10, spread=0.22, seed=5,
+                                  skew=1.5, grouped=True)
+    mesh = make_probe_mesh(s)
+    contig = build_sharded_clustered_store(x, 10, s, iters=4, impl="xla")
+    bal = build_sharded_clustered_store(x, 10, s, iters=4, impl="xla",
+                                        balance="boundary",
+                                        split_radius=0.35)
+    oracle = SemanticHistogram(jnp.asarray(x))
+    full = SemanticHistogram(jnp.asarray(x), mesh=mesh)
+    hb = SemanticHistogram(jnp.asarray(x), mesh=mesh, index=bal)
+    hc = SemanticHistogram(jnp.asarray(x), mesh=mesh, index=contig)
+
+    pred = x[0]                     # head-concept probe (grouped order)
+    ds = np.sort(1.0 - x @ pred)
+    thr_low = float(0.5 * (ds[15] + ds[16]))      # ~1% selectivity
+
+    # balanced counts/top-k/kth: bitwise vs sharded full AND unsharded
+    for thr in (thr_low, 0.5, 1.2, 1.9):
+        c = (hb.count_within(pred, thr), full.count_within(pred, thr),
+             oracle.count_within(pred, thr))
+        check(f"count@{thr:.2f}:{c}", c[0] == c[1] == c[2])
+    preds = x[[0, 500, 1100, 1599]]
+    thrs = np.asarray([thr_low, 0.4, 0.8, 1.6], np.float32)
+    cb, tb = hb.probe_batch(preds, thrs, k=7)
+    cf, tf = full.probe_batch(preds, thrs, k=7)
+    co, to = oracle.probe_batch(preds, thrs, k=7)
+    cb, tb, cf, tf = map(np.asarray, (cb, tb, cf, tf))
+    check("bat-counts", (cb == cf).all())
+    check("bat-topk", np.array_equal(tb, tf))
+    check("bat-counts-oracle", (cb == np.asarray(co)).all())
+    check("bat-topk-oracle", np.array_equal(tb, np.asarray(to)))
+    for k in (1, 9, 700):
+        check(f"kth@{k}", hb.kth_smallest_distance(pred, k)
+              == full.kth_smallest_distance(pred, k))
+
+    # pallas impl too: masked kernels over the balanced layout
+    hbp = SemanticHistogram(jnp.asarray(x), mesh=mesh, impl="pallas",
+                            index=bal)
+    fullp = SemanticHistogram(jnp.asarray(x), mesh=mesh, impl="pallas")
+    c3, t3 = hbp.probe_batch(x[:3], np.asarray([thr_low, 0.5, 1.8],
+                                               np.float32), k=5)
+    c3f, t3f = fullp.probe_batch(x[:3], np.asarray([thr_low, 0.5, 1.8],
+                                                   np.float32), k=5)
+    check("pallas-counts", (np.asarray(c3) == np.asarray(c3f)).all())
+    check("pallas-topk", np.array_equal(np.asarray(t3), np.asarray(t3f)))
+
+    # the balance property, observed: a head-concept low-sel probe pays
+    # fewer max-shard boundary rows (and a smaller spread) balanced
+    for h, sidx in ((hc, contig), (hb, bal)):
+        sidx.reset_stats()
+        h.count_within(pred, thr_low)
+    stc, stb = contig.stats(), bal.stats()
+    check(f"max-rows {stc['max_shard_rows_scanned']}->"
+          f"{stb['max_shard_rows_scanned']}",
+          stb["max_shard_rows_scanned"] <= stc["max_shard_rows_scanned"])
+    check("spread", stb["spread"] <= stc["spread"])
+    out["max_rows"] = [stc["max_shard_rows_scanned"],
+                       stb["max_shard_rows_scanned"]]
+    print(json.dumps(out))
+"""
+
+
+def test_balanced_sharded_parity_fast(run_multidevice):
+    """Balanced+split build on a Zipf-skewed grouped store over 4 shards:
+    bitwise parity with the sharded full scan and the unsharded oracle on
+    both impls, and the max-shard boundary rows / spread shrink vs the
+    contiguous build for the same probe."""
+    out = run_multidevice(BALANCED_FAST_SCRIPT, devices=4)
+    assert not out["fail"], out["fail"]
+
+
 # ------------------------------------- exhaustive sweep (slow, acceptance)
 
 SWEEP_SCRIPT = """
@@ -242,4 +393,64 @@ def test_sharded_pruned_parity_sweep(run_multidevice, shards):
     pruned counts and top-k bitwise equal the sharded full scan."""
     out = run_multidevice(SWEEP_SCRIPT.format(shards=shards),
                           devices=shards, timeout=900)
+    assert not out["fail"], out["fail"]
+
+
+BALANCED_SWEEP_SCRIPT = """
+    from repro.core.histogram import SemanticHistogram
+    from repro.core.synthetic import clustered_unit_vectors
+    from repro.index import build_sharded_clustered_store
+    from repro.launch.mesh import make_probe_mesh
+
+    s = {shards}
+    skew = {skew}
+    out = {{"fail": []}}
+    n, d = 4000, 96
+    x, _ = clustered_unit_vectors(n, d, n_centers=24, spread=0.25, seed=3,
+                                  skew=skew, grouped=True)
+    mesh = make_probe_mesh(s)
+    rng = np.random.default_rng(1)
+    for k_shard in (4, 24):
+        bal = build_sharded_clustered_store(
+            x, k_shard, s, iters=5, impl="xla", balance="boundary",
+            split_radius=0.4)
+        full = SemanticHistogram(jnp.asarray(x), mesh=mesh)
+        hb = SemanticHistogram(jnp.asarray(x), mesh=mesh, index=bal)
+        for sel in (0.001, 0.01, 0.1, 0.5):
+            tag = f"S={{s}},skew={{skew}},K={{k_shard}},sel={{sel}}"
+            preds = np.stack([x[0], x[rng.integers(n)]])
+            thrs = []
+            for p in preds:
+                dd = np.sort(1.0 - x @ p)
+                kth = max(1, int(round(sel * n)))
+                thrs.append(0.5 * (dd[kth - 1] + dd[min(kth, n - 1)]))
+            thrs = np.asarray(thrs, np.float32)
+            for j, p in enumerate(preds):
+                cb = hb.count_within(p, float(thrs[j]))
+                cf = full.count_within(p, float(thrs[j]))
+                if cb != cf:
+                    out["fail"].append(f"{{tag}} count {{cb}}!={{cf}}")
+            cf, tf = full.probe_batch(preds, thrs, k=16)
+            cb, tb = hb.probe_batch(preds, thrs, k=16)
+            if not (np.asarray(cf) == np.asarray(cb)).all():
+                out["fail"].append(f"{{tag}} batched counts")
+            if not np.array_equal(np.asarray(tf), np.asarray(tb)):
+                out["fail"].append(f"{{tag}} batched topk")
+            k_cal = max(1, int(sel * n))
+            if hb.kth_smallest_distance(preds[0], k_cal) != \\
+                    full.kth_smallest_distance(preds[0], k_cal):
+                out["fail"].append(f"{{tag}} kth@{{k_cal}}")
+    print(json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shards,skew", [(4, 1.0), (4, 1.6), (8, 1.3)])
+def test_balanced_parity_sweep(run_multidevice, shards, skew):
+    """Acceptance grid for the boundary-balanced build: skew x shard count
+    x per-shard K x selectivity — balanced+split counts and top-k bitwise
+    equal the sharded full scan."""
+    out = run_multidevice(
+        BALANCED_SWEEP_SCRIPT.format(shards=shards, skew=skew),
+        devices=shards, timeout=900)
     assert not out["fail"], out["fail"]
