@@ -170,6 +170,24 @@ for sel in (0.001, 0.01):
 """
 
 
+def measure_probe_us(n: int, *, d: int = 1152, k: int = 128,
+                     iters: int = 3, seed: int = 0) -> float:
+    """Measured wall µs of one jitted single-predicate probe over an (n, d)
+    store — the canonical ``probe_measured_cpu`` measurement. Shared with
+    ``scripts/check_bench.py``, which re-runs a small subset of these and
+    gates on regression vs the persisted ``BENCH_probe_scaling.json``."""
+    rng = np.random.default_rng(seed)
+    pred = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    thr = jnp.asarray([0.5], jnp.float32)
+    f = jax.jit(lambda s, p, t: _local_probe(s, p, t, k))
+    store = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    f(store, pred, thr)[0].block_until_ready()       # warm the jit
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(store, pred, thr))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
 def main() -> list[str]:
     rows = [csv_row("bench", "config", "us_per_call", "derived")]
     recs: list[dict] = []
@@ -182,20 +200,15 @@ def main() -> list[str]:
                      "us_per_call": str(us_per_call),
                      "derived": str(derived)})
 
-    rng = np.random.default_rng(0)
-    pred = jnp.asarray(rng.standard_normal(1152), jnp.float32)
-    thr = jnp.asarray([0.5], jnp.float32)
-    f = jax.jit(lambda s, p, t: _local_probe(s, p, t, 128))
     for n in (10_000, 100_000, 500_000):
-        store = jnp.asarray(rng.standard_normal((n, 1152)), jnp.float32)
-        f(store, pred, thr)[0].block_until_ready()
-        t0 = time.perf_counter()
-        iters = 3
-        for _ in range(iters):
-            jax.block_until_ready(f(store, pred, thr))
-        us = (time.perf_counter() - t0) / iters * 1e6
+        us = measure_probe_us(n)
         add("probe_measured_cpu", f"N={n}", f"{us:.0f}",
             f"{n*1152*4/(us/1e6)/1e9:.1f}GB/s")
+
+    # fresh stream for the remaining sections — they need random data, not
+    # any particular draws (all parity checks below are self-consistent)
+    rng = np.random.default_rng(0)
+    _ = rng.standard_normal(1152)
 
     # batched multi-predicate probe: one store pass for B predicates.
     # Amortized µs/predicate must collapse vs the B=1 row — that's the PR's

@@ -1,0 +1,109 @@
+"""Perf-regression gate: re-measure a small probe subset vs the baseline.
+
+``BENCH_probe_scaling.json`` (written at the repo root by every
+``benchmarks/bench_probe_scaling.py`` run) persists the measured
+``probe_measured_cpu`` rows. This gate re-runs just those single-predicate
+probes — via the same ``measure_probe_us`` helper the benchmark uses, same
+shapes, same jitted kernel — and fails if any re-measured wall time exceeds
+``tolerance x`` its persisted baseline. It catches the regression class the
+unit tests can't: a change that keeps counts bitwise-identical but makes
+every probe slower (an accidental de-jit, a dtype upcast, a lost fast path).
+
+Tolerance defaults to 3x: CPU wall times on shared machines are noisy, and
+the gate's job is to catch order-of-magnitude regressions, not 10% drift.
+
+Run directly (``python scripts/check_bench.py [--quick]``) or via
+``python scripts/smoke_all.py --check-bench``. Exit code 1 on regression.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path[:0] = [p for p in (str(REPO), str(REPO / "src"))
+                if p not in sys.path]
+
+# the re-measured subset: cheap rows only (the 500k row costs ~2.3GB of
+# store and dominates bench wall time; 10k+100k already span the jit and
+# the memory-bound regimes)
+FULL_NS = (10_000, 100_000)
+QUICK_NS = (10_000,)
+
+
+def load_baseline(path: Path) -> dict[int, float]:
+    """``probe_measured_cpu`` rows of a persisted bench JSON as {N: µs}."""
+    data = json.loads(path.read_text())
+    base: dict[int, float] = {}
+    for row in data.get("rows", []):
+        if row.get("bench") == "probe_measured_cpu":
+            n = int(str(row["config"]).split("=", 1)[1])
+            base[n] = float(row["us_per_call"])
+    return base
+
+
+def compare(baseline: dict[int, float], measured: dict[int, float],
+            tolerance: float) -> list[str]:
+    """Pure comparison (unit-testable without measuring): one failure
+    message per measured row that regresses past tolerance or has no
+    baseline row to compare against."""
+    fails = []
+    for n, us in sorted(measured.items()):
+        if n not in baseline:
+            fails.append(f"N={n}: no probe_measured_cpu baseline row")
+        elif us > tolerance * baseline[n]:
+            fails.append(f"N={n}: measured {us:.0f}us > {tolerance:.1f}x "
+                         f"baseline {baseline[n]:.0f}us")
+    return fails
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline",
+                    default=str(REPO / "BENCH_probe_scaling.json"),
+                    help="persisted bench JSON to gate against")
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="fail if measured > tolerance x baseline "
+                         "(default 3.0 — CPU wall noise headroom)")
+    ap.add_argument("--quick", action="store_true",
+                    help="re-measure only the N=10k row")
+    args = ap.parse_args(argv)
+
+    path = Path(args.baseline)
+    if not path.exists():
+        # first run on a fresh checkout: nothing to gate against yet —
+        # the bench run itself creates the baseline
+        print(f"check_bench: SKIP (no baseline at {path.name}; run "
+              f"benchmarks/bench_probe_scaling.py to create one)")
+        return 0
+    baseline = load_baseline(path)
+    if not baseline:
+        print(f"check_bench: FAIL ({path.name} has no probe_measured_cpu "
+              f"rows)", file=sys.stderr)
+        return 1
+
+    from benchmarks.bench_probe_scaling import measure_probe_us
+
+    measured = {n: measure_probe_us(n)
+                for n in (QUICK_NS if args.quick else FULL_NS)}
+    for n, us in sorted(measured.items()):
+        base = baseline.get(n)
+        ratio = f"{us / base:.2f}x baseline" if base else "no baseline"
+        print(f"  probe_measured_cpu N={n}: {us:.0f}us ({ratio})")
+
+    fails = compare(baseline, measured, args.tolerance)
+    if fails:
+        print("check_bench: FAIL")
+        for f in fails:
+            print(f"  {f}")
+        return 1
+    print(f"OK  check_bench              probe within "
+          f"{args.tolerance:.1f}x of {path.name}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,7 +38,8 @@ _PYTEST = re.compile(r"python -m pytest[^\n`]*")
 # serving entrypoints users copy-paste; silently dropping one is drift too)
 REQUIRED_FLAGS = {
     "repro.launch.serve": ("--concurrency", "--index-clusters", "--shards",
-                           "--split-radius", "--balance-boundary"),
+                           "--split-radius", "--balance-boundary",
+                           "--deadline-ms", "--chaos"),
 }
 
 # substrings README/docs must keep mentioning somewhere (operator-facing
@@ -54,6 +55,11 @@ REQUIRED_TOPICS = {
                      "index.boundary_mass()) must stay documented — it is "
                      "what controls the max per-shard rows every sharded "
                      "probe pays",
+    "degraded": "the serving control plane's bound-only degraded answers "
+                "(PR 6: deadlines, shedding, circuit breaker, "
+                "--degraded-ok, QueryPlan.degraded + sel_interval) must "
+                "stay documented — operators need to know when an answer "
+                "is an interval, not an exact count",
 }
 
 

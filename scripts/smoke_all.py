@@ -6,9 +6,13 @@ index smoke (build + pruned-vs-full parity + sublinear scan fraction), a
 sharded-pruned smoke (per-shard indexes on a 4-shard host mesh, in a
 subprocess so this process keeps its 1-device view), and a balanced-build
 smoke (boundary-mass-balanced partitioning on a Zipf-skewed store: exact
-counts, shrinking per-shard spread) so hot-path regressions surface here
-first. ``--check-docs`` additionally runs
-scripts/check_docs.py (README/docs drift vs actual entrypoints)."""
+counts, shrinking per-shard spread), and a chaos smoke (seeded fault
+injection through the serving control plane: flusher kill + probe failures
+with retries, bound-only degraded answers, exact counter reconciliation)
+so hot-path regressions surface here first. ``--check-docs`` additionally
+runs scripts/check_docs.py (README/docs drift vs actual entrypoints);
+``--check-bench`` runs scripts/check_bench.py --quick (probe perf gate vs
+the persisted BENCH_probe_scaling.json baseline)."""
 
 import os
 import subprocess
@@ -298,6 +302,66 @@ def run_balanced_smoke():
           f"contig->balanced")
 
 
+def run_chaos_smoke():
+    """Serving control plane under seeded chaos: a killed flusher fails its
+    waiter promptly and restarts, injected probe failures retry / degrade
+    to certified bounds (never raising with degraded_ok), and the request
+    counters reconcile exactly — the invariant the chaos tests enforce."""
+    import threading
+
+    from repro.core.histogram import SemanticHistogram
+    from repro.core.synthetic import clustered_unit_vectors
+    from repro.index import build_clustered_store
+    from repro.launch.chaos import ChaosConfig, ChaosInjector
+    from repro.launch.coalescer import CoalescerConfig, PredicateCoalescer
+    from repro.runtime.fault_tolerance import RetryPolicy
+
+    x, _ = clustered_unit_vectors(600, 32, n_centers=8, spread=0.2, seed=6)
+    cs = build_clustered_store(x, 10, iters=4, seed=0, impl="xla")
+    hist = SemanticHistogram(jnp.asarray(x), index=cs)
+    plain = SemanticHistogram(jnp.asarray(x))
+    chaos = ChaosInjector(ChaosConfig(seed=2, fail_rate=0.3,
+                                      kill_flusher_at=2))
+    n_threads, per = 6, 2
+    thr = np.full(per, 0.8, np.float32)
+    outs = {}
+    with PredicateCoalescer(
+            hist, CoalescerConfig(max_batch=4, window_ms=20,
+                                  deadline_ms=2_000, degraded_ok=True),
+            chaos=chaos,
+            retry=RetryPolicy(max_retries=1, base_delay_s=0.001)) as coal:
+        ts = [threading.Thread(
+            target=lambda i=i: outs.setdefault(i, coal.probe_outcomes(
+                x[per * i:per * (i + 1)], thr)))
+            for i in range(n_threads)]
+        [t.start() for t in ts]
+        [t.join(timeout=60) for t in ts]
+        # after the storm: the restarted flusher still serves (exact or
+        # degraded, but always resolving — never hanging)
+        (post,) = coal.probe_outcomes(x[50:51], thr[:1])
+        st = coal.stats()
+    assert len(outs) == n_threads, "a chaos worker never resolved"
+    post_true = float(plain.selectivity_batch(x[50:51], thr[:1])[0])
+    assert post.lo - 1e-12 <= post_true <= post.hi + 1e-12, (post, post_true)
+    true = plain.selectivity_batch(
+        x[:n_threads * per], np.full(n_threads * per, 0.8, np.float32))
+    for i in range(n_threads):
+        for j, o in enumerate(outs[i]):
+            t = true[per * i + j]
+            if o.degraded:
+                assert o.lo - 1e-12 <= t <= o.hi + 1e-12, (i, j, o, t)
+            else:
+                assert abs(o.sel - t) < 1e-9, (i, j, o, t)
+    resolved = (st["probe_scored"] + st["cache_hits"] + st["coalesced_dups"]
+                + st["shed"] + st["degraded"] + st["errors"])
+    assert st["requests"] == n_threads * per + 1 == resolved, st
+    assert st["errors"] == 0, st
+    print(f"OK  chaos_control_plane      {st['requests']} requests "
+          f"reconcile: {st['probe_scored']} exact, {st['degraded']} "
+          f"degraded, kills={st['chaos']['injected_kills']}, "
+          f"retries={st['retries']}")
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     fails = []
@@ -306,9 +370,14 @@ if __name__ == "__main__":
         from check_docs import main as check_docs_main
         if check_docs_main() != 0:
             fails.append("check_docs")
+    if "--check-bench" in argv:
+        argv = [a for a in argv if a != "--check-bench"]
+        from check_bench import main as check_bench_main
+        if check_bench_main(["--quick"]) != 0:
+            fails.append("check_bench")
     archs = argv or list(ASSIGNED)
     for smoke in (run_probe_smoke, run_coalescer_smoke, run_index_smoke,
-                  run_sharded_smoke, run_balanced_smoke):
+                  run_sharded_smoke, run_balanced_smoke, run_chaos_smoke):
         try:
             smoke()
         except Exception:

@@ -365,6 +365,28 @@ class SemanticHistogram:
         counts, _ = self.probe_batch(preds, thresholds, k=1, need_topk=False)
         return np.asarray(counts[:, 0]) / self.n
 
+    def selectivity_bounds(self, preds: np.ndarray, thresholds: np.ndarray
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Certified selectivity interval per predicate — zero rows read.
+
+        Returns (lo, hi), each (B,) float64 with lo <= true selectivity
+        <= hi. With a cluster index attached the interval comes from the
+        index's exact Cauchy-Schwarz count bounds (``count_bounds``);
+        without one the only certified interval is the trivial [0, 1].
+        The serving layer answers from this when the scan path is
+        unavailable (overload, open breaker) — degraded but never wrong.
+        """
+        preds = np.asarray(preds, np.float32)
+        thr = np.asarray(thresholds, np.float32).reshape(-1)
+        if preds.ndim != 2 or preds.shape[0] != thr.shape[0]:
+            raise ValueError(f"preds {preds.shape} vs thresholds "
+                             f"{thr.shape}")
+        if self.index is not None:
+            lo, hi = self.index.count_bounds(preds, thr)
+            return lo[:, 0] / self.n, hi[:, 0] / self.n
+        b = preds.shape[0]
+        return np.zeros(b, np.float64), np.ones(b, np.float64)
+
     def kth_smallest_batch(self, preds: np.ndarray, k: int) -> np.ndarray:
         """k-th smallest distance per predicate, (B,) float — batched
         threshold calibration."""

@@ -35,6 +35,28 @@ class QueryPlan:
     estimates: list[Estimate]
     est_latency_s: float
     est_vlm_calls: float
+    degraded: bool = False            # any estimate answered from bounds
+    #                                   (its Estimate.extra carries the
+    #                                   certified "sel_interval")
+
+
+class _CoalescedProbe:
+    """Request-scoped probe callable: routes through the coalescer's
+    control plane and keeps the per-predicate ``ProbeOutcome``s so the
+    planner can mark bound-only (degraded) estimates afterwards."""
+
+    def __init__(self, coalescer, deadline, degraded_ok):
+        self.coalescer = coalescer
+        self.deadline = deadline
+        self.degraded_ok = degraded_ok
+        self.outcomes = []
+
+    def __call__(self, preds, thresholds):
+        res = self.coalescer.probe_outcomes(
+            preds, thresholds, deadline=self.deadline,
+            degraded_ok=self.degraded_ok)
+        self.outcomes.extend(res)
+        return np.asarray([o.sel for o in res])
 
 
 @dataclasses.dataclass
@@ -48,7 +70,8 @@ class ExecutionResult:
 
 
 def plan_query(filters: Sequence[int], estimator, seed: int = 0,
-               coalescer=None) -> QueryPlan:
+               coalescer=None, *, deadline_ms: float | None = None,
+               degraded_ok: bool | None = None) -> QueryPlan:
     """Estimate every filter, order ascending by selectivity.
 
     Fast path: estimators exposing ``estimate_batch`` (specificity, kv-batch,
@@ -60,17 +83,39 @@ def plan_query(filters: Sequence[int], estimator, seed: int = 0,
     handle and estimators advertising ``supports_probe`` route their probe
     through it — concurrent ``plan_query`` calls then share one cross-query
     micro-batched store pass, and hot predicates resolve from its LRU cache
-    without probing at all."""
+    without probing at all.
+
+    Control plane: ``deadline_ms`` (wall budget for this plan's probes,
+    absolute from entry; None defers to the coalescer's config) and
+    ``degraded_ok`` (accept certified bound-only answers instead of errors
+    under overload/faults) are forwarded per request. A plan built from any
+    degraded estimate is marked ``QueryPlan.degraded`` and each such
+    estimate carries ``extra['sel_interval'] = (lo, hi)`` — the cascade
+    order is then a best-effort order over interval midpoints."""
     t0 = time.perf_counter()
     batch = getattr(estimator, "estimate_batch", None)
+    wrapper = None
     if batch is not None and len(filters) > 0:
         kwargs = {}
         if coalescer is not None and getattr(estimator, "supports_probe",
                                              False):
-            kwargs["probe"] = coalescer.selectivity_batch
+            if hasattr(coalescer, "probe_outcomes"):
+                deadline = (time.monotonic() + deadline_ms / 1e3
+                            if deadline_ms else None)
+                wrapper = _CoalescedProbe(coalescer, deadline, degraded_ok)
+                kwargs["probe"] = wrapper
+            else:
+                kwargs["probe"] = coalescer.selectivity_batch
         ests = batch(list(filters), seed=seed, **kwargs)
     else:
         ests = [estimator.estimate(f, seed=seed) for f in filters]
+    degraded = False
+    if wrapper is not None and len(wrapper.outcomes) == len(ests):
+        for e, o in zip(ests, wrapper.outcomes):
+            if o.degraded:
+                degraded = True
+                e.extra["degraded"] = True
+                e.extra["sel_interval"] = (o.lo, o.hi)
     order = np.argsort([e.selectivity for e in ests], kind="stable")
     est_s = sum(e.measured_s for e in ests)
     calls = sum(e.vlm_calls for e in ests)
@@ -79,6 +124,7 @@ def plan_query(filters: Sequence[int], estimator, seed: int = 0,
         estimates=[ests[i] for i in order],
         est_latency_s=est_s,
         est_vlm_calls=calls,
+        degraded=degraded,
     )
 
 

@@ -162,6 +162,29 @@ class ClusteredStore:
         return np.maximum(d_mu - rad, 1.0 - pnorm * self.max_row_norm), \
             d_mu + rad
 
+    def count_bounds(self, preds: np.ndarray, thresholds: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Exact count interval per (predicate, threshold) — zero rows read.
+
+        preds (B, d); thresholds (B,) or (B, T). Returns (lo, hi), each
+        (B, T) int64: lo sums all-in cluster sizes, hi sums every cluster
+        that is not all-out. The same eps-slacked f64 bound arithmetic that
+        makes pruned scans bitwise-exact guarantees lo <= true count <= hi,
+        so the serving layer can answer from bounds alone (degraded mode)
+        with a certified interval when the scan path is unavailable.
+        """
+        preds = np.asarray(preds, np.float32)       # match the probe path
+        thr64 = np.asarray(thresholds, np.float64)
+        if thr64.ndim == 1:
+            thr64 = thr64[:, None]
+        lb, ub = self.cluster_bounds(preds)                      # (B, K)
+        allin = ub[:, :, None] <= thr64[:, None, :] - self.eps   # (B, K, T)
+        allout = lb[:, :, None] > thr64[:, None, :] + self.eps
+        sizes = self.sizes[None, :, None]
+        lo = (allin.astype(np.int64) * sizes).sum(axis=1)
+        hi = ((~allout).astype(np.int64) * sizes).sum(axis=1)
+        return lo, hi
+
     def _topk_cover(self, lb: np.ndarray, ub: np.ndarray,
                     k: int) -> np.ndarray:
         """(B, K) mask of clusters that could hold a top-k distance.

@@ -120,6 +120,18 @@ class ShardedClusteredStore:
         return [s.plan_scan(preds, thr, k=k, need_topk=need_topk)
                 for s in self.shards]
 
+    def count_bounds(self, preds: np.ndarray, thresholds: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Exact count interval per (predicate, threshold) — zero rows read.
+
+        Sums each shard's bound-only interval (host-side; no mesh needed),
+        so the sharded index supports the same degraded-mode answers as the
+        single-device one. lo <= true count <= hi, per shard and in total.
+        """
+        los, his = zip(*(s.count_bounds(preds, thresholds)
+                         for s in self.shards))
+        return sum(los), sum(his)
+
     # -------------------------------------------------------------- stats
 
     def record(self, plans: list, *, launched: bool) -> None:

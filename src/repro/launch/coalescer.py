@@ -1,7 +1,8 @@
-"""Cross-query predicate coalescing + LRU predicate cache (serving layer).
+"""Cross-query predicate coalescing + LRU cache + serving control plane.
 
 PR 1 batched all filters of *one* query into a single (N, d) x (d, B) probe;
-this module batches across *queries*. Two pieces:
+this module batches across *queries* and keeps the serving loop alive when
+the probe path misbehaves. Pieces:
 
   * ``PredicateCache`` — an LRU over quantized (embedding, thresholds, k)
     keys storing full probe results (counts + top-k). Real semantic-query
@@ -18,15 +19,45 @@ this module batches across *queries*. Two pieces:
     (piggyback on the pending entry), so a probe never scores the same
     predicate twice.
 
+  * the control plane (this PR) — per-request deadlines, admission control,
+    retry + circuit breaker around probe dispatch (the shared
+    ``repro.runtime.fault_tolerance`` vocabulary), and graceful degradation
+    to bound-only answers. A cluster index's exact Cauchy-Schwarz bounds
+    give a certified selectivity interval with zero rows read
+    (``SemanticHistogram.selectivity_bounds``), so under overload, an open
+    breaker, a blown deadline, or a dead flusher the coalescer can answer
+    *degraded but never wrong* instead of hanging or failing the query —
+    when the caller opts in with ``degraded_ok``.
+
 The coalescer consults the cache at submit time (a hit returns immediately,
 without waiting for the window) and fills it at flush time with the exact
 values the kernel produced — a later hit is bitwise-identical to the fresh
-probe. Flush batches are padded up to a small power-of-two bucket so the
-jitted probe compiles O(log max_batch) shapes, not one per batch size.
+probe; degraded answers never enter the cache. Flush batches are padded up
+to a small power-of-two bucket so the jitted probe compiles O(log
+max_batch) shapes, not one per batch size.
 
 Thread model: any number of submitter threads; one daemon flusher. All
 shared state is guarded by one condition variable; the probe itself runs
-outside submitter critical sections (jax dispatch is thread-safe).
+outside submitter critical sections (jax dispatch is thread-safe). If the
+flusher thread dies (anything escaping its loop, incl. injected
+``FlusherKill``), every pending/in-flight waiter is failed immediately
+with ``FlusherDiedError`` — no waiter ever blocks on a thread that no
+longer exists — and a fresh flusher is started unless the coalescer is
+closing.
+
+Reconciliation invariant (asserted by the chaos tests): every request
+resolves exactly once, so at all times after the last resolution
+
+    requests == probe_scored + cache_hits + coalesced_dups
+                + shed + degraded + errors
+
+where the buckets classify the request at *resolution* time:
+``probe_scored`` exact value to the window's creator, ``cache_hits``
+served from the LRU, ``coalesced_dups`` exact value to a piggybacked
+duplicate, ``shed`` rejected by admission control (bound answer or
+``ShedError``), ``degraded`` bound-only answer for any non-admission
+reason (deadline, breaker, probe failure, flusher death), ``errors``
+raised without a bound answer.
 """
 
 from __future__ import annotations
@@ -38,7 +69,34 @@ from collections import OrderedDict
 
 import numpy as np
 
-__all__ = ["PredicateCache", "CoalescerConfig", "PredicateCoalescer"]
+from repro.runtime.fault_tolerance import (
+    CircuitBreaker,
+    RetryPolicy,
+    StepWatchdog,
+    TransientError,
+)
+
+__all__ = [
+    "PredicateCache", "CoalescerConfig", "PredicateCoalescer",
+    "ProbeOutcome", "ShedError", "DeadlineExceededError",
+    "BreakerOpenError", "FlusherDiedError",
+]
+
+
+class ShedError(TransientError):
+    """Admission control rejected the request (queue over watermark)."""
+
+
+class DeadlineExceededError(TransientError):
+    """The request's deadline expired before its probe landed."""
+
+
+class BreakerOpenError(TransientError):
+    """The probe circuit breaker is open; no probe was attempted."""
+
+
+class FlusherDiedError(RuntimeError):
+    """The flusher thread died while this request was in flight."""
 
 
 class PredicateCache:
@@ -113,12 +171,48 @@ class PredicateCache:
 
 @dataclasses.dataclass
 class CoalescerConfig:
-    """Micro-batch window knobs (trade-offs in docs/serving.md)."""
+    """Micro-batch window + control-plane knobs (docs/serving.md).
+
+    The robustness knobs all default *off* (0 / False), so a default
+    coalescer behaves exactly like the pre-control-plane one: no shedding,
+    no deadlines, exact answers or propagated errors.
+    """
 
     max_batch: int = 64        # flush as soon as this many predicates pend
     window_ms: float = 2.0     # ... or this long after the oldest request
     cache_capacity: int = 1024
     cache_bits: int = 12       # embedding quantization (near-dup collapse)
+    max_queue: int = 0         # shed when this many predicates pend (0=off)
+    max_pending_age_ms: float = 0.0   # shed when the oldest pending entry
+    #                                   is older than this (0=off): the
+    #                                   flusher is stuck or drowning
+    deadline_ms: float = 0.0   # default per-request deadline (0=off)
+    degraded_ok: bool = False  # default: answer from bounds instead of
+    #                            raising on shed/deadline/breaker/failure
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.window_ms <= 0:
+            raise ValueError(f"window_ms must be > 0, got {self.window_ms}")
+        if self.cache_capacity < 1:
+            raise ValueError(
+                f"cache_capacity must be >= 1, got {self.cache_capacity}")
+        for name in ("max_queue", "max_pending_age_ms", "deadline_ms"):
+            v = getattr(self, name)
+            if v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeOutcome:
+    """One request's resolution: exact (lo == sel == hi) or degraded
+    (``sel`` is the midpoint of the certified interval [lo, hi])."""
+
+    sel: float
+    lo: float
+    hi: float
+    degraded: bool = False
 
 
 class _Pending:
@@ -142,23 +236,48 @@ class PredicateCoalescer:
     ``selectivity_batch(embs, thrs)`` has the same signature as
     ``SemanticHistogram.selectivity_batch`` so estimators (and
     ``plan_query(..., coalescer=...)``) can route probes through it
-    unchanged. Counters::
+    unchanged; ``probe_outcomes`` is the control-plane entry point that
+    additionally takes a deadline and returns per-request
+    ``ProbeOutcome``s with certified bounds on degraded answers.
 
-        requests           predicates submitted (incl. cache hits)
-        probes_fired       batched kernel launches
-        predicates_probed  predicates actually scored by a kernel launch
-        coalesced_dups     requests that piggybacked an in-flight duplicate
+    Counters (see the module docstring for the reconciliation invariant)::
+
+        requests           predicates submitted
+        probes_fired       successful batched kernel launches
+        predicates_probed  predicates scored by a successful launch
+        probe_scored       requests resolved exactly as a window creator
+        cache_hits         requests resolved from the LRU
+        coalesced_dups     requests resolved exactly as a piggybacked dup
+        shed               requests rejected by admission control
+        degraded           requests resolved with a bound-only answer
+        errors             requests resolved by raising
+        retries            probe attempts retried after transient failure
+        probe_failures     probe attempts that raised
+        breaker_fastfails  submits short-circuited by an open breaker
+        flusher_deaths     flusher thread deaths observed
+        flusher_restarts   replacement flusher threads started
+        queue_depth_hwm    max pending-queue depth ever observed
 
     Coalescing wins show up as ``probes_fired`` << ``requests`` and
     cache + dedup wins as ``predicates_probed`` < ``requests``.
     """
 
     def __init__(self, hist, config: CoalescerConfig | None = None, *,
-                 cache: PredicateCache | None = None):
+                 cache: PredicateCache | None = None, chaos=None,
+                 retry: RetryPolicy | None = None,
+                 breaker: CircuitBreaker | None = None):
         self.hist = hist
         self.cfg = config or CoalescerConfig()
         self.cache = cache if cache is not None else PredicateCache(
             self.cfg.cache_capacity, bits=self.cfg.cache_bits)
+        self.retry = retry if retry is not None else RetryPolicy(
+            max_retries=2, base_delay_s=0.005, max_delay_s=0.1)
+        self.breaker = breaker if breaker is not None else CircuitBreaker(
+            failure_threshold=5, cooldown_s=1.0)
+        self.watchdog = StepWatchdog()      # flush-latency EWMA
+        self.chaos = chaos
+        self._probe = (chaos.wrap(self._raw_probe) if chaos is not None
+                       else self._raw_probe)
         self._cv = threading.Condition()
         self._pending: list[_Pending] = []
         self._inflight: dict[tuple, _Pending] = {}
@@ -166,10 +285,30 @@ class PredicateCoalescer:
         self.requests = 0
         self.probes_fired = 0
         self.predicates_probed = 0
+        self.probe_scored = 0
+        self.cache_hits = 0
         self.coalesced_dups = 0
-        self._flusher = threading.Thread(
-            target=self._run, name="predicate-coalescer", daemon=True)
-        self._flusher.start()
+        self.shed = 0
+        self.degraded = 0
+        self.errors = 0
+        self.retries = 0
+        self.probe_failures = 0
+        self.breaker_fastfails = 0
+        self.flusher_deaths = 0
+        self.flusher_restarts = 0
+        self.queue_depth_hwm = 0
+        self._flusher = self._spawn_flusher()
+
+    def _spawn_flusher(self) -> threading.Thread:
+        t = threading.Thread(target=self._run, name="predicate-coalescer",
+                             daemon=True)
+        t.start()
+        return t
+
+    def _raw_probe(self, embs, thrs):
+        # late-bound through self.hist so tests monkeypatching probe_batch
+        # (and chaos wrapping this method) compose with the retry loop
+        return self.hist.probe_batch(embs, thrs, k=1, use_cache=False)
 
     # ------------------------------------------------------------- submit
 
@@ -184,15 +323,54 @@ class PredicateCoalescer:
 
         Cache hits return without blocking; misses enqueue into the current
         micro-batch window and block until the flusher's shared probe lands.
-        Drop-in for ``SemanticHistogram.selectivity_batch``.
+        Drop-in for ``SemanticHistogram.selectivity_batch``; deadline /
+        degraded defaults come from the config (both off by default).
+        """
+        return np.asarray([o.sel for o in
+                           self.probe_outcomes(preds, thresholds)])
+
+    def _bound_outcome(self, emb: np.ndarray, thr: float) -> ProbeOutcome:
+        """Certified bound-only answer for one predicate (never cached)."""
+        lo, hi = self.hist.selectivity_bounds(
+            np.asarray(emb)[None, :], np.asarray([thr], np.float32))
+        lo, hi = float(lo[0]), float(hi[0])
+        return ProbeOutcome(sel=0.5 * (lo + hi), lo=lo, hi=hi,
+                            degraded=True)
+
+    def probe_outcomes(self, preds: np.ndarray, thresholds: np.ndarray, *,
+                       deadline: float | None = None,
+                       degraded_ok: bool | None = None,
+                       ) -> list[ProbeOutcome]:
+        """Resolve B (predicate, threshold) pairs under the control plane.
+
+        ``deadline`` is an absolute ``time.monotonic()`` second (None
+        derives one from ``cfg.deadline_ms``; 0 there means no deadline).
+        ``degraded_ok`` (None -> ``cfg.degraded_ok``) turns shed /
+        deadline / breaker / probe-failure resolutions into bound-only
+        ``ProbeOutcome``s instead of raises. Every request resolves into
+        exactly one reconciliation bucket (module docstring).
         """
         preds = np.asarray(preds, np.float32)
         thrs = np.asarray(thresholds, np.float32).reshape(-1)
         if preds.ndim != 2 or preds.shape[0] != thrs.shape[0]:
             raise ValueError(
                 f"preds {preds.shape} vs thresholds {thrs.shape}")
-        out = np.empty(len(preds), np.float64)
-        waits: list[tuple[int, _Pending]] = []
+        if degraded_ok is None:
+            degraded_ok = self.cfg.degraded_ok
+        if deadline is None and self.cfg.deadline_ms > 0:
+            deadline = time.monotonic() + self.cfg.deadline_ms / 1e3
+
+        out: list[ProbeOutcome | None] = [None] * len(preds)
+        waits: list[tuple[int, _Pending, bool]] = []   # (j, entry, creator)
+
+        def fail(j: int, exc: Exception, pending_waits: int):
+            """No bound fallback: count this raise + every wait this call
+            will abandon, so the reconciliation invariant survives the
+            exception (abandoned probes still land and fill the cache)."""
+            with self._cv:
+                self.errors += 1 + pending_waits
+            raise exc
+
         for j in range(len(preds)):
             key = self.cache.key(preds[j], [thrs[j]], 1)
             with self._cv:
@@ -204,23 +382,76 @@ class PredicateCoalescer:
                 self.requests += 1
                 cached = self.cache.get(key)
                 if cached is not None:
-                    out[j] = int(cached[0][0]) / self.hist.n
+                    self.cache_hits += 1
+                    sel = int(cached[0][0]) / self.hist.n
+                    out[j] = ProbeOutcome(sel, sel, sel, False)
                     continue
                 entry = self._inflight.get(key)
                 if entry is not None:
-                    self.coalesced_dups += 1
-                else:
+                    waits.append((j, entry, False))
+                    continue
+                breaker_open = self.breaker.is_open
+                if breaker_open:
+                    self.breaker_fastfails += 1
+                shed = (not breaker_open) and (
+                    (self.cfg.max_queue
+                     and len(self._pending) >= self.cfg.max_queue)
+                    or (self.cfg.max_pending_age_ms and self._pending
+                        and (time.monotonic() - self._pending[0].ts) * 1e3
+                        > self.cfg.max_pending_age_ms)
+                    or (deadline is not None
+                        and self.watchdog.ewma_s is not None
+                        and time.monotonic() + self.watchdog.ewma_s
+                        > deadline))
+                if not (breaker_open or shed):
                     entry = _Pending(key, preds[j], thrs[j])
                     self._inflight[key] = entry
                     self._pending.append(entry)
+                    self.queue_depth_hwm = max(self.queue_depth_hwm,
+                                               len(self._pending))
                     self._cv.notify_all()
-            waits.append((j, entry))
-        for j, entry in waits:
-            if not entry.event.wait(timeout=60.0):
-                raise RuntimeError("coalescer flush timed out (60s)")
-            if entry.error is not None:
-                raise entry.error
-            out[j] = int(entry.value[0][0]) / self.hist.n
+                    waits.append((j, entry, True))
+                    continue
+                bucket = "degraded" if breaker_open else "shed"
+            # resolve the fast-fail outside the lock (bounds read the index)
+            if degraded_ok:
+                out[j] = self._bound_outcome(preds[j], thrs[j])
+                with self._cv:
+                    setattr(self, bucket, getattr(self, bucket) + 1)
+            elif breaker_open:
+                fail(j, BreakerOpenError(
+                    "probe circuit breaker is open"), len(waits))
+            else:
+                with self._cv:
+                    self.shed += 1      # shed bucket even when raising
+                    self.errors += len(waits)   # abandoned waits
+                raise ShedError(
+                    f"admission control shed the request (queue depth "
+                    f"{len(self._pending)}, max_queue={self.cfg.max_queue})")
+
+        for i, (j, entry, creator) in enumerate(waits):
+            timeout = (None if deadline is None
+                       else max(0.0, deadline - time.monotonic()))
+            landed = entry.event.wait(timeout=timeout)
+            if landed and entry.error is None:
+                sel = int(entry.value[0][0]) / self.hist.n
+                out[j] = ProbeOutcome(sel, sel, sel, False)
+                with self._cv:
+                    if creator:
+                        self.probe_scored += 1
+                    else:
+                        self.coalesced_dups += 1
+                continue
+            if degraded_ok:
+                out[j] = self._bound_outcome(preds[j], thrs[j])
+                with self._cv:
+                    self.degraded += 1
+                continue
+            remaining = len(waits) - i - 1
+            if not landed:
+                fail(j, DeadlineExceededError(
+                    "deadline expired before the probe landed"), remaining)
+            fail(j, entry.error, remaining)
         return out
 
     # -------------------------------------------------------------- flush
@@ -252,6 +483,10 @@ class PredicateCoalescer:
         bucket <= max_batch so the jitted probe sees few distinct shapes.
         Entries stay in ``_inflight`` until their cache fill, so duplicate
         submitters racing this flush piggyback instead of re-probing.
+
+        Probe dispatch runs under the retry policy (transient failures
+        back off and retry) behind the circuit breaker; ``FlusherKill``
+        and other ``BaseException``s escape to ``_run``'s death handler.
         """
         b = len(batch)
         bucket = 1 << (b - 1).bit_length()
@@ -260,17 +495,35 @@ class PredicateCoalescer:
                         + [batch[-1].emb] * (bucket - b))
         thrs = np.asarray([p.thr for p in batch]
                           + [batch[-1].thr] * (bucket - b), np.float32)
-        try:
-            counts, topk = self.hist.probe_batch(embs, thrs, k=1,
-                                                 use_cache=False)
-            counts = np.asarray(counts)
-            topk = np.asarray(topk)
-            err = None
-        except Exception as e:  # propagate to every waiter, don't wedge
-            err = e
-        with self._cv:
-            self.probes_fired += 1
-            self.predicates_probed += b
+        err, attempt = None, 0
+        while True:
+            if not self.breaker.allow():
+                err = BreakerOpenError("probe circuit breaker is open")
+                break
+            t0 = time.perf_counter()
+            try:
+                counts, topk = self._probe(embs, thrs)
+                counts = np.asarray(counts)
+                topk = np.asarray(topk)
+                self.breaker.record_success()
+                self.watchdog.observe(time.perf_counter() - t0)
+                break
+            except Exception as e:  # noqa: BLE001 — classified below
+                self.breaker.record_failure()
+                with self._cv:
+                    self.probe_failures += 1
+                if (not self.retry.policy.transient(e)
+                        or attempt >= self.retry.max_retries or self._stop):
+                    err = e
+                    break
+                with self._cv:
+                    self.retries += 1
+                time.sleep(self.retry.delay_s(attempt))
+                attempt += 1
+        if err is None:
+            with self._cv:
+                self.probes_fired += 1
+                self.predicates_probed += b
         for i, p in enumerate(batch):
             if err is None:
                 p.value = (counts[i].copy(), topk[i].copy())
@@ -282,11 +535,40 @@ class PredicateCoalescer:
             p.event.set()
 
     def _run(self) -> None:
-        while True:
-            batch = self._take_batch()
-            if batch is None:
-                return
-            self._flush(batch)
+        try:
+            while True:
+                batch = self._take_batch()
+                if batch is None:
+                    return
+                self._flush(batch)
+        except BaseException as e:  # noqa: BLE001 — incl. FlusherKill
+            self._on_flusher_death(e)
+
+    def _on_flusher_death(self, exc: BaseException) -> None:
+        """Fail every pending/in-flight waiter NOW; restart the flusher.
+
+        ``_inflight`` is a superset of ``_pending`` (batches being flushed
+        left ``_pending`` but not ``_inflight``), so draining it reaches
+        every waiter, including the batch the death interrupted. Without
+        this, those waiters would block forever — the 60s-hang bug this
+        control plane replaces.
+        """
+        with self._cv:
+            self.flusher_deaths += 1
+            victims = list(self._inflight.values())
+            self._inflight.clear()
+            self._pending.clear()
+            restart = not self._stop
+            if restart:
+                self.flusher_restarts += 1
+        err = FlusherDiedError(f"coalescer flusher died: {exc!r}")
+        err.__cause__ = exc if isinstance(exc, Exception) else None
+        for p in victims:
+            if p.error is None and p.value is None:
+                p.error = err
+            p.event.set()
+        if restart:
+            self._flusher = self._spawn_flusher()
 
     # ---------------------------------------------------------- lifecycle
 
@@ -302,12 +584,23 @@ class PredicateCoalescer:
         with self._cv:
             self._stop = True
             self._cv.notify_all()
-        self._flusher.join(timeout=60.0)
+            flusher = self._flusher
+        flusher.join(timeout=60.0)
         with self._cv:
             leftovers = self._pending[:]
             del self._pending[:]
         if leftovers:
-            self._flush(leftovers)
+            try:
+                self._flush(leftovers)
+            except BaseException as exc:  # noqa: BLE001 — fail, don't hang
+                err = FlusherDiedError(
+                    f"drain flush died during close: {exc!r}")
+                for p in leftovers:
+                    with self._cv:
+                        self._inflight.pop(p.key, None)
+                    if p.error is None and p.value is None:
+                        p.error = err
+                    p.event.set()
 
     def __enter__(self):
         return self
@@ -321,7 +614,22 @@ class PredicateCoalescer:
                 "requests": self.requests,
                 "probes_fired": self.probes_fired,
                 "predicates_probed": self.predicates_probed,
+                "probe_scored": self.probe_scored,
+                "cache_hits": self.cache_hits,
                 "coalesced_dups": self.coalesced_dups,
+                "shed": self.shed,
+                "degraded": self.degraded,
+                "errors": self.errors,
+                "retries": self.retries,
+                "probe_failures": self.probe_failures,
+                "breaker_fastfails": self.breaker_fastfails,
+                "flusher_deaths": self.flusher_deaths,
+                "flusher_restarts": self.flusher_restarts,
+                "queue_depth_hwm": self.queue_depth_hwm,
+                "flush_ewma_s": self.watchdog.ewma_s,
             }
+        d["breaker"] = self.breaker.stats()
         d["cache"] = self.cache.stats()
+        if self.chaos is not None:
+            d["chaos"] = self.chaos.stats()
         return d

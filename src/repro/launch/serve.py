@@ -53,6 +53,21 @@ the uniform shard_map bucket means every probe pays the max per-shard
 boundary rows, and balancing is what shrinks that max. The build prints
 the per-shard boundary-mass spread before/after; results stay bitwise
 identical either way. See docs/index.md.
+
+``--deadline-ms`` / ``--max-queue`` / ``--degraded-ok`` (PR 6) arm the
+serving control plane on the concurrent path: every plan's probes get a
+wall deadline, the coalescer sheds work past the queue watermark, and
+with ``--degraded-ok`` any shed / late / breaker-blocked request resolves
+to a certified bound-only selectivity interval (from the cluster index's
+Cauchy-Schwarz bounds — pass ``--index-clusters``, else the interval is
+the trivial [0, 1]) instead of an error; such plans are marked degraded.
+``--chaos "seed=1,fail=0.3,delay=0.2,delay-ms=5,kill-at=3"`` injects
+seed-deterministic probe failures/delays and a flusher kill to exercise
+retries, the breaker, flusher-death propagation, and degradation; the run
+ends with the full robustness counter block (shed / degraded / retries /
+breaker state / flusher deaths / queue high-watermark). With chaos off
+and the control plane unarmed, results are bitwise identical to before.
+All knobs: docs/serving.md.
 """
 
 from __future__ import annotations
@@ -178,12 +193,24 @@ def serve_sequential(corpus, estimators, queries, *, seed: int) -> None:
 def serve_concurrent(corpus, estimators, queries, *, est_name: str,
                      seed: int, concurrency: int, window_ms: float,
                      max_batch: int, cache_size: int, cache_bits: int,
-                     passes: int) -> dict:
+                     passes: int, deadline_ms: float = 0.0,
+                     max_queue: int = 0, degraded_ok: bool = False,
+                     chaos_spec: str = "") -> dict:
     """Cross-query serving: N planner threads share one coalescer + cache.
 
-    Returns the coalescer stats dict (the smoke harness asserts on it)."""
+    The control plane rides along per request: each plan's probes carry the
+    deadline, the coalescer sheds past ``max_queue``, and ``degraded_ok``
+    turns overload/fault resolutions into certified bound-only answers. A
+    failing query is a *partial* failure — its worker records the error and
+    the rest of the workload proceeds. Returns the coalescer stats dict
+    (the smoke harness asserts on it)."""
     est = estimators[est_name]
     cache = PredicateCache(cache_size, bits=cache_bits)
+    chaos = None
+    if chaos_spec:
+        from repro.launch.chaos import ChaosConfig, ChaosInjector
+
+        chaos = ChaosInjector(ChaosConfig.parse(chaos_spec))
     workload = [(p, qi, q) for p in range(passes)
                 for qi, q in enumerate(queries)]
     n_preds = sum(len(q) for _, _, q in workload)
@@ -191,17 +218,30 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
           f"({len(queries)} x {passes} passes), {n_preds} predicate "
           f"requests, estimator={est_name}, threads={concurrency}, "
           f"window={window_ms}ms, max_batch={max_batch}, "
-          f"cache={cache_size}x{cache_bits}bit")
+          f"cache={cache_size}x{cache_bits}bit"
+          + (f", deadline={deadline_ms}ms" if deadline_ms else "")
+          + (f", max_queue={max_queue}" if max_queue else "")
+          + (", degraded-ok" if degraded_ok else "")
+          + (f", chaos[{chaos_spec}]" if chaos_spec else ""))
 
+    failures: list[tuple[int, str]] = []
     with PredicateCoalescer(
             est.hist,
-            CoalescerConfig(max_batch=max_batch, window_ms=window_ms),
-            cache=cache) as coal:
+            CoalescerConfig(max_batch=max_batch, window_ms=window_ms,
+                            max_queue=max_queue),
+            cache=cache, chaos=chaos) as coal:
 
         def run_one(job):
             _, qi, q = job
-            plan = plan_query(q, est, seed=seed, coalescer=coal)
-            return qi, execute_cascade(corpus, plan, seed=seed)
+            try:
+                plan = plan_query(q, est, seed=seed, coalescer=coal,
+                                  deadline_ms=deadline_ms or None,
+                                  degraded_ok=degraded_ok)
+            except Exception as e:  # noqa: BLE001 — partial failure
+                failures.append((qi, f"{type(e).__name__}: {e}"))
+                return qi, None, False
+            return qi, execute_cascade(corpus, plan, seed=seed), \
+                plan.degraded
 
         t0 = time.perf_counter()
         with ThreadPoolExecutor(max_workers=concurrency) as pool:
@@ -209,8 +249,12 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
         wall_s = time.perf_counter() - t0
         stats = coal.stats()
 
+    degraded_plans = sum(1 for _, _, dg in results if dg)
     oracle = estimators["oracle"]
-    for qi, res in results[:len(queries)]:
+    for qi, res, _ in results[:len(queries)]:
+        if res is None:
+            print(f"  query {qi}: FAILED")
+            continue
         base = execute_cascade(corpus, plan_query(queries[qi], oracle),
                                seed=seed)
         print(f"  query {qi}: calls={res.vlm_calls:5d} "
@@ -225,6 +269,24 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
     print(f"cache: hit_rate={c['hit_rate']:.0%} ({c['hits']} hits / "
           f"{c['misses']} misses), {c['entries']}/{c['capacity']} entries, "
           f"{c['evictions']} evictions")
+    br = stats["breaker"]
+    print(f"control plane: shed={stats['shed']} "
+          f"degraded={stats['degraded']} errors={stats['errors']} "
+          f"retries={stats['retries']} "
+          f"probe_failures={stats['probe_failures']} "
+          f"breaker={br['state']}({br['opens']} opens) "
+          f"flusher_deaths={stats['flusher_deaths']} "
+          f"restarts={stats['flusher_restarts']} "
+          f"queue_hwm={stats['queue_depth_hwm']}")
+    if chaos is not None:
+        cs = stats["chaos"]
+        print(f"chaos: {cs['injected_failures']} failures, "
+              f"{cs['injected_delays']} delays, {cs['injected_kills']} "
+              f"kills injected over {cs['launches']} probe launches")
+    if degraded_plans or failures:
+        print(f"degraded plans: {degraded_plans}; failed queries: "
+              f"{len(failures)}"
+              + (f" (first: {failures[0][1]})" if failures else ""))
     print(f"wall: {wall_s:.2f}s for {len(workload)} queries "
           f"({len(workload)/wall_s:.1f} qps)")
     return stats
@@ -283,6 +345,24 @@ def main(argv=None) -> None:
     ap.add_argument("--passes", type=int, default=2,
                     help="replay the query workload this many times "
                          "(models hot repeated predicates)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help=">0: wall deadline per plan's probes; past it the "
+                         "request degrades to a certified bound-only "
+                         "answer (--degraded-ok) or fails, never hangs")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help=">0: admission control — shed new predicates once "
+                         "this many are pending (bound-only answer with "
+                         "--degraded-ok, ShedError without)")
+    ap.add_argument("--degraded-ok", action="store_true",
+                    help="resolve shed/late/breaker-blocked requests with "
+                         "certified selectivity bounds (cluster-index "
+                         "Cauchy-Schwarz interval; [0,1] without an index) "
+                         "instead of raising; plans are marked degraded")
+    ap.add_argument("--chaos", default="",
+                    help="deterministic fault injection on the probe path, "
+                         "e.g. 'seed=1,fail=0.3,delay=0.2,delay-ms=5,"
+                         "kill-at=3' — seeded probe failures/delays and a "
+                         "flusher kill at the given launch ordinal")
     args = ap.parse_args(argv)
 
     print(f"building semantic-histogram stack for '{args.dataset}' "
@@ -301,7 +381,9 @@ def main(argv=None) -> None:
             seed=args.seed, concurrency=args.concurrency,
             window_ms=args.window_ms, max_batch=args.max_batch,
             cache_size=args.cache_size, cache_bits=args.cache_bits,
-            passes=args.passes)
+            passes=args.passes, deadline_ms=args.deadline_ms,
+            max_queue=args.max_queue, degraded_ok=args.degraded_ok,
+            chaos_spec=args.chaos)
     else:
         serve_sequential(corpus, estimators, queries, seed=args.seed)
     index = estimators["specificity"].hist.index

@@ -1,4 +1,4 @@
-"""Fault tolerance & straggler mitigation for the training driver.
+"""Fault tolerance & straggler mitigation — shared by training and serving.
 
 On a real multi-pod deployment this wraps jax.distributed; the policies are
 host-side and hardware-agnostic, so they are exercised for real by unit tests
@@ -6,9 +6,15 @@ with injected faults:
 
   * StepWatchdog      — per-step deadline from a running latency EWMA;
                         classifies steps as ok / straggler / stuck
-  * FaultPolicy       — on transient failure: retry the step from the live
-                        state; on fatal/device failure: restore the last
-                        checkpoint (elastic: possibly onto fewer hosts)
+  * FaultPolicy       — classifies exceptions transient vs fatal (retry vs
+                        restore/fail); ``TransientError`` is the marker base
+                        for injected/recoverable faults
+  * RetryPolicy       — bounded retries with exponential backoff around any
+                        callable; drives both the training runner and the
+                        serving coalescer's probe dispatch
+  * CircuitBreaker    — closed / open / half-open latch over a failing
+                        dependency; serving degrades to bound-only answers
+                        while the breaker is open instead of queueing retries
   * HeartbeatRegistry — tracks host liveness; a missing heartbeat beyond the
                         timeout marks the host dead and triggers an elastic
                         re-mesh plan (runtime/elastic.py)
@@ -17,8 +23,139 @@ with injected faults:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Callable
+
+
+class TransientError(RuntimeError):
+    """Marker base for failures that are expected to succeed on retry.
+
+    Injected chaos faults and recoverable dependency errors derive from
+    this; ``FaultPolicy`` treats anything else as fatal by default.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """Classifies exceptions into transient (retry) vs fatal (restore/fail).
+
+    The default vocabulary covers the marker class plus the stdlib types a
+    remote probe dependency realistically throws; the training runner widens
+    it to ``(Exception,)`` because a device fault surfaces as a generic
+    ``RuntimeError`` and the live state is still usable for a retry.
+    """
+
+    transient_types: tuple = (TransientError, TimeoutError, ConnectionError)
+
+    def transient(self, exc: BaseException) -> bool:
+        return isinstance(exc, self.transient_types)
+
+    def classify(self, exc: BaseException) -> str:
+        return "transient" if self.transient(exc) else "fatal"
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded retries with exponential backoff.
+
+    ``call`` retries transient failures (per ``policy``) up to
+    ``max_retries`` times, sleeping ``base_delay_s * multiplier**attempt``
+    (capped at ``max_delay_s``) between attempts. Fatal errors and
+    exhaustion re-raise the last exception. ``sleep`` is injectable so
+    tests run at full speed.
+    """
+
+    max_retries: int = 2
+    base_delay_s: float = 0.01
+    multiplier: float = 2.0
+    max_delay_s: float = 1.0
+    policy: FaultPolicy = dataclasses.field(default_factory=FaultPolicy)
+
+    def delay_s(self, attempt: int) -> float:
+        return min(self.base_delay_s * self.multiplier ** attempt,
+                   self.max_delay_s)
+
+    def call(self, fn: Callable, *args, on_retry: Callable | None = None,
+             sleep: Callable[[float], None] = time.sleep, **kwargs):
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except Exception as e:  # noqa: BLE001 — classified below
+                if on_retry is not None:
+                    on_retry(attempt, e)
+                if not self.policy.transient(e) or attempt >= self.max_retries:
+                    raise
+                d = self.delay_s(attempt)
+                if d > 0:
+                    sleep(d)
+        raise AssertionError("unreachable")  # pragma: no cover
+
+
+class CircuitBreaker:
+    """Closed / open / half-open latch over a flaky dependency.
+
+    ``failure_threshold`` consecutive failures trip the breaker open;
+    while open, ``allow()`` returns False until ``cooldown_s`` elapses,
+    then lets exactly one half-open trial through. A trial success closes
+    the breaker; a trial failure re-opens it (restarting the cooldown).
+    ``is_open`` is a non-consuming read for fast-path checks (it never
+    starts a trial). ``clock`` is injectable for deterministic tests.
+    Thread-safe.
+    """
+
+    def __init__(self, failure_threshold: int = 5, cooldown_s: float = 30.0,
+                 *, clock: Callable[[], float] = time.monotonic):
+        if failure_threshold < 1:
+            raise ValueError(
+                f"failure_threshold must be >= 1, got {failure_threshold}")
+        self.failure_threshold = failure_threshold
+        self.cooldown_s = cooldown_s
+        self.clock = clock
+        self._lock = threading.Lock()
+        self.state = "closed"           # closed | open | half-open
+        self.failures = 0               # consecutive
+        self.opens = 0
+        self._opened_at = 0.0
+
+    @property
+    def is_open(self) -> bool:
+        """Non-consuming: True only while open and still cooling down."""
+        with self._lock:
+            return (self.state == "open"
+                    and self.clock() - self._opened_at < self.cooldown_s)
+
+    def allow(self) -> bool:
+        """Consuming check: open + cooldown elapsed admits one trial."""
+        with self._lock:
+            if self.state == "closed":
+                return True
+            if self.state == "open":
+                if self.clock() - self._opened_at >= self.cooldown_s:
+                    self.state = "half-open"
+                    return True
+                return False
+            return True                 # half-open: trial in progress
+
+    def record_success(self) -> None:
+        with self._lock:
+            self.failures = 0
+            self.state = "closed"
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self.failures += 1
+            if (self.state == "half-open"
+                    or self.failures >= self.failure_threshold):
+                if self.state != "open":
+                    self.opens += 1
+                self.state = "open"
+                self._opened_at = self.clock()
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"state": self.state, "failures": self.failures,
+                    "opens": self.opens}
 
 
 @dataclasses.dataclass
@@ -64,7 +201,13 @@ class HeartbeatRegistry:
 
 
 class FaultTolerantRunner:
-    """Drives train steps with retry / restore-from-checkpoint semantics."""
+    """Drives train steps with retry / restore-from-checkpoint semantics.
+
+    Built on the same ``RetryPolicy`` the serving coalescer uses; the
+    training policy treats every ``Exception`` as transient (a device fault
+    surfaces as a generic error but the live state supports a retry) and
+    restores the last checkpoint only when retries are exhausted.
+    """
 
     def __init__(self, step_fn: Callable, ckpt, *, max_retries: int = 2,
                  checkpoint_every: int = 50):
@@ -72,28 +215,32 @@ class FaultTolerantRunner:
         self.ckpt = ckpt
         self.max_retries = max_retries
         self.checkpoint_every = checkpoint_every
+        self.retry_policy = RetryPolicy(
+            max_retries=max_retries, base_delay_s=0.0,
+            policy=FaultPolicy(transient_types=(Exception,)))
         self.watchdog = StepWatchdog()
         self.restores = 0
         self.retries = 0
 
+    def _count_retry(self, attempt: int, exc: BaseException) -> None:
+        self.retries += 1
+
     def run(self, state, batches, *, start_step: int = 0, on_metrics=None):
         step = start_step
+        metrics = None
         for batch in batches:
             t0 = time.perf_counter()
-            for attempt in range(self.max_retries + 1):
-                try:
-                    state, metrics = self.step_fn(state, batch)
-                    break
-                except Exception:  # noqa: BLE001 — injected/device faults
-                    self.retries += 1
-                    if attempt >= self.max_retries:
-                        # fatal: roll back to the last durable state
-                        self.restores += 1
-                        self.ckpt.wait()
-                        latest = self.ckpt.latest_step()
-                        if latest is None:
-                            raise
-                        state = self.ckpt.restore(latest, like=state)
+            try:
+                state, metrics = self.retry_policy.call(
+                    self.step_fn, state, batch, on_retry=self._count_retry)
+            except Exception:  # noqa: BLE001 — retries exhausted
+                # fatal: roll back to the last durable state
+                self.restores += 1
+                self.ckpt.wait()
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    raise
+                state = self.ckpt.restore(latest, like=state)
             verdict = self.watchdog.observe(time.perf_counter() - t0)
             if on_metrics:
                 on_metrics(step, metrics, verdict)

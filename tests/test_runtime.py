@@ -9,9 +9,13 @@ import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.runtime.fault_tolerance import (
+    CircuitBreaker,
+    FaultPolicy,
     FaultTolerantRunner,
     HeartbeatRegistry,
+    RetryPolicy,
     StepWatchdog,
+    TransientError,
 )
 
 
@@ -106,6 +110,88 @@ def test_fault_tolerant_runner_retries_and_restores(tmp_path):
     assert runner.retries >= 3
     assert runner.restores >= 1
     assert mgr.latest_step() is not None
+
+
+def test_fault_policy_classifies_transient_vs_fatal():
+    pol = FaultPolicy()
+    assert pol.classify(TransientError("x")) == "transient"
+    assert pol.classify(TimeoutError()) == "transient"
+    assert pol.classify(ConnectionError()) == "transient"
+    assert pol.classify(RuntimeError("x")) == "fatal"
+    assert pol.classify(ValueError("x")) == "fatal"
+    wide = FaultPolicy(transient_types=(Exception,))
+    assert wide.classify(RuntimeError("x")) == "transient"
+
+
+def test_retry_policy_retries_transient_with_backoff():
+    calls = {"n": 0}
+    slept = []
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise TransientError("not yet")
+        return "ok"
+
+    rp = RetryPolicy(max_retries=3, base_delay_s=0.01, multiplier=2.0,
+                     max_delay_s=0.015)
+    assert rp.call(flaky, sleep=slept.append) == "ok"
+    assert calls["n"] == 3
+    # exponential, capped: 0.01, then min(0.02, 0.015)
+    assert slept == [pytest.approx(0.01), pytest.approx(0.015)]
+
+
+def test_retry_policy_exhaustion_and_fatal_raise():
+    rp = RetryPolicy(max_retries=2, base_delay_s=0.0)
+    calls = {"n": 0}
+
+    def always(exc):
+        def fn():
+            calls["n"] += 1
+            raise exc
+        return fn
+
+    with pytest.raises(TransientError):
+        rp.call(always(TransientError("down")), sleep=lambda _: None)
+    assert calls["n"] == 3                      # 1 + max_retries
+    calls["n"] = 0
+    with pytest.raises(ValueError):             # fatal: no retries at all
+        rp.call(always(ValueError("bad")), sleep=lambda _: None)
+    assert calls["n"] == 1
+
+
+def test_circuit_breaker_trip_cooldown_halfopen_cycle():
+    clk = {"t": 0.0}
+    br = CircuitBreaker(failure_threshold=2, cooldown_s=10.0,
+                        clock=lambda: clk["t"])
+    assert br.allow() and not br.is_open
+    br.record_failure()
+    assert br.stats()["state"] == "closed"      # below threshold
+    br.record_failure()
+    assert br.stats() == {"state": "open", "failures": 2, "opens": 1}
+    assert br.is_open and not br.allow()
+    clk["t"] = 10.0                             # cooldown elapsed
+    assert not br.is_open                       # non-consuming read
+    assert br.allow()                           # admits ONE half-open trial
+    assert br.stats()["state"] == "half-open"
+    br.record_failure()                         # trial fails: re-open
+    assert br.stats()["state"] == "open" and br.stats()["opens"] == 2
+    clk["t"] = 20.0
+    assert br.allow()
+    br.record_success()                         # trial succeeds: closed
+    assert br.stats() == {"state": "closed", "failures": 0, "opens": 2}
+    with pytest.raises(ValueError):
+        CircuitBreaker(failure_threshold=0)
+
+
+def test_circuit_breaker_success_resets_failure_streak():
+    br = CircuitBreaker(failure_threshold=3)
+    for _ in range(2):
+        br.record_failure()
+    br.record_success()
+    for _ in range(2):
+        br.record_failure()
+    assert br.stats()["state"] == "closed"      # streak broken, never 3
 
 
 def test_watchdog_classifies_stragglers():
