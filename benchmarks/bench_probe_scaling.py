@@ -386,6 +386,76 @@ def main() -> list[str]:
         f"scan_frac={cs.stats()['scan_fraction']:.1%},"
         f"err={abs(kth_full-kth_prn):.1e}")
 
+    # mutable store (PR 7): (a) incremental vs full index rebuild after 10%
+    # drift — the k-means warm start + batched re-split + shard-sticky
+    # repack must make catching up with drift >= 3x cheaper than building
+    # from scratch (check_bench gates these rows); (b) the hot-tail scan
+    # overhead probes pay between rebuilds, vs tail fraction.
+    from repro.index import MutableClusteredStore
+
+    n_new = int(0.10 * n_idx)
+    drift_rows = xc[rng.permutation(n_idx)[:n_new]] \
+        + 0.05 * rng.standard_normal((n_new, d_idx)).astype(np.float32)
+    drift_rows /= np.linalg.norm(drift_rows, axis=1, keepdims=True)
+    rebuild_s = {}
+    for mode in ("full", "incremental"):
+        ms = MutableClusteredStore(xc, k_idx, impl="xla", iters=6, seed=0,
+                                   auto_rebuild=False,
+                                   incremental=(mode == "incremental"))
+        ms.insert(drift_rows.astype(np.float32))
+        ms.delete(list(range(n_new)))            # 10% churn both ways
+        t0 = time.perf_counter()
+        assert ms.rebuild(wait=True)
+        rebuild_s[mode] = time.perf_counter() - t0
+        st_m = ms.stats()
+        add("probe_mutable_rebuild",
+            f"N={n_idx},K={k_idx},drift=10%,{mode}",
+            f"{rebuild_s[mode]*1e6:.0f}",
+            f"incremental={st_m['last_rebuild_incremental']},"
+            f"tail_after={st_m['tail_rows']},dead_after="
+            f"{st_m['base_dead']}")
+    add("probe_mutable_rebuild", f"N={n_idx},K={k_idx},drift=10%,summary",
+        "-", f"full {rebuild_s['full']*1e6:.0f}us -> incremental "
+        f"{rebuild_s['incremental']*1e6:.0f}us "
+        f"({rebuild_s['full']/rebuild_s['incremental']:.1f}x cheaper)")
+
+    # hot-tail overhead: counts stay exact at every tail size; the rows
+    # show what the unindexed full-scan tail costs a 1%-selectivity probe
+    ms = MutableClusteredStore(xc, k_idx, impl="xla", iters=6, seed=0,
+                               auto_rebuild=False)
+    hist_mut = SemanticHistogram(jnp.asarray(xc), index=ms)
+    kth = max(1, int(0.01 * n_idx))
+    thr_mut = float(0.5 * (d_sorted[kth - 1] + d_sorted[kth]))
+    base_mut_us = None
+    grown = 0
+    tail_all = np.zeros((0, d_idx), np.float32)
+    for tail_frac in (0.0, 0.05, 0.25):
+        target = int(tail_frac * n_idx)
+        if target > grown:
+            extra = np.ascontiguousarray(
+                xc[rng.permutation(n_idx)[:target - grown]])
+            ms.insert(extra)
+            tail_all = np.concatenate([tail_all, extra])
+            grown = target
+        # exactness oracle: an index-free full scan over base + tail rows
+        oracle = SemanticHistogram(
+            jnp.asarray(np.concatenate([xc, tail_all])))
+        c_ref = oracle.count_within(pred_idx, thr_mut)
+        c_mut = hist_mut.count_within(pred_idx, thr_mut)   # warm shapes
+        assert c_mut == c_ref, (tail_frac, c_mut, c_ref)
+        iters = 3
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            hist_mut.count_within(pred_idx, thr_mut)
+        us = (time.perf_counter() - t0) / iters * 1e6
+        if base_mut_us is None:
+            base_mut_us = us
+        add("probe_mutable_tail_cpu",
+            f"N={n_idx},K={k_idx},sel=1.0%,tail={tail_frac:.0%}",
+            f"{us:.0f}",
+            f"overhead={us/base_mut_us:.2f}x_vs_empty_tail,"
+            f"count_diff={c_mut - c_ref}")
+
     # per-shard pruned probes on a host-local mesh: the PR-4 composition.
     # Forcing host devices must happen before jax initializes, so this
     # section runs in a subprocess (same trick as repro.launch.dryrun);
@@ -465,6 +535,8 @@ def main() -> list[str]:
             "balanced": {"n": 100_000, "dims": 256, "shards": 4,
                          "k_per_shard": 160, "zipf_skew": 1.3,
                          "grouped": True, "split_radius": 0.35},
+            "mutable": {"n": 100_000, "dims": 256, "k_clusters": 256,
+                        "drift": 0.10, "tail_fracs": [0.0, 0.05, 0.25]},
         },
         "rows": recs,
     }, indent=1) + "\n")

@@ -45,6 +45,32 @@ def load_baseline(path: Path) -> dict[int, float]:
     return base
 
 
+def check_mutable_rows(data: dict, *, min_speedup: float = 3.0
+                       ) -> list[str]:
+    """Gate the persisted mutable-store build-time rows (PR 7): both
+    rebuild modes must be present, and the incremental rebuild (k-means
+    warm start + shard-sticky repack) must be at least ``min_speedup``x
+    cheaper than the from-scratch build at the benchmarked 10% drift."""
+    us = {}
+    for row in data.get("rows", []):
+        if row.get("bench") != "probe_mutable_rebuild":
+            continue
+        mode = str(row["config"]).rsplit(",", 1)[-1]
+        if mode in ("full", "incremental"):
+            us[mode] = float(row["us_per_call"])
+    fails = []
+    for mode in ("full", "incremental"):
+        if mode not in us:
+            fails.append(f"no probe_mutable_rebuild row for mode={mode} "
+                         f"(re-run benchmarks/bench_probe_scaling.py)")
+    if not fails and us["full"] < min_speedup * us["incremental"]:
+        fails.append(
+            f"incremental rebuild {us['incremental']:.0f}us is only "
+            f"{us['full'] / us['incremental']:.1f}x cheaper than full "
+            f"{us['full']:.0f}us (need >= {min_speedup:.1f}x)")
+    return fails
+
+
 def compare(baseline: dict[int, float], measured: dict[int, float],
             tolerance: float) -> list[str]:
     """Pure comparison (unit-testable without measuring): one failure
@@ -95,6 +121,7 @@ def main(argv: list[str] | None = None) -> int:
         print(f"  probe_measured_cpu N={n}: {us:.0f}us ({ratio})")
 
     fails = compare(baseline, measured, args.tolerance)
+    fails += check_mutable_rows(json.loads(path.read_text()))
     if fails:
         print("check_bench: FAIL")
         for f in fails:

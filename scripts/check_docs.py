@@ -39,7 +39,8 @@ _PYTEST = re.compile(r"python -m pytest[^\n`]*")
 REQUIRED_FLAGS = {
     "repro.launch.serve": ("--concurrency", "--index-clusters", "--shards",
                            "--split-radius", "--balance-boundary",
-                           "--deadline-ms", "--chaos"),
+                           "--deadline-ms", "--chaos", "--ingest-rate",
+                           "--rebuild-tail-frac"),
 }
 
 # substrings README/docs must keep mentioning somewhere (operator-facing
@@ -60,6 +61,12 @@ REQUIRED_TOPICS = {
                 "--degraded-ok, QueryPlan.degraded + sel_interval) must "
                 "stay documented — operators need to know when an answer "
                 "is an interval, not an exact count",
+    "hot tail": "the mutable store's unindexed hot tail (PR 7: streaming "
+                "inserts scanned in full by every probe until a "
+                "background rebuild folds them into the cluster index, "
+                "serve --ingest-rate / --rebuild-tail-frac) must stay "
+                "documented — it is where ingest cost lives between "
+                "rebuilds",
 }
 
 

@@ -8,7 +8,12 @@ subprocess so this process keeps its 1-device view), and a balanced-build
 smoke (boundary-mass-balanced partitioning on a Zipf-skewed store: exact
 counts, shrinking per-shard spread), and a chaos smoke (seeded fault
 injection through the serving control plane: flusher kill + probe failures
-with retries, bound-only degraded answers, exact counter reconciliation)
+with retries, bound-only degraded answers, exact counter reconciliation),
+an ingest smoke (mutable store: hot-tail inserts + tombstone deletes +
+a background rebuild, probes bitwise equal to a fresh full scan at every
+step), and a guard that the tier-1 suite actually collects hypothesis
+property tests (they silently skipped for several PRs when the package
+was missing — the vendored shim makes that impossible now)
 so hot-path regressions surface here first. ``--check-docs`` additionally
 runs scripts/check_docs.py (README/docs drift vs actual entrypoints);
 ``--check-bench`` runs scripts/check_bench.py --quick (probe perf gate vs
@@ -362,6 +367,71 @@ def run_chaos_smoke():
           f"retries={st['retries']}")
 
 
+def run_ingest_smoke():
+    """Mutable store end to end: inserts land in the hot tail, deletes
+    tombstone, a forced rebuild folds both into a fresh generation — and
+    counts/top-k stay bitwise equal to an index-free full scan over the
+    live rows at every step."""
+    from repro.core.histogram import SemanticHistogram
+    from repro.core.synthetic import clustered_unit_vectors
+    from repro.index import MutableClusteredStore
+
+    x, _ = clustered_unit_vectors(600, 48, n_centers=8, spread=0.2, seed=3)
+    ms = MutableClusteredStore(x, 10, impl="xla", iters=4,
+                               auto_rebuild=False)
+    hist = SemanticHistogram(jnp.asarray(x), index=ms)
+    live = {i: x[i] for i in range(600)}
+    rng = np.random.default_rng(9)
+
+    def check(tag):
+        xs = np.stack([live[i] for i in sorted(live)])
+        oracle = SemanticHistogram(jnp.asarray(xs))
+        preds = x[:3]
+        thrs = np.asarray([0.6, 1.0, 1.6], np.float32)
+        c, t = hist.probe_batch(preds, thrs, k=7)
+        co, to = oracle.probe_batch(preds, thrs, k=7)
+        assert (np.asarray(c) == np.asarray(co)).all(), tag
+        assert np.array_equal(np.asarray(t), np.asarray(to)), tag
+
+    check("initial")
+    fresh = rng.standard_normal((50, 48)).astype(np.float32)
+    fresh /= np.linalg.norm(fresh, axis=1, keepdims=True)
+    ids = ms.insert(fresh)
+    for j, i in enumerate(ids):
+        live[int(i)] = fresh[j]
+    check("tail")
+    victims = [0, 5, 300, int(ids[0])]
+    ms.delete(victims)
+    for v in victims:
+        del live[v]
+    check("tombstoned")
+    assert ms.rebuild(wait=True) and ms.generation == 1
+    assert ms.stats()["tail_rows"] == 0
+    check("rebuilt")
+    print(f"OK  mutable_ingest           insert+delete+rebuild bitwise, "
+          f"live={ms.n_live}, gen={ms.generation}")
+
+
+def run_hypothesis_guard():
+    """Fail loudly if the tier-1 suite would collect zero hypothesis
+    property tests — the silent-skip failure mode this PR fixes."""
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parent.parent
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "tests/test_properties.py",
+         "--collect-only", "-q"],
+        capture_output=True, text=True, timeout=300, cwd=root,
+        env={**os.environ, "JAX_PLATFORMS": "cpu",
+             "PYTHONPATH": str(root / "src")})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    n = sum(1 for line in r.stdout.splitlines()
+            if line.startswith("tests/test_properties.py::"))
+    assert n > 0, ("tier-1 collects zero hypothesis tests — the "
+                   "property suite is silently skipped again")
+    print(f"OK  hypothesis_guard         {n} property tests collected")
+
+
 if __name__ == "__main__":
     argv = sys.argv[1:]
     fails = []
@@ -377,7 +447,8 @@ if __name__ == "__main__":
             fails.append("check_bench")
     archs = argv or list(ASSIGNED)
     for smoke in (run_probe_smoke, run_coalescer_smoke, run_index_smoke,
-                  run_sharded_smoke, run_balanced_smoke, run_chaos_smoke):
+                  run_sharded_smoke, run_balanced_smoke, run_chaos_smoke,
+                  run_ingest_smoke, run_hypothesis_guard):
         try:
             smoke()
         except Exception:

@@ -119,6 +119,20 @@ def _masked_local_probe_batch(store, n_valid, preds, thresholds, k):
     return counts, -neg_top
 
 
+# XLA CPU vectorizes the einsum across rows but handles the trailing
+# ``n % _ROW_QUANTUM`` rows with a separate remainder loop whose reduction
+# order differs — the same row can score 1 ulp differently depending on its
+# *position* relative to that boundary. Every decomposed scan path (pruned
+# buckets, sharded buckets, the mutable base+tail twins) pads its buffer to
+# an 8-aligned bucket, so their per-row distances are the stable main-loop
+# values; a monolithic full scan over a misaligned store is the one place a
+# remainder row can appear, and it would break bitwise parity with every
+# decomposed path. ``_row_stable_store`` pads such stores (once, cached) to
+# a _ROW_BUCKET multiple and scans them through the masked twins instead.
+_ROW_QUANTUM = 8
+_ROW_BUCKET = 128
+
+
 # Module-level jitted probes: shared across every SemanticHistogram instance
 # (jax.jit caches traces per (shapes, static k) on the *function object*, so
 # hoisting out of __post_init__ removes the per-instance retrace).
@@ -132,6 +146,16 @@ def _probe_batch_xla(store, preds, thresholds, *, k: int):
     return _local_probe_batch(store, preds, thresholds, k)
 
 
+@partial(jax.jit, static_argnames=("k",))
+def _masked_probe_xla(store, n_valid, pred, thresholds, *, k: int):
+    return _masked_local_probe(store, n_valid, pred, thresholds, k)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _masked_probe_batch_xla(store, n_valid, preds, thresholds, *, k: int):
+    return _masked_local_probe_batch(store, n_valid, preds, thresholds, k)
+
+
 @dataclasses.dataclass
 class SemanticHistogram:
     embeddings: jax.Array        # (N, d) unit vectors
@@ -142,9 +166,30 @@ class SemanticHistogram:
     #                              ShardedClusteredStore (with mesh=)
 
     def __post_init__(self):
-        self.n = self.embeddings.shape[0]
+        self._n_static = self.embeddings.shape[0]
         self._sharded_probes = {}    # (pruned, batched, k) -> callable
         self._store_sharded = None   # lazily placed (full or reordered)
+        self._store_row_stable = None  # lazily padded (see _ROW_QUANTUM)
+        self._mutable = (self.index is not None
+                         and getattr(self.index, "is_mutable", False))
+        if self._mutable:
+            # the mutable store owns its base index, tail, mesh placement
+            # and probe dispatch; the histogram only routes to it, so the
+            # static checks below don't apply — validate the wiring instead
+            if self.index.mesh is not self.mesh:
+                raise ValueError(
+                    "a MutableClusteredStore carries its own mesh; pass "
+                    "the same mesh (or None) to SemanticHistogram")
+            if self.index.impl != self.impl:
+                raise ValueError(
+                    f"index impl {self.index.impl!r} != histogram impl "
+                    f"{self.impl!r} — kernel shapes must match for "
+                    f"bitwise parity")
+            if self.index.d != self.embeddings.shape[1]:
+                raise ValueError(
+                    f"index dim {self.index.d} != store dim "
+                    f"{self.embeddings.shape[1]}")
+            return
         if self.mesh is not None:
             self._data_axes = _mesh_data_axes(self.mesh)
             n_shards = 1
@@ -185,6 +230,24 @@ class SemanticHistogram:
                     raise ValueError(
                         "index embeddings disagree with the store — build "
                         "the ClusteredStore from the same embeddings")
+
+    @property
+    def n(self) -> int:
+        """Row count the probe results are over: the live count for a
+        mutable index (it changes under ingest), the store rows otherwise.
+        Selectivity denominators and k clamps read this."""
+        if self._mutable:
+            return self.index.n_live
+        return self._n_static
+
+    @property
+    def version(self) -> int:
+        """Monotonic mutation counter (0 for immutable stores). Folded
+        into predicate-cache keys so a cached count is never served across
+        a mutation that may have changed it."""
+        if self._mutable:
+            return self.index.version
+        return 0
 
     # -------------------- sharded routing --------------------
 
@@ -231,6 +294,12 @@ class SemanticHistogram:
 
     def _probe(self, pred: jax.Array, thresholds: jax.Array, *, k: int,
                need_topk: bool = True):
+        if self._mutable:
+            counts, topk = self.index.probe(
+                np.asarray(pred, np.float32)[None],
+                np.asarray(thresholds, np.float32)[None], k=k,
+                need_topk=need_topk, scalar_kernel=True)
+            return jnp.asarray(counts[0]), jnp.asarray(topk[0])
         if self.mesh is not None:
             counts, topk = self._sharded_probe(k=k, batched=False)(
                 np.asarray(pred, np.float32),
@@ -249,10 +318,20 @@ class SemanticHistogram:
             from repro.kernels.cosine_topk import ops as ct
 
             return ct.cosine_probe(self.embeddings, pred, thresholds, k=k)
-        return _probe_xla(self.embeddings, pred, thresholds, k=k)
+        store = self._row_stable_store()
+        if store is self.embeddings:
+            return _probe_xla(store, pred, thresholds, k=k)
+        return _masked_probe_xla(store, jnp.int32(self._n_static), pred,
+                                 thresholds, k=k)
 
     def _probe_batched(self, preds: jax.Array, thresholds: jax.Array, *,
                        k: int, need_topk: bool = True):
+        if self._mutable:
+            counts, topk = self.index.probe(
+                np.asarray(preds, np.float32),
+                np.asarray(thresholds, np.float32), k=k,
+                need_topk=need_topk)
+            return jnp.asarray(counts), jnp.asarray(topk)
         if self.mesh is not None:
             counts, topk = self._sharded_probe(k=k, batched=True)(
                 np.asarray(preds, np.float32),
@@ -269,7 +348,29 @@ class SemanticHistogram:
 
             return ct.cosine_probe_batch(self.embeddings, preds, thresholds,
                                          k=k)
-        return _probe_batch_xla(self.embeddings, preds, thresholds, k=k)
+        store = self._row_stable_store()
+        if store is self.embeddings:
+            return _probe_batch_xla(store, preds, thresholds, k=k)
+        return _masked_probe_batch_xla(store, jnp.int32(self._n_static),
+                                       preds, thresholds, k=k)
+
+    def _row_stable_store(self):
+        """``self.embeddings``, row-padded (zero rows, masked to +inf by
+        the masked twins) whenever ``n % _ROW_QUANTUM != 0`` so no real
+        row lands in the XLA remainder loop — the parity anchor every
+        decomposed scan (pruned / sharded / mutable base+tail) matches.
+        Aligned stores (every production-sized one) scan as-is, zero copy."""
+        if self._store_row_stable is None:
+            n = self._n_static
+            if n % _ROW_QUANTUM == 0:
+                self._store_row_stable = self.embeddings
+            else:
+                pad = (-n) % _ROW_BUCKET
+                self._store_row_stable = jnp.concatenate(
+                    [self.embeddings,
+                     jnp.zeros((pad, self.embeddings.shape[1]),
+                               self.embeddings.dtype)])
+        return self._store_row_stable
 
     # -------------------- public API (scalar) --------------------
 
@@ -285,6 +386,8 @@ class SemanticHistogram:
 
     def kth_smallest_distance(self, pred: np.ndarray, k: int) -> float:
         k = max(1, min(k, self.n))
+        if self._mutable:
+            return self.index.kth_smallest(pred, int(k))
         if self.mesh is not None:
             # sharded calibration: one thr=0 probe — each shard contributes
             # its exact local top-min(k, shard_rows) (pruned: via the top-k
@@ -339,7 +442,9 @@ class SemanticHistogram:
         <= B before probing, so the jitted probe compiles O(log B) shapes
         instead of one per distinct miss count."""
         b, t = thr.shape
-        keys = [self.cache.key(preds[j], thr[j], k) for j in range(b)]
+        ver = self.version
+        keys = [self.cache.key(preds[j], thr[j], k, version=ver)
+                for j in range(b)]
         hits = [self.cache.get(key) for key in keys]
         miss = [j for j, h in enumerate(hits) if h is None]
         counts = np.empty((b, t), np.int32)
@@ -396,7 +501,10 @@ class SemanticHistogram:
         return np.asarray(smallest[:, k - 1])
 
     def distances(self, pred: np.ndarray) -> np.ndarray:
-        """Full distance vector — test/debug only (not the serving path)."""
+        """Full distance vector — test/debug only (not the serving path).
+        For a mutable index: distances of the *live* rows."""
+        if self._mutable:
+            return self.index.distances(pred)
         sims = self.embeddings.astype(f32) @ jnp.asarray(pred, f32)
         return np.asarray(1.0 - sims)
 
@@ -564,7 +672,14 @@ def make_sharded_pruned_probe(mesh, index, *, k: int = 128,
         check_rep=False,
     ))
 
-    def probe(preds, thresholds, *, need_topk: bool = True):
+    def probe(preds, thresholds, *, need_topk: bool = True, live=None,
+              live_sizes=None, live_n=None):
+        """``live`` (per-shard (rows,) bool masks), ``live_sizes``
+        (per-shard (K_s,) live cluster counts) and ``live_n`` (per-shard
+        live totals) thread the mutable store's tombstones through: plans
+        run over live sizes, gathers drop dead rows, and the stats
+        denominator is the live row count. All three default to the static
+        (everything-live) behavior."""
         preds = np.asarray(preds, np.float32)
         thr = np.asarray(thresholds, np.float32)
         if batched and thr.ndim == 1:
@@ -572,18 +687,20 @@ def make_sharded_pruned_probe(mesh, index, *, k: int = 128,
         p2 = preds if batched else preds[None, :]
         t2 = thr if batched else thr[None, :]
         b, t = t2.shape
-        plans = index.plan_shards(p2, t2, k=kk, need_topk=need_topk)
+        plans = index.plan_shards(p2, t2, k=kk, need_topk=need_topk,
+                                  live_sizes=live_sizes)
         m_max = max(p.m for p in plans)
         if m_max == 0:              # every cluster on every shard resolved
             counts = np.sum([p.extra for p in plans],
                             axis=0).astype(np.int32)        # (B, T)
             top = np.full((b, k_final), np.inf, np.float32)
-            index.record(plans, launched=False)
+            index.record(plans, launched=False, live_n=live_n)
             return (counts, top) if batched else (counts[0], top[0])
-        if all(p.m == index.shard_rows for p in plans):
+        if live is None and all(p.m == index.shard_rows for p in plans):
             # every shard promoted to a full scan (high selectivity prunes
             # nothing): the store itself is the buffer — no gather copy,
-            # exactly the worst case of the full-scan path and no more
+            # exactly the worst case of the full-scan path and no more.
+            # Disabled under tombstones: dead rows must never be scanned.
             buf = store
             nv = np.full(n_shards, index.shard_rows, np.int32)
         else:
@@ -594,7 +711,8 @@ def make_sharded_pruned_probe(mesh, index, *, k: int = 128,
             for s, plan in enumerate(plans):
                 if plan.m:
                     idx[s, :plan.m] = index.shards[s].scan_rows(
-                        plan.scan_ids)
+                        plan.scan_ids,
+                        live=None if live is None else live[s])
                     nv[s] = plan.m
             buf = gather(store, jnp.asarray(idx))   # (S*bucket, d) sharded
         extra = np.stack([p.extra.astype(np.int32) for p in plans])
@@ -602,7 +720,7 @@ def make_sharded_pruned_probe(mesh, index, *, k: int = 128,
             extra = extra[:, 0, :]                          # (S, T)
         counts, top = sharded(buf, jnp.asarray(nv), jnp.asarray(extra),
                               jnp.asarray(preds), jnp.asarray(thr))
-        index.record(plans, launched=True)
+        index.record(plans, launched=True, live_n=live_n)
         return np.asarray(counts), np.asarray(top)
 
     return probe

@@ -6,6 +6,7 @@ from repro.index.clustered import (
     build_clustered_store,
     store_from_fragments,
 )
+from repro.index.mutable import MutableClusteredStore
 from repro.index.sharded import (
     ShardedClusteredStore,
     build_sharded_clustered_store,
@@ -13,6 +14,7 @@ from repro.index.sharded import (
 
 __all__ = [
     "ClusteredStore",
+    "MutableClusteredStore",
     "ScanPlan",
     "ShardedClusteredStore",
     "build_clustered_store",

@@ -52,7 +52,6 @@ serve driver and ``bench_probe_scaling``.
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import threading
 from functools import partial
 
@@ -162,7 +161,17 @@ class ClusteredStore:
         return np.maximum(d_mu - rad, 1.0 - pnorm * self.max_row_norm), \
             d_mu + rad
 
-    def count_bounds(self, preds: np.ndarray, thresholds: np.ndarray
+    def live_cluster_sizes(self, live: np.ndarray) -> np.ndarray:
+        """(K,) int64 live-row count per cluster for a (N,) bool mask over
+        the *stored* (cluster-contiguous) row order. The mutable store
+        maintains this incrementally; this helper recomputes from scratch
+        for callers that only have the mask."""
+        cl = np.repeat(np.arange(self.k_clusters), self.sizes)
+        return np.bincount(cl[np.asarray(live, bool)],
+                           minlength=self.k_clusters).astype(np.int64)
+
+    def count_bounds(self, preds: np.ndarray, thresholds: np.ndarray, *,
+                     live_sizes: np.ndarray | None = None,
                      ) -> tuple[np.ndarray, np.ndarray]:
         """Exact count interval per (predicate, threshold) — zero rows read.
 
@@ -172,6 +181,11 @@ class ClusteredStore:
         makes pruned scans bitwise-exact guarantees lo <= true count <= hi,
         so the serving layer can answer from bounds alone (degraded mode)
         with a certified interval when the scan path is unavailable.
+
+        ``live_sizes`` (K,) substitutes per-cluster live-row counts for the
+        built sizes under tombstones: every live row is still a member of
+        its build-time cluster, so the distance bounds hold for the live
+        subset and the interval stays certified.
         """
         preds = np.asarray(preds, np.float32)       # match the probe path
         thr64 = np.asarray(thresholds, np.float64)
@@ -180,26 +194,34 @@ class ClusteredStore:
         lb, ub = self.cluster_bounds(preds)                      # (B, K)
         allin = ub[:, :, None] <= thr64[:, None, :] - self.eps   # (B, K, T)
         allout = lb[:, :, None] > thr64[:, None, :] + self.eps
-        sizes = self.sizes[None, :, None]
+        sz = self.sizes if live_sizes is None else \
+            np.asarray(live_sizes, np.int64)
+        sizes = sz[None, :, None]
         lo = (allin.astype(np.int64) * sizes).sum(axis=1)
         hi = ((~allout).astype(np.int64) * sizes).sum(axis=1)
         return lo, hi
 
-    def _topk_cover(self, lb: np.ndarray, ub: np.ndarray,
-                    k: int) -> np.ndarray:
+    def _topk_cover(self, lb: np.ndarray, ub: np.ndarray, k: int,
+                    sizes: np.ndarray | None = None) -> np.ndarray:
         """(B, K) mask of clusters that could hold a top-k distance.
 
         tau_k — the k-th smallest of the size-weighted upper bounds — is an
         upper bound on the true k-th smallest distance, so every cluster
         with lb <= tau_k + eps must be scanned and no other cluster can
-        contribute to the top-k.
+        contribute to the top-k. ``sizes`` substitutes live counts under
+        tombstones (each cluster still holds >= that many live rows below
+        its ub, so tau_k stays an upper bound on the live k-th distance).
         """
-        nonempty = self.sizes > 0
+        if sizes is None:
+            sizes = self.sizes
+        nonempty = sizes > 0
         ne_ids = np.flatnonzero(nonempty)
         cover = np.zeros(lb.shape, bool)
+        if not len(ne_ids):
+            return cover
         for b in range(lb.shape[0]):
             order = ne_ids[np.argsort(ub[b, ne_ids], kind="stable")]
-            csum = np.cumsum(self.sizes[order])
+            csum = np.cumsum(sizes[order])
             pos = min(int(np.searchsorted(csum, k)), len(order) - 1)
             tau_k = ub[b, order[pos]]
             cover[b] = nonempty & (lb[b] <= tau_k + self.eps)
@@ -208,7 +230,8 @@ class ClusteredStore:
     # ------------------------------------------------------------ planning
 
     def plan_scan(self, preds: np.ndarray, thr: np.ndarray, *, k: int = 1,
-                  need_topk: bool = True) -> ScanPlan:
+                  need_topk: bool = True,
+                  live_sizes: np.ndarray | None = None) -> ScanPlan:
         """Classify every cluster for a batched probe; return the ScanPlan.
 
         preds (B, d); thr (B, T). All-in / all-out clusters resolve to
@@ -218,19 +241,30 @@ class ClusteredStore:
         the whole store so the gather below degenerates to the contiguous
         embeddings — the kernel then counts every cluster row-by-row, which
         is still exact, and the worst case costs ~the full scan and no more.
+
+        ``live_sizes`` (K,) — per-cluster live-row counts under the mutable
+        store's tombstones. Every live row is a build-time member of its
+        cluster, so the distance bounds stay valid for the live subset;
+        all-in clusters then contribute their *live* count, ``m`` counts
+        live rows only, and the full-store promotion compares against the
+        live total (dead rows are never gathered, see ``scan_rows``).
         """
+        sizes = self.sizes if live_sizes is None else \
+            np.asarray(live_sizes, np.int64)
+        n_live = int(sizes.sum())
         lb, ub = self.cluster_bounds(preds)                  # (B, K) f64
         thr64 = np.asarray(thr, np.float64)
         allin = ub[:, :, None] <= thr64[:, None, :] - self.eps   # (B, K, T)
         allout = lb[:, :, None] > thr64[:, None, :] + self.eps
-        nonempty = self.sizes > 0
+        nonempty = sizes > 0
         boundary = (~(allin | allout)).any(axis=2) & nonempty[None, :]
         scan_bk = boundary.copy()                            # (B, K)
         if need_topk:
-            scan_bk |= self._topk_cover(lb, ub, max(1, min(int(k), self.n)))
+            scan_bk |= self._topk_cover(
+                lb, ub, max(1, min(int(k), max(n_live, 1))), sizes)
         in_union = scan_bk.any(axis=0) & nonempty            # (K,)
         scan_ids = np.flatnonzero(in_union)
-        if int(self.sizes[scan_ids].sum()) >= 0.9 * self.n:
+        if int(sizes[scan_ids].sum()) >= 0.9 * n_live:
             in_union = nonempty.copy()
             scan_ids = np.flatnonzero(in_union)
         # clusters resolved by bounds alone: add all-in sizes. The scan
@@ -240,34 +274,52 @@ class ClusteredStore:
         # union contribute via their bound classification.
         resolved = nonempty[None, :] & ~in_union[None, :]    # (B, K)
         extra = ((allin & resolved[:, :, None]).astype(np.int64)
-                 * self.sizes[None, :, None]).sum(axis=1)    # (B, T)
+                 * sizes[None, :, None]).sum(axis=1)         # (B, T)
         return ScanPlan(scan_ids=scan_ids,
-                        m=int(self.sizes[scan_ids].sum()), extra=extra,
+                        m=int(sizes[scan_ids].sum()), extra=extra,
                         boundary_clusters=int(boundary.sum()))
 
-    def scan_rows(self, cluster_ids: np.ndarray) -> np.ndarray:
+    def scan_rows(self, cluster_ids: np.ndarray,
+                  live: np.ndarray | None = None) -> np.ndarray:
         """Local row indices of the given clusters' segments, concatenated
-        in cluster order (the layout is cluster-contiguous)."""
+        in cluster order (the layout is cluster-contiguous). ``live`` (N,)
+        bool drops tombstoned rows — the scan buffer then holds live rows
+        only, so pruned results match a fresh store built from the live
+        subset bitwise (per-row distances are row-local)."""
         if not len(cluster_ids):
             return np.empty(0, np.int64)
-        return np.concatenate(
+        rows = np.concatenate(
             [np.arange(self.offsets[c], self.offsets[c + 1])
              for c in cluster_ids])
+        if live is not None:
+            rows = rows[np.asarray(live, bool)[rows]]
+        return rows
 
     # -------------------------------------------------------------- scans
 
-    def _gather(self, cluster_ids: np.ndarray) -> tuple[jax.Array, int]:
+    def _gather(self, cluster_ids: np.ndarray,
+                live: np.ndarray | None = None,
+                live_sizes: np.ndarray | None = None,
+                ) -> tuple[jax.Array, int]:
         """Concatenate cluster segments, pad to a power-of-two bucket.
 
         Returns (buffer (bucket, d), valid row count). Padding repeats row 0
         and is masked to +inf distance by the kernel, so it never scores.
         When every row is selected (high-selectivity probes prune nothing)
-        the store is already the contiguous answer — no gather copy.
+        the store is already the contiguous answer — no gather copy; under
+        tombstones (``live``) the zero-copy shortcut is disabled because
+        dead rows must never enter the scan.
         """
-        m = int(self.sizes[cluster_ids].sum())
-        if m == self.n:
-            return self.embeddings, m
-        rows = self.scan_rows(cluster_ids)
+        if live is None:
+            m = int(self.sizes[cluster_ids].sum())
+            if m == self.n:
+                return self.embeddings, m
+            rows = self.scan_rows(cluster_ids)
+        else:
+            sizes = self.live_cluster_sizes(live) if live_sizes is None \
+                else live_sizes
+            m = int(np.asarray(sizes)[cluster_ids].sum())
+            rows = self.scan_rows(cluster_ids, live)
         bucket = max(128, 1 << max(0, m - 1).bit_length())
         pad = np.zeros(bucket - m, np.int64)
         buf = jnp.take(self.embeddings,
@@ -304,6 +356,8 @@ class ClusteredStore:
     def probe_pruned(self, preds: np.ndarray, thresholds: np.ndarray, *,
                      k: int = 1, impl: str = "xla", interpret: bool = True,
                      scalar_kernel: bool = False, need_topk: bool = True,
+                     live: np.ndarray | None = None,
+                     live_sizes: np.ndarray | None = None,
                      ) -> tuple[np.ndarray, np.ndarray, dict]:
         """Pruned batched probe: counts + top-k exactly equal the full scan.
 
@@ -320,17 +374,28 @@ class ClusteredStore:
         ``need_topk=False`` (count-only callers that discard the top-k)
         skips the top-k cover: a probe whose every cluster resolves by
         bounds then launches nothing, and the returned top-k is +inf.
+
+        ``live``/``live_sizes``: tombstone support for the mutable store —
+        dead rows are excluded from every gather, all-in clusters
+        contribute live counts, and results equal a fresh full scan of the
+        live subset bitwise. The indexed rows' bounds stay valid because
+        live rows are a subset of each cluster's build-time members.
         """
         preds = np.asarray(preds, np.float32)
         thr = np.asarray(thresholds, np.float32)
         if thr.ndim == 1:
             thr = thr[:, None]
         b, t = thr.shape
-        k = max(1, min(int(k), self.n))
-        plan = self.plan_scan(preds, thr, k=k, need_topk=need_topk)
+        if live is not None and live_sizes is None:
+            live_sizes = self.live_cluster_sizes(live)
+        n_eff = self.n if live_sizes is None \
+            else int(np.asarray(live_sizes).sum())
+        k = max(1, min(int(k), max(n_eff, 1)))
+        plan = self.plan_scan(preds, thr, k=k, need_topk=need_topk,
+                              live_sizes=live_sizes)
 
-        if len(plan.scan_ids):
-            buf, m = self._gather(plan.scan_ids)
+        if len(plan.scan_ids) and plan.m:
+            buf, m = self._gather(plan.scan_ids, live, live_sizes)
             counts_s, topk = self._masked_probe(
                 buf, m, jnp.asarray(preds), jnp.asarray(thr), k=k,
                 impl=impl, interpret=interpret, scalar=scalar_kernel)
@@ -343,10 +408,10 @@ class ClusteredStore:
                   ).astype(np.int32)
 
         stats = {
-            "launches": 1 if len(plan.scan_ids) else 0,
+            "launches": 1 if m else 0,
             "rows_scanned": m,
-            "rows_full_equiv": self.n,
-            "scan_fraction": m / max(1, self.n),
+            "rows_full_equiv": n_eff,
+            "scan_fraction": m / max(1, n_eff),
             "scanned_clusters": int(len(plan.scan_ids)),
             "boundary_clusters": plan.boundary_clusters,
             "clusters": self.k_clusters,
@@ -356,20 +421,29 @@ class ClusteredStore:
         return counts, np.asarray(topk), stats
 
     def kth_smallest(self, pred: np.ndarray, k: int, *, impl: str = "xla",
-                     interpret: bool = True) -> float:
+                     interpret: bool = True,
+                     live: np.ndarray | None = None,
+                     live_sizes: np.ndarray | None = None) -> float:
         """Exact k-th smallest distance via bound-ordered cluster scanning.
 
         Clusters are visited in ascending lower-bound order, ``chunk_rows``
         rows at a time; the loop stops as soon as the running k-th candidate
         is <= the next cluster's lower bound - eps (no unscanned point can
         beat it). Equals the full-scan value bit for bit — the threshold-
-        calibration primitive (§3.2) without the full pass.
+        calibration primitive (§3.2) without the full pass. ``live`` drops
+        tombstoned rows (bounds stay valid for any member subset), matching
+        a fresh full scan of the live rows.
         """
         pred = np.asarray(pred, np.float32)
-        k = max(1, min(int(k), self.n))
+        if live is not None and live_sizes is None:
+            live_sizes = self.live_cluster_sizes(live)
+        sizes = self.sizes if live_sizes is None \
+            else np.asarray(live_sizes, np.int64)
+        n_eff = int(sizes.sum())
+        k = max(1, min(int(k), max(n_eff, 1)))
         lb, _ = self.cluster_bounds(pred[None])
         lb = lb[0]
-        ne = np.flatnonzero(self.sizes > 0)
+        ne = np.flatnonzero(sizes > 0)
         order = ne[np.argsort(lb[ne], kind="stable")]
         preds_j = jnp.asarray(pred)[None, :]
         thr_j = jnp.zeros((1, 1), f32)
@@ -377,15 +451,15 @@ class ClusteredStore:
         i, launches, rows_scanned = 0, 0, 0
         # chunk target: enough rows per launch to amortize dispatch without
         # defeating early termination on small stores
-        target = max(k, min(self.chunk_rows, max(1, self.n // 8)))
+        target = max(k, min(self.chunk_rows, max(1, n_eff // 8)))
         while i < len(order):
             if best.size >= k and best[k - 1] <= lb[order[i]] - self.eps:
                 break
             j, nrows = i, 0
             while j < len(order) and (j == i or nrows < target):
-                nrows += int(self.sizes[order[j]])
+                nrows += int(sizes[order[j]])
                 j += 1
-            buf, m = self._gather(order[i:j])
+            buf, m = self._gather(order[i:j], live, sizes)
             _, topk = self._masked_probe(buf, m, preds_j, thr_j,
                                          k=min(k, m), impl=impl,
                                          interpret=interpret, scalar=True)
@@ -396,7 +470,7 @@ class ClusteredStore:
             rows_scanned += m
             i = j
         self._record({"launches": launches, "rows_scanned": rows_scanned,
-                      "rows_full_equiv": self.n}, probes=1)
+                      "rows_full_equiv": n_eff}, probes=1)
         return float(best[k - 1])
 
     # -------------------------------------------------------------- stats
@@ -454,54 +528,124 @@ def _assemble_store(x: np.ndarray, cent64: np.ndarray, assign: np.ndarray,
         max_row_norm=float(row_norm) * (1.0 + 1e-9) + 1e-12)
 
 
+def _split_round_2means(x64: np.ndarray, members: list[np.ndarray],
+                        iters: int) -> list[np.ndarray | None]:
+    """One vectorized 2-means pass over a *batch* of candidate clusters.
+
+    Pads every candidate's member set to a common (C, M, d) stack and runs
+    all C local Lloyd loops at once with masked updates — the serial
+    splitter paid a jit dispatch + full Lloyd per cluster, which dominated
+    build time once ``split_radius`` produced dozens of candidates.
+    Seeds are deterministic farthest-point picks (member farthest from the
+    mean, then the member farthest from that), so duplicates degenerate to
+    an empty side immediately. Returns, per candidate, the member-index
+    array of side-1 (rows to move to the new cluster) or None when the
+    split is degenerate (unsplittable).
+    """
+    c_n = len(members)
+    m_max = max(len(m) for m in members)
+    d = x64.shape[1]
+    pts = np.zeros((c_n, m_max, d))
+    mask = np.zeros((c_n, m_max), bool)
+    for i, m in enumerate(members):
+        pts[i, :len(m)] = x64[m]
+        mask[i, :len(m)] = True
+    counts = mask.sum(axis=1)                                    # (C,)
+    mean = pts.sum(axis=1) / counts[:, None]
+    d_mean = np.where(mask, np.linalg.norm(pts - mean[:, None], axis=2),
+                      -np.inf)
+    s0 = d_mean.argmax(axis=1)
+    c0 = pts[np.arange(c_n), s0]                                 # (C, d)
+    d_c0 = np.where(mask, np.linalg.norm(pts - c0[:, None], axis=2),
+                    -np.inf)
+    c1 = pts[np.arange(c_n), d_c0.argmax(axis=1)]
+    for _ in range(iters):
+        d0 = np.linalg.norm(pts - c0[:, None], axis=2)           # (C, M)
+        d1 = np.linalg.norm(pts - c1[:, None], axis=2)
+        side1 = (d1 < d0) & mask
+        side0 = ~side1 & mask
+        n0 = side0.sum(axis=1)
+        n1 = side1.sum(axis=1)
+        ok = (n0 > 0) & (n1 > 0)
+        c0 = np.where(ok[:, None],
+                      (pts * side0[:, :, None]).sum(axis=1)
+                      / np.maximum(n0, 1)[:, None], c0)
+        c1 = np.where(ok[:, None],
+                      (pts * side1[:, :, None]).sum(axis=1)
+                      / np.maximum(n1, 1)[:, None], c1)
+    d0 = np.linalg.norm(pts - c0[:, None], axis=2)
+    d1 = np.linalg.norm(pts - c1[:, None], axis=2)
+    side1 = (d1 < d0) & mask
+    out: list[np.ndarray | None] = []
+    for i, m in enumerate(members):
+        s1 = side1[i, :len(m)]
+        out.append(m[s1] if 0 < s1.sum() < len(m) else None)
+    return out
+
+
 def _split_fat_clusters(x: np.ndarray, cent64: np.ndarray,
                         assign: np.ndarray, *, split_radius: float,
-                        max_clusters: int, seed: int,
+                        max_clusters: int, seed: int = 0,
                         iters: int = 6) -> tuple[np.ndarray, np.ndarray]:
-    """Recursively 2-means-split radius-outlier clusters.
+    """Recursively 2-means-split radius-outlier clusters, a *round* at a
+    time.
 
     Lloyd's local optima merge concept clumps into one wide cluster that
-    straddles every probe's boundary (docs/index.md pathology); splitting it
+    straddles every probe's boundary (docs/index.md pathology); splitting
     restores tight radii without oversegmenting the rest of the store.
-    Widest-first: clusters with radius > ``split_radius`` and >= 2 members
-    are popped from a max-radius heap, split by a local 2-means, and the
-    children re-queued while they stay over budget — until the heap drains
-    or ``max_clusters`` is hit. A degenerate split (all members on one side,
-    e.g. duplicated points) marks the cluster unsplittable, so the loop
-    always terminates. Only the assignment changes; bounds stay exact
-    because radii are recomputed from the actual members downstream.
+    Each round collects every cluster with radius > ``split_radius`` and
+    >= 2 members (widest first when ``max_clusters`` caps how many can
+    split), runs ONE vectorized 2-means over the whole batch
+    (``_split_round_2means``), and re-queues still-fat children for the
+    next round. A degenerate split (all members on one side, e.g.
+    duplicated points) marks the cluster unsplittable, so the loop always
+    terminates. Only the assignment changes; bounds stay exact because
+    radii are recomputed from the actual members downstream. ``seed`` is
+    kept for signature stability — seeding is deterministic farthest-point
+    now, so it is unused.
     """
+    del seed
     x64 = x.astype(np.float64)
     cents = [c for c in np.asarray(cent64, np.float64)]
     assign = np.asarray(assign).copy()
+    unsplittable: set[int] = set()
+    # (radius, members) cache — only split children change between rounds
+    info: dict[int, tuple[float, np.ndarray]] = {}
 
-    def over_budget(c):
+    def refresh(c: int) -> None:
         m = np.flatnonzero(assign == c)
-        if len(m) < 2:
-            return None
-        r = np.linalg.norm(x64[m] - cents[c], axis=1).max()
-        return (-r, c) if r > split_radius else None
+        r = float(np.linalg.norm(x64[m] - cents[c], axis=1).max()) \
+            if len(m) else 0.0
+        info[c] = (r, m)
 
-    heap = [e for c in range(len(cents)) if (e := over_budget(c))]
-    heapq.heapify(heap)
-    while heap and len(cents) < max_clusters:
-        _, c = heapq.heappop(heap)
-        m = np.flatnonzero(assign == c)
-        # the local 2-means runs on the xla assignment path: the split is a
-        # host-side build decision (no probe-parity constraint), and the
-        # subsets are far too small to amortize a pallas dispatch each
-        sub_c, sub_a = kmeans(x[m], 2, iters=iters,
-                              seed=seed + 7919 * (len(cents) + c),
-                              impl="xla")
-        if (sub_a == sub_a[0]).all():
-            continue                       # unsplittable (duplicates etc.)
-        new_id = len(cents)
-        cents[c] = sub_c[0].astype(np.float64)
-        cents.append(sub_c[1].astype(np.float64))
-        assign[m[sub_a == 1]] = new_id
-        for cc in (c, new_id):
-            if (e := over_budget(cc)):
-                heapq.heappush(heap, e)
+    for c in range(len(cents)):
+        refresh(c)
+    while len(cents) < max_clusters:
+        cand = sorted(
+            ((r, c, m) for c, (r, m) in info.items()
+             if r > split_radius and len(m) >= 2 and c not in unsplittable),
+            key=lambda e: -e[0])[:max_clusters - len(cents)]
+        if not cand:
+            break
+        moves = _split_round_2means(x64, [m for _, _, m in cand], iters)
+        progressed = False
+        for (_, c, m), mv in zip(cand, moves):
+            if mv is None:
+                unsplittable.add(c)
+                continue
+            new_id = len(cents)
+            cents.append(cents[c].copy())       # placeholder; refreshed below
+            assign[mv] = new_id
+            keep = np.setdiff1d(m, mv, assume_unique=True)
+            cents[c] = x64[keep].mean(axis=0)
+            cents[new_id] = x64[mv].mean(axis=0)
+            refresh(c)
+            refresh(new_id)
+            progressed = True
+            if len(cents) >= max_clusters:
+                break
+        if not progressed:
+            break
     return np.asarray(cents), assign
 
 
@@ -510,6 +654,7 @@ def build_clustered_store(
     seed: int = 0, impl: str = "pallas", interpret: bool = True,
     eps: float = 1e-4, chunk_rows: int = 4096,
     split_radius: float | None = None, max_clusters: int | None = None,
+    init_centroids: np.ndarray | None = None,
 ) -> ClusteredStore:
     """Partition (N, d) embeddings into K clusters for pruned probing.
 
@@ -526,12 +671,18 @@ def build_clustered_store(
     bitwise equal to the full scan — but turns the fat-cluster pathology
     (one wide cluster boundary for every probe) into tight segments bounds
     can actually prune. See docs/index.md.
+
+    ``init_centroids``: warm-start Lloyd's from a previous build's centroids
+    (the incremental rebuild path) — a couple of refinement iterations then
+    recover a cold run's partition quality at a fraction of the cost, since
+    most rows keep their assignment across a small mutation batch.
     """
     x = np.asarray(embeddings, np.float32)
     n, d = x.shape
     k = max(1, min(int(k_clusters), n))
     centroids, assign = kmeans(x, k, iters=iters, seed=seed, impl=impl,
-                               interpret=interpret)
+                               interpret=interpret,
+                               init_centroids=init_centroids)
     cent64 = centroids.astype(np.float64)
     if split_radius is not None and split_radius > 0:
         cap = min(n, 4 * k if max_clusters is None else int(max_clusters))

@@ -97,6 +97,10 @@ class ShardedClusteredStore:
     # counterfactual serve prints next to boundary_mass() (balanced builds
     # only; None for contiguous builds, which have no global clustering)
     contiguous_mass: np.ndarray | None = None
+    # warm-start state for the incremental rebuild (boundary builds only):
+    # the global clustering's centroids, handed back to the next build as
+    # ``init_centroids`` so Lloyd's refines instead of restarting cold
+    global_centroids: np.ndarray | None = None
 
     def __post_init__(self):
         self.n = int(self.embeddings.shape[0])
@@ -110,38 +114,54 @@ class ShardedClusteredStore:
     # ------------------------------------------------------------ planning
 
     def plan_shards(self, preds: np.ndarray, thr: np.ndarray, *, k: int,
-                    need_topk: bool = True) -> list:
+                    need_topk: bool = True,
+                    live_sizes: list | None = None) -> list:
         """One exact ``ScanPlan`` per shard for a (B, d) x (B, T) probe.
 
         ``k`` is the per-shard top-k cover size (the combine gathers that
         many candidates per shard), already clamped by the caller to the
-        shard row count.
+        shard row count. ``live_sizes`` — one (K_s,) per-cluster live count
+        array per shard (mutable-store tombstones) — makes each shard plan
+        over its live rows only.
         """
-        return [s.plan_scan(preds, thr, k=k, need_topk=need_topk)
-                for s in self.shards]
+        if live_sizes is None:
+            live_sizes = [None] * self.n_shards
+        return [s.plan_scan(preds, thr, k=k, need_topk=need_topk,
+                            live_sizes=ls)
+                for s, ls in zip(self.shards, live_sizes)]
 
-    def count_bounds(self, preds: np.ndarray, thresholds: np.ndarray
+    def count_bounds(self, preds: np.ndarray, thresholds: np.ndarray, *,
+                     live_sizes: list | None = None,
                      ) -> tuple[np.ndarray, np.ndarray]:
         """Exact count interval per (predicate, threshold) — zero rows read.
 
         Sums each shard's bound-only interval (host-side; no mesh needed),
         so the sharded index supports the same degraded-mode answers as the
         single-device one. lo <= true count <= hi, per shard and in total.
+        ``live_sizes`` as in ``plan_shards`` — intervals then certify the
+        live subset.
         """
-        los, his = zip(*(s.count_bounds(preds, thresholds)
-                         for s in self.shards))
+        if live_sizes is None:
+            live_sizes = [None] * self.n_shards
+        los, his = zip(*(s.count_bounds(preds, thresholds, live_sizes=ls)
+                         for s, ls in zip(self.shards, live_sizes)))
         return sum(los), sum(his)
 
     # -------------------------------------------------------------- stats
 
-    def record(self, plans: list, *, launched: bool) -> None:
+    def record(self, plans: list, *, launched: bool,
+               live_n: list | None = None) -> None:
         """Account one sharded probe: per-shard rows into each sub-index
         (their scan fractions diverge when boundary work is uneven), the
-        probe/launch tally here."""
-        for shard, plan in zip(self.shards, plans):
+        probe/launch tally here. ``live_n`` — per-shard live row counts
+        under tombstones — replaces ``shard.n`` as the full-scan-equivalent
+        denominator."""
+        if live_n is None:
+            live_n = [s.n for s in self.shards]
+        for shard, plan, nl in zip(self.shards, plans, live_n):
             shard._record({"launches": 1 if (launched and plan.m) else 0,
                            "rows_scanned": plan.m if launched else 0,
-                           "rows_full_equiv": shard.n}, probes=1)
+                           "rows_full_equiv": int(nl)}, probes=1)
         with self._lock:
             self._probes += 1
             self._launches += 1 if launched else 0
@@ -193,26 +213,13 @@ class ShardedClusteredStore:
             self._launches = 0
 
 
-def _pack_boundary_balanced(
-    gcs: ClusteredStore, n_shards: int, rows: int,
-) -> list[list[tuple[np.ndarray, np.ndarray]]]:
-    """Greedy LPT min-max pack of global clusters onto shards.
-
-    Items are the global store's clusters scored by boundary mass
-    ``size x radius``; each is assigned whole to the currently-lightest
-    shard with row capacity left (longest-processing-time order), and when
-    the lightest shard cannot hold a whole cluster the cluster is *split at
-    the shard edge*: members are ordered by distance to the centroid, the
-    near core fills the shard (tight fragment radius), and the far shell
-    re-enters the worklist as a new item with its own (smaller or equal)
-    mass. Row capacities sum to N, so packing always completes with every
-    shard exactly full. Returns per-shard ``(global_row_ids, centroid)``
-    fragment lists.
-    """
-    # per-cluster member ids (global row ids) sorted near-to-far, plus the
-    # matching centroid distances so fragment masses need no re-norm pass
+def _cluster_items(gcs: ClusteredStore) -> list:
+    """Per-cluster pack items ``(-mass, tiebreak, members, dist, cent)``:
+    member ids (global row ids) sorted near-to-far plus the matching
+    centroid distances, so fragment masses need no re-norm pass. Max-heap
+    order on boundary mass ``size x radius``."""
     xs = np.asarray(gcs.embeddings, np.float64)   # one host copy, not K
-    items = []                       # max-heap on mass: (-mass, tiebreak, ...)
+    items = []
     tiebreak = 0
     for c in range(gcs.k_clusters):
         if not gcs.sizes[c]:
@@ -225,13 +232,18 @@ def _pack_boundary_balanced(
         items.append((-float(len(members) * dist[-1]), tiebreak,
                       members, dist, gcs.centroids[c]))
         tiebreak += 1
-    heapq.heapify(items)
+    return items
 
-    cap = [rows] * n_shards
-    load = [(0.0, s) for s in range(n_shards)]      # min-heap on mass
-    heapq.heapify(load)
-    frags: list[list[tuple[np.ndarray, np.ndarray]]] = \
-        [[] for _ in range(n_shards)]
+
+def _lpt_place(items: list, cap: list, load: list, frags: list) -> None:
+    """Core greedy LPT loop: pop the heaviest item, place it on the
+    lightest shard with row capacity left, split at the shard edge when it
+    does not fit (near core fills the shard — tight fragment radius — and
+    the far shell re-enters the worklist with its own, smaller-or-equal,
+    mass). ``items`` is a max-heap on mass, ``load`` a min-heap of
+    ``(mass, shard)``; both are consumed in place, ``frags`` accumulates
+    per-shard ``(global_row_ids, centroid)`` fragments."""
+    tiebreak = -1          # negative tiebreaks cannot collide with items'
     while items:
         neg_mass, _, members, dist, cent = heapq.heappop(items)
         # lightest shard with capacity (full shards drop out of the heap)
@@ -245,9 +257,85 @@ def _pack_boundary_balanced(
         heapq.heappush(load, (mass + placed_mass, s))
         if take < len(members):                     # far shell re-enters
             rest, rdist = members[take:], dist[take:]
-            tiebreak += 1
             heapq.heappush(items, (-float(len(rest) * rdist[-1]), tiebreak,
                                    rest, rdist, cent))
+            tiebreak -= 1
+
+
+def _pack_boundary_balanced(
+    gcs: ClusteredStore, n_shards: int, rows: int,
+) -> list[list[tuple[np.ndarray, np.ndarray]]]:
+    """Greedy LPT min-max pack of global clusters onto shards.
+
+    Items are the global store's clusters scored by boundary mass
+    ``size x radius``; each is assigned whole to the currently-lightest
+    shard with row capacity left (longest-processing-time order), and when
+    the lightest shard cannot hold a whole cluster the cluster is *split at
+    the shard edge* (see ``_lpt_place``). Row capacities sum to N, so
+    packing always completes with every shard exactly full. Returns
+    per-shard ``(global_row_ids, centroid)`` fragment lists.
+    """
+    items = _cluster_items(gcs)
+    heapq.heapify(items)
+    cap = [rows] * n_shards
+    load = [(0.0, s) for s in range(n_shards)]      # min-heap on mass
+    heapq.heapify(load)
+    frags: list[list[tuple[np.ndarray, np.ndarray]]] = \
+        [[] for _ in range(n_shards)]
+    _lpt_place(items, cap, load, frags)
+    return frags
+
+
+def _pack_boundary_incremental(
+    gcs: ClusteredStore, n_shards: int, rows: int,
+    shard_hint: np.ndarray, *, tol: float = 0.25,
+) -> list[list[tuple[np.ndarray, np.ndarray]]]:
+    """Hint-guided LPT pack: keep clusters where their rows already live.
+
+    ``shard_hint`` (N,) gives each global row its *previous* generation's
+    shard (-1 for rows with no prior placement, e.g. fresh ingests). A full
+    repack moves most of the store between shards on every rebuild even
+    when only a few percent of rows changed; this variant first pins each
+    cluster to the shard that already holds the majority of its members —
+    accepted while that shard has row capacity and its boundary mass stays
+    within ``(1 + tol)`` of the ideal (total mass / n_shards) — and only
+    the overflow (clusters whose hinted shard is full or overweight, plus
+    edge-split shells) goes through the normal LPT pass over the remaining
+    capacity. Same exactness story as the balanced pack: ``perm`` makes any
+    placement result-invariant; only the max per-shard mass and the row
+    movement differ.
+    """
+    items = _cluster_items(gcs)
+    items.sort()                                   # heaviest first (-mass)
+    total_mass = -sum(it[0] for it in items)
+    budget = (1.0 + tol) * total_mass / n_shards
+    cap = [rows] * n_shards
+    mass = [0.0] * n_shards
+    frags: list[list[tuple[np.ndarray, np.ndarray]]] = \
+        [[] for _ in range(n_shards)]
+    leftovers = []
+    hint = np.asarray(shard_hint, np.int64)
+    for it in items:
+        _, tiebreak, members, dist, cent = it
+        prev = hint[members]
+        prev = prev[prev >= 0]
+        s = int(np.bincount(prev, minlength=n_shards).argmax()) \
+            if len(prev) else -1
+        if s < 0 or cap[s] == 0 or mass[s] >= budget:
+            leftovers.append(it)
+            continue
+        take = min(len(members), cap[s])
+        frags[s].append((members[:take], cent))
+        cap[s] -= take
+        mass[s] += float(take * dist[take - 1])
+        if take < len(members):                     # shell -> LPT phase
+            rest, rdist = members[take:], dist[take:]
+            leftovers.append((-float(len(rest) * rdist[-1]), tiebreak,
+                              rest, rdist, cent))
+    heapq.heapify(leftovers)
+    load = [(mass[s], s) for s in range(n_shards)]
+    heapq.heapify(load)
+    _lpt_place(leftovers, cap, load, frags)
     return frags
 
 
@@ -257,6 +345,8 @@ def build_sharded_clustered_store(
     interpret: bool = True, eps: float = 1e-4, chunk_rows: int = 4096,
     balance: str = "contiguous", split_radius: float | None = None,
     max_clusters: int | None = None,
+    init_centroids: np.ndarray | None = None,
+    shard_hint: np.ndarray | None = None,
 ) -> ShardedClusteredStore:
     """Partition the store into ``n_shards`` equal row blocks of K clusters.
 
@@ -283,6 +373,14 @@ def build_sharded_clustered_store(
       other partition: ``perm`` makes reordering result-invariant.
 
     ``split_radius`` (either mode) forwards to the fat-cluster splitter.
+
+    Incremental rebuild knobs (``balance="boundary"`` only — the mutable
+    store's background rebuild path): ``init_centroids`` warm-starts the
+    global k-means from the prior generation's ``global_centroids`` (fewer
+    Lloyd iterations recover a cold build's partition), and ``shard_hint``
+    (N,) int64 — each row's previous shard, -1 for new rows — switches the
+    packer to ``_pack_boundary_incremental`` so clusters stay on the shard
+    that already holds their rows unless balance demands otherwise.
     """
     x = np.asarray(embeddings, np.float32)
     n = x.shape[0]
@@ -299,12 +397,18 @@ def build_sharded_clustered_store(
     if balance not in ("contiguous", "boundary"):
         raise ValueError(f"balance={balance!r}: expected 'contiguous' or "
                          f"'boundary'")
+    if balance != "boundary" and (init_centroids is not None
+                                  or shard_hint is not None):
+        raise ValueError("init_centroids / shard_hint warm-start requires "
+                         "balance='boundary' (per-shard k-means runs have "
+                         "no global clustering to warm-start)")
 
     if balance == "boundary":
         gcs = build_clustered_store(
             x, int(k_clusters) * n_shards, iters=iters, seed=seed,
             impl=impl, interpret=interpret, eps=eps, chunk_rows=chunk_rows,
-            split_radius=split_radius, max_clusters=max_clusters)
+            split_radius=split_radius, max_clusters=max_clusters,
+            init_centroids=init_centroids)
         # counterfactual: the contiguous row-block partition's predicted
         # mass under the same global clustering (each row contributes its
         # cluster's radius to the block that holds it)
@@ -313,7 +417,11 @@ def build_sharded_clustered_store(
                                          gcs.sizes)
         contiguous_mass = gcs.radii[cluster_of].reshape(n_shards,
                                                         rows).sum(axis=1)
-        frags = _pack_boundary_balanced(gcs, n_shards, rows)
+        if shard_hint is not None:
+            frags = _pack_boundary_incremental(
+                gcs, n_shards, rows, np.asarray(shard_hint, np.int64))
+        else:
+            frags = _pack_boundary_balanced(gcs, n_shards, rows)
         shards, perm, parts = [], [], []
         for s in range(n_shards):
             cs = store_from_fragments(x, frags[s], eps=eps,
@@ -325,7 +433,8 @@ def build_sharded_clustered_store(
             shards=shards, shard_rows=rows,
             embeddings=jnp.asarray(np.concatenate(parts)),
             perm=np.concatenate(perm), balance="boundary",
-            contiguous_mass=contiguous_mass)
+            contiguous_mass=contiguous_mass,
+            global_centroids=np.asarray(gcs.centroids, np.float64))
 
     shards, perm, parts = [], [], []
     for s in range(n_shards):

@@ -29,6 +29,15 @@ Two entry points:
     would retrace per subset size, while the scalar-operand mask gives one
     compile per padded bucket shape.
 
+  * ``cosine_probe_rowmask_blocks`` / ``cosine_probe_batch_rowmask_blocks``
+    — the probe with a per-row *validity vector* instead of a prefix
+    length. The mutable store (``repro.index.mutable``) tombstones deleted
+    rows in place and appends inserts to a hot-tail buffer whose live rows
+    form an arbitrary 0/1 pattern, not a prefix; the mask streams alongside
+    the store blocks (a plain VMEM operand, one int32 lane per row), dead
+    rows score +inf, and the compile is still one trace per padded bucket
+    shape because the mask is data, not structure.
+
 Grid: (N / block_n,) for the untiled paths; (N / block_n, B / block_b) for
 the B-tiled path. Outputs are per-block partials merged by ops.py (the
 cross-block merge is O(nblocks * B * k) — negligible).
@@ -359,6 +368,181 @@ def cosine_probe_batch_masked_blocks(
         ],
         interpret=interpret,
     )(n_valid, store, preds, thresholds)
+    return counts, topk
+
+
+def _probe_rowmask_kernel(store_ref, mask_ref, pred_ref, thr_ref, counts_ref,
+                          topk_ref, *, k: int):
+    """Scalar probe with a per-row live mask — same VPU broadcast-reduce as
+    ``_probe_kernel`` so a tombstone-masked scan's per-row distances are
+    bitwise the full scalar scan's (the reduce is over d, row-local; which
+    rows are masked cannot change any live row's value)."""
+    block = store_ref[...].astype(f32)            # (block_n, d)
+    pred = pred_ref[...].astype(f32)              # (1, d)
+    sims = jnp.sum(block * pred, axis=-1)
+    dists = 1.0 - sims                            # (block_n,)
+
+    # dead rows (tombstones + bucket padding) carry mask 0 -> +inf distance
+    dists = jnp.where(mask_ref[...] != 0, dists, jnp.inf)
+
+    thr = thr_ref[...]                            # (T,)
+    counts_ref[0, :] = jnp.sum(
+        (dists[None, :] <= thr[:, None]).astype(jnp.int32), axis=1
+    )
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    topk_ref[0, :] = -neg_top
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "interpret"))
+def cosine_probe_rowmask_blocks(
+    store: jax.Array,          # (N_pad, d_pad) — padded by ops.py
+    mask: jax.Array,           # (N_pad,) int32 — 0 = dead row / padding
+    pred: jax.Array,           # (1, d_pad)
+    thresholds: jax.Array,     # (T,)
+    *,
+    k: int,
+    block_n: int = 2048,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    n_pad, d = store.shape
+    t = thresholds.shape[0]
+    nblocks = n_pad // block_n
+    kernel = functools.partial(_probe_rowmask_kernel, k=k)
+    counts, topk = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((t,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, t), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, k), f32),
+        ],
+        interpret=interpret,
+    )(store, mask, pred, thresholds)
+    return counts, topk
+
+
+def _probe_batch_rowmask_kernel(store_ref, mask_ref, preds_ref, thr_ref,
+                                counts_ref, topk_ref, *, k: int):
+    """Batched twin of ``_probe_rowmask_kernel`` — MXU matmul like
+    ``_probe_batch_kernel``, per-row mask broadcast over predicates."""
+    block = store_ref[...].astype(f32)            # (block_n, d)
+    preds = preds_ref[...].astype(f32)            # (d, B)
+    sims = jnp.dot(block, preds, preferred_element_type=f32)  # (block_n, B)
+    dists = 1.0 - sims
+
+    dists = jnp.where(mask_ref[...][:, None] != 0, dists, jnp.inf)
+
+    db = dists.T                                  # (B, block_n)
+    thr = thr_ref[...]                            # (B, T)
+    counts_ref[0] = jnp.sum(
+        (db[:, None, :] <= thr[:, :, None]).astype(jnp.int32), axis=-1
+    )                                             # (B, T)
+    neg_top, _ = jax.lax.top_k(-db, k)
+    topk_ref[0] = -neg_top                        # (B, k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "interpret"))
+def cosine_probe_batch_rowmask_blocks(
+    store: jax.Array,          # (N_pad, d_pad) — padded by ops.py
+    mask: jax.Array,           # (N_pad,) int32 — 0 = dead row / padding
+    preds: jax.Array,          # (d_pad, B) — predicate panel, column-major
+    thresholds: jax.Array,     # (B, T) per-predicate threshold vectors
+    *,
+    k: int,
+    block_n: int = 2048,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched probe over an arbitrarily-masked row set.
+
+    Identical math to ``cosine_probe_batch_blocks`` but validity comes from
+    a per-row mask vector streamed with the store blocks: the mutable
+    store's hot tail and tombstoned segments are live/dead in arbitrary
+    patterns a prefix length cannot express. One trace per padded bucket
+    shape — the mask is a data operand.
+    """
+    n_pad, d = store.shape
+    b = preds.shape[1]
+    t = thresholds.shape[1]
+    nblocks = n_pad // block_n
+    kernel = functools.partial(_probe_batch_rowmask_kernel, k=k)
+    counts, topk = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((d, b), lambda i: (0, 0)),
+            pl.BlockSpec((b, t), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, t), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, b, k), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, b, t), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, b, k), f32),
+        ],
+        interpret=interpret,
+    )(store, mask, preds, thresholds)
+    return counts, topk
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "block_b", "interpret"))
+def cosine_probe_batch_rowmask_tiled_blocks(
+    store: jax.Array,          # (N_pad, d_pad) — padded by ops.py
+    mask: jax.Array,           # (N_pad,) int32 — 0 = dead row / padding
+    preds: jax.Array,          # (d_pad, B_pad) — B padded to block_b by ops.py
+    thresholds: jax.Array,     # (B_pad, T)
+    *,
+    k: int,
+    block_n: int = 2048,
+    block_b: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """B-tiled rowmask probe: grid (nblocks, B_pad/block_b).
+
+    Same composition as the other tiled paths — the rowmask kernel body
+    reads no ``program_id`` at all (validity is entirely in the mask
+    operand), so the predicate-tile offset lives in the BlockSpec index
+    maps and VMEM per step stays bounded by ``block_b``.
+    """
+    n_pad, d = store.shape
+    b_pad = preds.shape[1]
+    t = thresholds.shape[1]
+    nblocks = n_pad // block_n
+    nbt = b_pad // block_b
+    kernel = functools.partial(_probe_batch_rowmask_kernel, k=k)
+    counts, topk = pl.pallas_call(
+        kernel,
+        grid=(nblocks, nbt),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (i,)),
+            pl.BlockSpec((d, block_b), lambda i, j: (0, j)),
+            pl.BlockSpec((block_b, t), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_b, t), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_b, k), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, b_pad, t), jnp.int32),
+            jax.ShapeDtypeStruct((nblocks, b_pad, k), f32),
+        ],
+        interpret=interpret,
+    )(store, mask, preds, thresholds)
     return counts, topk
 
 

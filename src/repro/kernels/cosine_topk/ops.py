@@ -19,6 +19,12 @@ sliced off before the merge, so results are exact.
 (the valid count travels as an SMEM scalar, not a trace constant) — the
 entry point for the cluster-pruned index's boundary-subset scans, where the
 subset length changes every probe but the padded bucket shape does not.
+
+``cosine_probe_rowmask`` / ``cosine_probe_batch_rowmask`` score an
+*arbitrarily-masked* row set (per-row int32 validity vector, dead rows ->
++inf) — the entry points for the mutable store's hot-tail and tombstone
+scans, where live rows are not a prefix. The mask is padded with zeros to
+the same bucket as the store, so padding never scores.
 """
 
 from __future__ import annotations
@@ -32,9 +38,12 @@ from repro.kernels.cosine_topk.kernel import (
     cosine_probe_batch_blocks,
     cosine_probe_batch_masked_blocks,
     cosine_probe_batch_masked_tiled_blocks,
+    cosine_probe_batch_rowmask_blocks,
+    cosine_probe_batch_rowmask_tiled_blocks,
     cosine_probe_batch_tiled_blocks,
     cosine_probe_blocks,
     cosine_probe_masked_blocks,
+    cosine_probe_rowmask_blocks,
 )
 
 f32 = jnp.float32
@@ -217,6 +226,95 @@ def cosine_probe_batch_masked(
         pp = _pad_to(preds.astype(store.dtype), 128, 1).T   # (d_pad, B)
         counts_b, topk_b = cosine_probe_batch_masked_blocks(
             sp, nv, pp, thr, k=kk, block_n=block_n, interpret=interpret,
+        )
+    counts = counts_b.sum(axis=0)                           # (B, T)
+    flat = topk_b.transpose(1, 0, 2).reshape(b, -1)
+    merged = -jax.lax.top_k(-flat, k)[0]
+    return counts, merged
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def cosine_probe_rowmask(
+    store: jax.Array,        # (M, d) scan buffer
+    mask: jax.Array,         # (M,) — nonzero = live row; 0 = tombstone
+    pred: jax.Array,         # (d,)
+    thresholds: jax.Array,   # (T,)
+    *,
+    k: int = 128,
+    block_n: int = 2048,
+    interpret: bool = True,  # CPU container; False on real TPU
+) -> tuple[jax.Array, jax.Array]:
+    """Scalar probe over the live (mask != 0) rows of ``store``.
+
+    The mutable store's hot-tail / tombstone scan: live rows form an
+    arbitrary pattern, not a prefix. Uses the scalar kernel's VPU reduce so
+    a masked scan's per-row distances are bitwise the full scalar scan's.
+    Returns (counts (T,), top-k (k,) ascending; dead slots come back +inf).
+    """
+    m = store.shape[0]
+    k = min(k, m)
+    block_n = min(block_n, max(128, 1 << (m - 1).bit_length()))
+    sp = _pad_to(_pad_to(store, 128, 1), block_n, 0)
+    mp = _pad_to(mask.astype(jnp.int32), block_n, 0)   # padding rows dead
+    pp = _pad_to(pred[None, :].astype(store.dtype), 128, 1)
+    kk = min(max(k, 1), block_n)
+    counts_b, topk_b = cosine_probe_rowmask_blocks(
+        sp, mp, pp, thresholds.astype(f32), k=kk, block_n=block_n,
+        interpret=interpret,
+    )
+    counts = counts_b.sum(axis=0)
+    merged = -jax.lax.top_k(-topk_b.reshape(-1), k)[0]
+    return counts, merged
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "block_b",
+                                             "tiled", "interpret"))
+def cosine_probe_batch_rowmask(
+    store: jax.Array,        # (M, d) scan buffer
+    mask: jax.Array,         # (M,) — nonzero = live row; 0 = tombstone
+    preds: jax.Array,        # (B, d) predicate batch
+    thresholds: jax.Array,   # (B, T) per-predicate threshold vectors
+    *,
+    k: int = 128,
+    block_n: int = 2048,
+    block_b: int = 128,
+    tiled: bool | None = None,  # None = auto (tile when B > block_b)
+    interpret: bool = True,  # CPU container; False on real TPU
+) -> tuple[jax.Array, jax.Array]:
+    """Batched probe over the live (mask != 0) rows of ``store``.
+
+    Batched twin of ``cosine_probe_rowmask`` (MXU matmul, same reduction
+    order as ``cosine_probe_batch`` so masked per-row distances are bitwise
+    the full batched scan's). B-tiled dispatch mirrors
+    ``cosine_probe_batch``; the mask restreams with the store blocks, so
+    tiling never changes which rows are live.
+
+    Returns (counts (B, T) int32, k smallest distances (B, k) ascending).
+    """
+    m = store.shape[0]
+    b = preds.shape[0]
+    k = min(k, m)
+    block_n = min(block_n, max(128, 1 << (m - 1).bit_length()))
+    sp = _pad_to(_pad_to(store, 128, 1), block_n, 0)
+    mp = _pad_to(mask.astype(jnp.int32), block_n, 0)
+    kk = min(max(k, 1), block_n)
+    thr = thresholds.astype(f32)
+    if tiled is None:
+        tiled = b > block_b
+    if tiled:
+        bb = min(block_b, max(8, 1 << (b - 1).bit_length()))
+        preds_p = _pad_to(preds.astype(store.dtype), bb, 0)
+        pp = _pad_to(preds_p, 128, 1).T                     # (d_pad, B_pad)
+        counts_b, topk_b = cosine_probe_batch_rowmask_tiled_blocks(
+            sp, mp, pp, _pad_to(thr, bb, 0), k=kk, block_n=block_n,
+            block_b=bb, interpret=interpret,
+        )
+        counts_b = counts_b[:, :b]
+        topk_b = topk_b[:, :b]
+    else:
+        pp = _pad_to(preds.astype(store.dtype), 128, 1).T   # (d_pad, B)
+        counts_b, topk_b = cosine_probe_batch_rowmask_blocks(
+            sp, mp, pp, thr, k=kk, block_n=block_n, interpret=interpret,
         )
     counts = counts_b.sum(axis=0)                           # (B, T)
     flat = topk_b.transpose(1, 0, 2).reshape(b, -1)

@@ -44,3 +44,17 @@ def cosine_probe_batch_masked_ref(store: jax.Array, n_valid,
         axis=-1).astype(jnp.int32)
     neg_top, _ = jax.lax.top_k(-dists, k)
     return counts, -neg_top
+
+
+def cosine_probe_batch_rowmask_ref(store: jax.Array, mask: jax.Array,
+                                   preds: jax.Array, thresholds: jax.Array,
+                                   k: int) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the per-row-mask probe: rows with mask == 0 are +inf
+    (tombstones / hot-tail dead slots — live rows are not a prefix)."""
+    sims = jnp.einsum("nd,bd->bn", store.astype(f32), preds.astype(f32))
+    dists = 1.0 - sims                                      # (B, N)
+    dists = jnp.where(mask[None, :] != 0, dists, jnp.inf)
+    counts = (dists[:, None, :] <= thresholds[:, :, None]).sum(
+        axis=-1).astype(jnp.int32)
+    neg_top, _ = jax.lax.top_k(-dists, k)
+    return counts, -neg_top

@@ -124,13 +124,20 @@ class PredicateCache:
         self.misses = 0
         self.evictions = 0
 
-    def key(self, emb: np.ndarray, thresholds, k: int) -> tuple:
-        """Quantized lookup key for one predicate's probe."""
+    def key(self, emb: np.ndarray, thresholds, k: int,
+            version: int = 0) -> tuple:
+        """Quantized lookup key for one predicate's probe.
+
+        ``version`` is the histogram's mutation counter (0 for immutable
+        stores): a mutable store bumps it on every insert/delete batch and
+        index swap, so entries cached against an older store state can
+        never satisfy a lookup after a mutation — the stale entries just
+        age out of the LRU."""
         scale = float(1 << self.bits)
         q = np.round(np.asarray(emb, np.float64) * scale).astype(np.int32)
         t = np.round(np.atleast_1d(np.asarray(thresholds, np.float64))
                      * scale).astype(np.int32)
-        return (q.tobytes(), t.tobytes(), int(k))
+        return (q.tobytes(), t.tobytes(), int(k), int(version))
 
     def get(self, key: tuple):
         """(counts, topk) on hit (LRU-refreshed), None on miss."""
@@ -372,7 +379,8 @@ class PredicateCoalescer:
             raise exc
 
         for j in range(len(preds)):
-            key = self.cache.key(preds[j], [thrs[j]], 1)
+            key = self.cache.key(preds[j], [thrs[j]], 1,
+                                 version=getattr(self.hist, "version", 0))
             with self._cv:
                 # cache lookup under the lock: a flush fills the cache
                 # *before* retiring its _inflight entries (which needs this

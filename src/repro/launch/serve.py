@@ -67,12 +67,24 @@ retries, the breaker, flusher-death propagation, and degradation; the run
 ends with the full robustness counter block (shed / degraded / retries /
 breaker state / flusher deaths / queue high-watermark). With chaos off
 and the control plane unarmed, results are bitwise identical to before.
+``--ingest-rate R`` (PR 7) streams R rows/second into the store *while
+the concurrent workload runs*: the index becomes a
+``repro.index.MutableClusteredStore`` — inserts land in an unindexed
+hot tail every probe fully scans, deletes tombstone rows in place, and
+once the tail outgrows ``--rebuild-tail-frac`` of the live set a
+background thread rebuilds the cluster index (k-means warm start +
+shard-sticky repack) and swaps it in atomically under the serve loop.
+Counts and top-k stay exact at every interleaving; the predicate cache
+keys on the store version so mutations can never serve stale counts.
+The run ends with the mutation counters (inserts / deletes / rebuilds /
+tail occupancy). Needs ``--index-clusters`` and ``--concurrency``.
 All knobs: docs/serving.md.
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 
@@ -103,7 +115,8 @@ def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
                 rate: float = 0.6, spec_steps: int = 600, seed: int = 0,
                 impl: str = "xla", index_clusters: int = 0,
                 shards: int = 0, split_radius: float = 0.0,
-                balance_boundary: bool = False):
+                balance_boundary: bool = False, ingest: bool = False,
+                rebuild_tail_frac: float = 0.25):
     corpus = make_corpus(dataset, n_images=n_images, seed=seed)
     mesh = None
     if balance_boundary and (shards <= 0 or index_clusters <= 0):
@@ -121,7 +134,21 @@ def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
               f"{corpus.images.shape[0] // shards} rows each")
     index = None
     sr = split_radius if split_radius > 0 else None
-    if index_clusters > 0 and mesh is not None:
+    if ingest:
+        if index_clusters <= 0:
+            raise ValueError("--ingest-rate streams into the mutable "
+                             "cluster index — it needs --index-clusters")
+        from repro.index import MutableClusteredStore
+
+        index = MutableClusteredStore(
+            corpus.images, index_clusters, mesh=mesh, impl=impl,
+            seed=seed, split_radius=sr,
+            rebuild_tail_frac=rebuild_tail_frac)
+        print(f"index: mutable, {index_clusters} clusters over "
+              f"{index.n_live} rows"
+              + (f", {shards} shards" if mesh is not None else "")
+              + f", rebuild_tail_frac={rebuild_tail_frac}")
+    elif index_clusters > 0 and mesh is not None:
         from repro.index import build_sharded_clustered_store
 
         index = build_sharded_clustered_store(
@@ -195,7 +222,7 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
                      max_batch: int, cache_size: int, cache_bits: int,
                      passes: int, deadline_ms: float = 0.0,
                      max_queue: int = 0, degraded_ok: bool = False,
-                     chaos_spec: str = "") -> dict:
+                     chaos_spec: str = "", ingest_rate: float = 0.0) -> dict:
     """Cross-query serving: N planner threads share one coalescer + cache.
 
     The control plane rides along per request: each plan's probes carry the
@@ -222,7 +249,33 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
           + (f", deadline={deadline_ms}ms" if deadline_ms else "")
           + (f", max_queue={max_queue}" if max_queue else "")
           + (", degraded-ok" if degraded_ok else "")
-          + (f", chaos[{chaos_spec}]" if chaos_spec else ""))
+          + (f", chaos[{chaos_spec}]" if chaos_spec else "")
+          + (f", ingest={ingest_rate}/s" if ingest_rate else ""))
+
+    index = est.hist.index
+    stop_ingest = threading.Event()
+    ingest_thread = None
+    if ingest_rate > 0:
+        if index is None or not getattr(index, "is_mutable", False):
+            raise ValueError("--ingest-rate needs the mutable index "
+                             "(build the stack with ingest=True)")
+
+        def ingest_loop():
+            rng = np.random.default_rng(seed + 0x1735)
+            period = 1.0 / ingest_rate
+            mine: list[int] = []
+            while not stop_ingest.is_set():
+                x = rng.normal(size=(1, corpus.dim)).astype(np.float32)
+                x /= np.linalg.norm(x)
+                mine.extend(int(i) for i in index.insert(x))
+                # ~30% churn: retire an earlier streamed row now and then
+                if len(mine) >= 8 and rng.random() < 0.3:
+                    index.delete([mine.pop(int(rng.integers(len(mine))))])
+                stop_ingest.wait(period)
+
+        ingest_thread = threading.Thread(target=ingest_loop,
+                                         name="serve-ingest", daemon=True)
+        ingest_thread.start()
 
     failures: list[tuple[int, str]] = []
     with PredicateCoalescer(
@@ -247,6 +300,10 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
         with ThreadPoolExecutor(max_workers=concurrency) as pool:
             results = list(pool.map(run_one, workload))
         wall_s = time.perf_counter() - t0
+        if ingest_thread is not None:
+            stop_ingest.set()
+            ingest_thread.join(timeout=10.0)
+            index.drain_rebuild(timeout=120.0)
         stats = coal.stats()
 
     degraded_plans = sum(1 for _, _, dg in results if dg)
@@ -358,6 +415,16 @@ def main(argv=None) -> None:
                          "certified selectivity bounds (cluster-index "
                          "Cauchy-Schwarz interval; [0,1] without an index) "
                          "instead of raising; plans are marked degraded")
+    ap.add_argument("--ingest-rate", type=float, default=0.0,
+                    help=">0: stream this many rows/second into the store "
+                         "while the concurrent workload runs — switches "
+                         "--index-clusters to the mutable store (hot-tail "
+                         "inserts, tombstone deletes, background rebuilds); "
+                         "needs --concurrency > 1")
+    ap.add_argument("--rebuild-tail-frac", type=float, default=0.25,
+                    help="mutable store: trigger a background index "
+                         "rebuild once the unindexed hot tail exceeds "
+                         "this fraction of live rows")
     ap.add_argument("--chaos", default="",
                     help="deterministic fault injection on the probe path, "
                          "e.g. 'seed=1,fail=0.3,delay=0.2,delay-ms=5,"
@@ -365,6 +432,9 @@ def main(argv=None) -> None:
                          "flusher kill at the given launch ordinal")
     args = ap.parse_args(argv)
 
+    if args.ingest_rate > 0 and args.concurrency <= 1:
+        ap.error("--ingest-rate streams during the concurrent serve "
+                 "path — it needs --concurrency > 1")
     print(f"building semantic-histogram stack for '{args.dataset}' "
           f"(probe impl={args.impl})...")
     corpus, estimators = build_stack(args.dataset, seed=args.seed,
@@ -372,7 +442,9 @@ def main(argv=None) -> None:
                                      index_clusters=args.index_clusters,
                                      shards=args.shards,
                                      split_radius=args.split_radius,
-                                     balance_boundary=args.balance_boundary)
+                                     balance_boundary=args.balance_boundary,
+                                     ingest=args.ingest_rate > 0,
+                                     rebuild_tail_frac=args.rebuild_tail_frac)
     queries = generate_queries(corpus, n_queries=args.queries,
                                n_filters=args.filters, seed=args.seed)
     if args.concurrency > 1:
@@ -383,12 +455,23 @@ def main(argv=None) -> None:
             cache_size=args.cache_size, cache_bits=args.cache_bits,
             passes=args.passes, deadline_ms=args.deadline_ms,
             max_queue=args.max_queue, degraded_ok=args.degraded_ok,
-            chaos_spec=args.chaos)
+            chaos_spec=args.chaos, ingest_rate=args.ingest_rate)
     else:
         serve_sequential(corpus, estimators, queries, seed=args.seed)
     index = estimators["specificity"].hist.index
     if index is not None:
         s = index.stats()
+        if getattr(index, "is_mutable", False):
+            last = (f"; last rebuild {s['last_rebuild_s']:.2f}s ("
+                    + ("incremental" if s["last_rebuild_incremental"]
+                       else "full") + ")") if s["rebuilds"] else ""
+            print(f"\nmutable store: {s['inserts']} inserts, "
+                  f"{s['deletes']} deletes, {s['rebuilds']} background "
+                  f"rebuilds (generation {s['generation']}, version "
+                  f"{s['version']}); live {s['n_live']} = base "
+                  f"{s['base_live']} (+{s['base_dead']} tombstoned) + "
+                  f"hot tail {s['tail_live']}{last}")
+            s = s["base_stats"]
         print(f"\nindex: {s['probes']} pruned probes, "
               f"{s['rows_scanned']}/{s['rows_full_equiv']} rows scanned "
               f"(scan_fraction={s['scan_fraction']:.0%}) across "

@@ -1,0 +1,109 @@
+"""Stateful (rule-based) testing for the vendored hypothesis shim.
+
+``RuleBasedStateMachine`` + ``rule`` / ``initialize`` / ``invariant`` /
+``precondition`` + ``run_state_machine_as_test``: episodes of randomly
+interleaved rule applications with invariants checked after every step.
+Deterministic per machine class (seeded from the class name); a failing
+episode reports the full step trace instead of shrinking it.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import UnsatisfiedAssumption, _seed_from_name, settings as _settings
+
+__all__ = ["RuleBasedStateMachine", "rule", "initialize", "invariant",
+           "precondition", "run_state_machine_as_test"]
+
+
+def rule(**strategies):
+    def deco(fn):
+        fn._shim_rule = strategies
+        return fn
+    return deco
+
+
+def initialize(**strategies):
+    def deco(fn):
+        fn._shim_initialize = strategies
+        return fn
+    return deco
+
+
+def invariant():
+    def deco(fn):
+        fn._shim_invariant = True
+        return fn
+    return deco
+
+
+def precondition(predicate):
+    def deco(fn):
+        fn._shim_precondition = predicate
+        return fn
+    return deco
+
+
+class RuleBasedStateMachine:
+    def teardown(self):
+        pass
+
+    @classmethod
+    def _shim_members(cls, attr):
+        out = []
+        for name in sorted(dir(cls)):
+            fn = getattr(cls, name)
+            if callable(fn) and hasattr(fn, attr):
+                out.append((name, fn))
+        return out
+
+
+def run_state_machine_as_test(cls, settings=None):
+    cfg = settings or getattr(cls, "_shim_settings", None) or _settings(
+        max_examples=10)
+    rules = cls._shim_members("_shim_rule")
+    inits = cls._shim_members("_shim_initialize")
+    invariants = cls._shim_members("_shim_invariant")
+    if not rules:
+        raise ValueError(f"{cls.__name__} defines no @rule methods")
+    rng = np.random.default_rng(_seed_from_name(cls.__qualname__))
+
+    for episode in range(cfg.max_examples):
+        machine = cls()
+        trace = []
+        try:
+            for name, fn in inits:
+                kwargs = {k: s.example(rng)
+                          for k, s in fn._shim_initialize.items()}
+                trace.append((name, kwargs))
+                fn(machine, **kwargs)
+            for _ in range(cfg.stateful_step_count):
+                enabled = [
+                    (name, fn) for name, fn in rules
+                    if getattr(fn, "_shim_precondition",
+                               lambda _m: True)(machine)]
+                if not enabled:
+                    break
+                name, fn = enabled[int(rng.integers(len(enabled)))]
+                kwargs = {k: s.example(rng)
+                          for k, s in fn._shim_rule.items()}
+                trace.append((name, kwargs))
+                try:
+                    fn(machine, **kwargs)
+                except UnsatisfiedAssumption:
+                    trace.pop()
+                    continue
+                for _iname, ifn in invariants:
+                    ifn(machine)
+        except Exception as e:
+            lines = []
+            for i, (n, kw) in enumerate(trace):
+                args = ", ".join(f"{k}={v!r}" for k, v in kw.items())
+                lines.append(f"  step {i}: {n}({args})")
+            steps = "\n".join(lines)
+            raise AssertionError(
+                f"{cls.__name__} failed in episode {episode}; trace:\n"
+                f"{steps}") from e
+        finally:
+            machine.teardown()

@@ -1,0 +1,146 @@
+"""Strategy objects for the vendored hypothesis shim.
+
+Every strategy exposes ``example(rng)`` drawing one value from a
+``numpy.random.Generator``; combinators compose by delegation. Uniform
+draws only — no bias toward boundary values and no shrinking, which is
+the price of a dependency-free shim.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["floats", "integers", "lists", "sampled_from", "booleans",
+           "tuples", "one_of", "just", "none"]
+
+
+class SearchStrategy:
+    def example(self, rng: np.random.Generator):  # pragma: no cover
+        raise NotImplementedError
+
+    def map(self, f):
+        return _Mapped(self, f)
+
+    def filter(self, pred):
+        return _Filtered(self, pred)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base, f):
+        self.base, self.f = base, f
+
+    def example(self, rng):
+        return self.f(self.base.example(rng))
+
+
+class _Filtered(SearchStrategy):
+    def __init__(self, base, pred):
+        self.base, self.pred = base, pred
+
+    def example(self, rng):
+        for _ in range(1000):
+            v = self.base.example(rng)
+            if self.pred(v):
+                return v
+        raise ValueError("filter predicate rejected 1000 draws")
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None, **_ignored):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+
+    def example(self, rng):
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2**31) if min_value is None else int(min_value)
+        self.hi = 2**31 if max_value is None else int(max_value)
+
+    def example(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements, min_size=0, max_size=None, **_ignored):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = self.min_size + 10 if max_size is None \
+            else int(max_size)
+
+    def example(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.example(rng) for _ in range(n)]
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from needs a non-empty sequence")
+
+    def example(self, rng):
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
+class _Tuples(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.strategies)
+
+
+class _OneOf(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng):
+        return self.strategies[int(rng.integers(
+            len(self.strategies)))].example(rng)
+
+
+class _Just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+def floats(min_value=None, max_value=None, **kwargs):
+    return _Floats(min_value, max_value, **kwargs)
+
+
+def integers(min_value=None, max_value=None):
+    return _Integers(min_value, max_value)
+
+
+def lists(elements, *, min_size=0, max_size=None, **kwargs):
+    return _Lists(elements, min_size, max_size, **kwargs)
+
+
+def sampled_from(elements):
+    return _SampledFrom(elements)
+
+
+def booleans():
+    return _SampledFrom([False, True])
+
+
+def tuples(*strategies):
+    return _Tuples(*strategies)
+
+
+def one_of(*strategies):
+    return _OneOf(*strategies)
+
+
+def just(value):
+    return _Just(value)
+
+
+def none():
+    return _Just(None)

@@ -3,12 +3,21 @@
 # scripts through the run_multidevice fixture's subprocess instead, and
 # dryrun.py sets it for itself).
 import json
+import pathlib
 import subprocess
 import sys
 import textwrap
 
 import numpy as np
 import pytest
+
+# The property tests need hypothesis; the CI image cannot pip-install, so
+# fall back to the vendored shim (tests/_vendor/hypothesis) when the real
+# package is absent. Real hypothesis wins when installed.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, str(pathlib.Path(__file__).parent / "_vendor"))
 
 # Prepended to every run_multidevice script: forces the device count before
 # jax initializes and imports the names every multi-device script uses.

@@ -1,0 +1,546 @@
+"""Mutable store (PR 7): streaming ingest, tombstone deletes, background
+index rebuilds — and the mutation-parity harness that pins the exactness
+contract at every interleaving.
+
+The load-bearing invariant: after ANY sequence of insert / delete /
+probe / rebuild operations, every probe answer (counts AND top-k) is
+bitwise equal to a fresh full scan over exactly the live rows — the
+hot tail, tombstones, pruning bounds, generation swaps and mid-rebuild
+reconciliation are pure execution strategy, never semantics.
+
+Layers:
+  * a hypothesis rule-based state machine interleaving mutations with
+    parity-checked probes (fast tier-1 run + an ``@slow`` deep run);
+  * directed regressions for each moving part (tail scan, tombstones,
+    radius-inflation trigger, rebuild swap, mid-rebuild mutations,
+    never-blocking background rebuilds);
+  * the version-keyed predicate cache: a cached count/k-th can never be
+    served across a mutation that may have changed it;
+  * a 4-shard subprocess variant (``run_multidevice``) and an ``@chaos``
+    storm with a live ingest thread (coalescer counters must reconcile).
+"""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis import settings, strategies as st
+from hypothesis.stateful import (
+    RuleBasedStateMachine,
+    invariant,
+    precondition,
+    rule,
+    run_state_machine_as_test,
+)
+
+from repro.core.histogram import SemanticHistogram
+from repro.index import MutableClusteredStore
+from repro.launch.coalescer import (
+    CoalescerConfig,
+    PredicateCache,
+    PredicateCoalescer,
+)
+
+
+def _unit(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def _fresh_scan_hist(live_rows: dict, impl: str) -> SemanticHistogram:
+    """The oracle: a plain, index-free histogram over exactly the live
+    rows — every probe against it is a full scan."""
+    xs = np.stack([live_rows[i] for i in sorted(live_rows)])
+    return SemanticHistogram(jnp.asarray(xs), impl=impl)
+
+
+def _assert_probe_parity(hist, live_rows, preds, thr, k, *, impl="xla",
+                         tag=""):
+    """Counts and top-k of the mutable path vs a fresh full scan: bitwise."""
+    oracle = _fresh_scan_hist(live_rows, impl)
+    k = max(1, min(k, len(live_rows)))
+    c, t = hist.probe_batch(preds, thr, k=k)
+    co, to = oracle.probe_batch(preds, thr, k=k)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(co),
+                                  err_msg=f"{tag}: counts diverged")
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(to),
+                                  err_msg=f"{tag}: top-k diverged")
+    # scalar-kernel path (VPU reduction shape) checked separately: it must
+    # match the *scalar* full scan, which may differ from the batch one
+    p0 = np.asarray(preds[0])
+    t0 = float(np.asarray(thr).reshape(len(preds), -1)[0, 0])
+    assert hist.count_within(p0, t0) == oracle.count_within(p0, t0), tag
+    kk = min(k, len(live_rows))
+    assert hist.kth_smallest_distance(p0, kk) == \
+        oracle.kth_smallest_distance(p0, kk), tag
+
+
+# ------------------------------------------------- stateful parity machine
+
+
+class MutationParityMachine(RuleBasedStateMachine):
+    """Random insert / delete / probe / rebuild interleavings; every probe
+    is parity-checked against a fresh full scan of the live rows."""
+
+    N0, D, K = 160, 24, 5
+
+    def __init__(self):
+        super().__init__()
+        rng = np.random.default_rng(1234)
+        x0 = _unit(rng, self.N0, self.D)
+        self.ms = MutableClusteredStore(x0, self.K, impl="xla", iters=3,
+                                        auto_rebuild=False)
+        self.hist = SemanticHistogram(jnp.asarray(x0), index=self.ms)
+        self.live = {i: x0[i] for i in range(self.N0)}
+
+    def _remember(self, ids):
+        for i in ids:
+            p = self.ms._loc[int(i)]
+            assert p[0] == "t", "fresh inserts land in the hot tail"
+            self.live[int(i)] = np.asarray(self.ms._tail_emb[p[1]])
+
+    @rule(n=st.integers(1, 12), seed=st.integers(0, 2**16))
+    def insert(self, n, seed):
+        rng = np.random.default_rng(seed)
+        self._remember(self.ms.insert(_unit(rng, n, self.D)))
+
+    @precondition(lambda m: m.ms.n_live > 8)
+    @rule(n=st.integers(1, 6), seed=st.integers(0, 2**16))
+    def delete(self, n, seed):
+        rng = np.random.default_rng(seed)
+        ids = sorted(self.live)
+        picks = rng.choice(len(ids), size=min(n, len(ids) - 8),
+                           replace=False)
+        victims = [ids[i] for i in picks]
+        if not victims:
+            return
+        self.ms.delete(victims)
+        for v in victims:
+            del self.live[v]
+
+    @rule(seed=st.integers(0, 2**16), k=st.integers(1, 9),
+          wide=st.booleans())
+    def probe(self, seed, k, wide):
+        rng = np.random.default_rng(seed)
+        preds = _unit(rng, 2, self.D)
+        hi = 1.9 if wide else 1.1
+        thr = rng.uniform(0.5, hi, size=(2, 2)).astype(np.float32)
+        _assert_probe_parity(self.hist, self.live, preds, thr, k,
+                             tag=f"probe seed={seed}")
+
+    @precondition(lambda m: m.ms.n_live >= m.K)
+    @rule()
+    def rebuild(self):
+        gen = self.ms.generation
+        assert self.ms.rebuild(wait=True)
+        assert self.ms.generation == gen + 1
+
+    @invariant()
+    def live_count_matches(self):
+        assert self.ms.n_live == len(self.live) == self.hist.n
+
+
+def test_mutation_parity_stateful_fast():
+    run_state_machine_as_test(
+        MutationParityMachine,
+        settings=settings(max_examples=3, stateful_step_count=12))
+
+
+@pytest.mark.slow
+def test_mutation_parity_stateful_deep():
+    run_state_machine_as_test(
+        MutationParityMachine,
+        settings=settings(max_examples=8, stateful_step_count=30))
+
+
+# ------------------------------------------------------- directed parity
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_insert_delete_probe_parity(impl, rng):
+    """Hot-tail scans and tombstone-masked base scans are bitwise equal to
+    the fresh full scan, on both kernel backends."""
+    x0 = _unit(rng, 300, 32)
+    ms = MutableClusteredStore(x0, 8, impl=impl, iters=3,
+                               auto_rebuild=False)
+    hist = SemanticHistogram(jnp.asarray(x0), impl=impl, index=ms)
+    live = {i: x0[i] for i in range(300)}
+    ids = ms.insert(_unit(rng, 45, 32))
+    for i in ids:
+        live[int(i)] = np.asarray(ms._tail_emb[ms._loc[int(i)][1]])
+    victims = [0, 7, 150, 299, int(ids[0]), int(ids[-1])]
+    ms.delete(victims)
+    for v in victims:
+        del live[v]
+    preds = _unit(rng, 3, 32)
+    thr = np.asarray([[0.7, 1.0], [0.8, 1.2], [0.05, 1.9]], np.float32)
+    _assert_probe_parity(hist, live, preds, thr, 11, impl=impl)
+
+
+@pytest.mark.parametrize("mix", ["insert_heavy", "delete_heavy",
+                                 "balanced"])
+@pytest.mark.parametrize("k_clusters", [4, 12])
+def test_mutation_mix_parity_sweep(mix, k_clusters, rng):
+    """K x mutation-mix sweep with parity probes at selectivities from
+    ~0.1% to ~90% (thresholds straddle all-out, boundary, all-in)."""
+    x0 = _unit(rng, 260, 24)
+    ms = MutableClusteredStore(x0, k_clusters, impl="xla", iters=3,
+                               auto_rebuild=False)
+    hist = SemanticHistogram(jnp.asarray(x0), index=ms)
+    live = {i: x0[i] for i in range(260)}
+    n_ins, n_del = {"insert_heavy": (80, 10), "delete_heavy": (15, 60),
+                    "balanced": (40, 40)}[mix]
+    ids = ms.insert(_unit(rng, n_ins, 24))
+    for i in ids:
+        live[int(i)] = np.asarray(ms._tail_emb[ms._loc[int(i)][1]])
+    pool = sorted(live)
+    victims = [pool[i] for i in
+               rng.choice(len(pool), size=n_del, replace=False)]
+    ms.delete(victims)
+    for v in victims:
+        del live[v]
+    # thresholds hitting target selectivities exactly, via the oracle
+    oracle = _fresh_scan_hist(live, "xla")
+    pred = _unit(rng, 1, 24)[0]
+    d = np.sort(oracle.distances(pred))
+    thr = np.asarray([[d[max(0, int(f * len(d)) - 1)] + 1e-6
+                       for f in (0.001, 0.05, 0.5, 0.9)]], np.float32)
+    _assert_probe_parity(hist, live, pred[None], thr, 7,
+                         tag=f"{mix}/k={k_clusters}")
+    assert ms.rebuild(wait=True)
+    _assert_probe_parity(hist, live, pred[None], thr, 7,
+                         tag=f"{mix}/k={k_clusters}/rebuilt")
+
+
+def test_rebuild_reconciles_mid_build_mutations(rng):
+    """Inserts and deletes that land while the background build is running
+    are reconciled at swap: deletes of snapshotted rows become tombstones
+    in the new base, fresh inserts stay in the new tail."""
+    x0 = _unit(rng, 220, 24)
+    ms = MutableClusteredStore(x0, 6, impl="xla", iters=3,
+                               auto_rebuild=False)
+    hist = SemanticHistogram(jnp.asarray(x0), index=ms)
+    live = {i: x0[i] for i in range(220)}
+    mid = {}
+
+    def mutate_mid_build():
+        fresh = _unit(np.random.default_rng(99), 9, 24)
+        ids = ms.insert(fresh)
+        for j, i in enumerate(ids):
+            mid[int(i)] = fresh[j]
+        ms.delete([3, 11, int(ids[0])])
+        mid["dels"] = [3, 11, int(ids[0])]
+
+    ms._pre_swap_hook = mutate_mid_build
+    try:
+        assert ms.rebuild(wait=True)
+    finally:
+        ms._pre_swap_hook = None
+    for i, v in mid.items():
+        if i != "dels":
+            live[i] = v
+    for i in mid["dels"]:
+        live.pop(i, None)
+    assert ms.n_live == len(live)
+    st_ = ms.stats()
+    assert st_["base_dead"] >= 2, "mid-build deletes must tombstone"
+    preds = _unit(rng, 2, 24)
+    thr = np.asarray([[0.8, 1.3]] * 2, np.float32)
+    _assert_probe_parity(hist, live, preds, thr, 6)
+
+
+def test_background_rebuild_never_blocks_serving(rng):
+    """While the rebuild thread is stalled pre-swap, probes and mutations
+    on the serving thread complete promptly; after release the new
+    generation serves the same (parity-checked) answers."""
+    x0 = _unit(rng, 240, 24)
+    ms = MutableClusteredStore(x0, 6, impl="xla", iters=3,
+                               auto_rebuild=False)
+    hist = SemanticHistogram(jnp.asarray(x0), index=ms)
+    live = {i: x0[i] for i in range(240)}
+    gate = threading.Event()
+    entered = threading.Event()
+
+    def stall():
+        entered.set()
+        assert gate.wait(timeout=30.0)
+
+    ms._pre_swap_hook = stall
+    try:
+        assert ms.rebuild(wait=False)
+        assert entered.wait(timeout=30.0)
+        # serving-side work while the swap is gated
+        t0 = time.monotonic()
+        ids = ms.insert(_unit(rng, 5, 24))
+        for i in ids:
+            live[int(i)] = np.asarray(ms._tail_emb[ms._loc[int(i)][1]])
+        ms.delete([1, 2])
+        del live[1], live[2]
+        preds = _unit(rng, 2, 24)
+        thr = np.asarray([[0.9, 1.2]] * 2, np.float32)
+        _assert_probe_parity(hist, live, preds, thr, 5, tag="gated")
+        assert time.monotonic() - t0 < 20.0, \
+            "serving stalled behind the rebuild"
+        assert ms.generation == 0, "swap must not land while gated"
+    finally:
+        gate.set()
+        ms._pre_swap_hook = None
+    ms.drain_rebuild(timeout=60.0)
+    assert ms.generation == 1
+    _assert_probe_parity(hist, live, preds, thr, 5, tag="post-swap")
+
+
+def test_rebuild_triggers(rng):
+    """Tail-fraction and dead-fraction triggers fire exactly when due."""
+    x0 = _unit(rng, 200, 16)
+    ms = MutableClusteredStore(x0, 4, impl="xla", iters=2,
+                               rebuild_tail_frac=0.2,
+                               rebuild_dead_frac=0.3, auto_rebuild=True)
+    assert not ms._due_locked()
+    ms.insert(_unit(rng, 60, 16))     # tail 60/260 > 0.2 -> due
+    ms.drain_rebuild(timeout=60.0)
+    assert ms.rebuilds >= 1 and ms.stats()["tail_rows"] == 0
+    ms.auto_rebuild = False
+    ms.delete(list(range(80)))        # dead 80/260 > 0.3 -> due
+    assert ms._due_locked()
+
+
+def test_radius_inflation_tracked_on_delete(rng):
+    """Deleting a cluster's far rows shrinks its live extent; the tracked
+    inflation (built radius / live tight radius) grows and can trigger."""
+    rng0 = np.random.default_rng(5)
+    # one tight cluster + one wide cluster whose far half we delete
+    a = _unit(rng0, 100, 16) * 1.0
+    c = _unit(rng0, 1, 16)[0]
+    tight = (c[None] + 0.01 * rng0.standard_normal((100, 16))
+             ).astype(np.float32)
+    tight /= np.linalg.norm(tight, axis=1, keepdims=True)
+    x0 = np.concatenate([a, tight])
+    ms = MutableClusteredStore(x0, 2, impl="xla", iters=4,
+                               auto_rebuild=False,
+                               rebuild_inflation=3.0)
+    infl0 = ms.stats()["max_inflation"]
+    # kill the rows farthest from their centroid, widest cluster first
+    order = np.argsort(-ms._cdist[:ms._base_live_n])
+    kill = [int(ms._base_ids[p]) for p in order[:120]]
+    ms.delete(kill)
+    assert ms.stats()["max_inflation"] > max(infl0, 1.5)
+
+
+def test_delete_validates_before_applying(rng):
+    x0 = _unit(rng, 64, 8)
+    ms = MutableClusteredStore(x0, 2, impl="xla", iters=2,
+                               auto_rebuild=False)
+    with pytest.raises(KeyError):
+        ms.delete([0, 1, 10**9])          # unknown id: nothing applied
+    assert ms.n_live == 64
+    ms.delete([3])
+    with pytest.raises(KeyError):
+        ms.delete([3])                    # double delete
+
+
+def test_count_bounds_contain_truth_under_mutation(rng):
+    x0 = _unit(rng, 300, 24)
+    ms = MutableClusteredStore(x0, 8, impl="xla", iters=3,
+                               auto_rebuild=False)
+    hist = SemanticHistogram(jnp.asarray(x0), index=ms)
+    ms.insert(_unit(rng, 70, 24))
+    ms.delete(list(range(0, 40)))
+    preds = _unit(rng, 4, 24)
+    thr = rng.uniform(0.6, 1.3, size=4).astype(np.float32)
+    lo, hi = hist.selectivity_bounds(preds, thr)
+    sel = hist.selectivity_batch(preds, thr)
+    assert (lo <= sel + 1e-12).all() and (sel <= hi + 1e-12).all()
+
+
+# --------------------------------------------- version-keyed cache parity
+
+
+def test_cache_never_serves_stale_count_after_insert(rng):
+    """Regression: an insert that flips a cached predicate's count must
+    version-miss the cache and return the new exact count."""
+    x0 = _unit(rng, 200, 16)
+    ms = MutableClusteredStore(x0, 4, impl="xla", iters=2,
+                               auto_rebuild=False)
+    cache = PredicateCache(64)
+    hist = SemanticHistogram(jnp.asarray(x0), index=ms, cache=cache)
+    pred = _unit(rng, 1, 16)
+    thr = np.asarray([0.5], np.float32)
+    c0, _ = hist.probe_batch(pred, thr, k=1)
+    c0b, _ = hist.probe_batch(pred, thr, k=1)    # hit: same version
+    assert cache.stats()["hits"] >= 1
+    assert int(c0b[0, 0]) == int(c0[0, 0])
+    ms.insert(pred.copy())                       # distance 0 < 0.5: +1
+    c1, _ = hist.probe_batch(pred, thr, k=1)
+    assert int(c1[0, 0]) == int(c0[0, 0]) + 1, \
+        "stale cached count served across a mutation"
+    ms.delete([int(ms._next_id - 1)])
+    c2, _ = hist.probe_batch(pred, thr, k=1)
+    assert int(c2[0, 0]) == int(c0[0, 0])
+
+
+def test_cache_never_serves_stale_kth_after_insert(rng):
+    """Same regression for the k-th-smallest calibration path
+    (``kth_smallest_batch`` rides the cached probe_batch)."""
+    x0 = _unit(rng, 200, 16)
+    ms = MutableClusteredStore(x0, 4, impl="xla", iters=2,
+                               auto_rebuild=False)
+    cache = PredicateCache(64)
+    hist = SemanticHistogram(jnp.asarray(x0), index=ms, cache=cache)
+    pred = _unit(rng, 1, 16)
+    k0 = hist.kth_smallest_batch(pred, 1)[0]
+    assert hist.kth_smallest_batch(pred, 1)[0] == k0
+    assert cache.stats()["hits"] >= 1
+    ms.insert(pred.copy())                       # new nearest: distance ~0
+    k1 = hist.kth_smallest_batch(pred, 1)[0]
+    assert k1 < k0 and k1 == pytest.approx(0.0, abs=1e-6), \
+        "stale cached k-th distance served across a mutation"
+
+
+def test_coalescer_cache_keys_are_version_scoped(rng):
+    """The coalescer's submit-time cache lookups use the same version-keyed
+    scheme: a post-mutation request must not resolve from a pre-mutation
+    entry (and the counters must reconcile around it)."""
+    x0 = _unit(rng, 150, 16)
+    ms = MutableClusteredStore(x0, 4, impl="xla", iters=2,
+                               auto_rebuild=False)
+    cache = PredicateCache(64)
+    hist = SemanticHistogram(jnp.asarray(x0), index=ms, cache=cache)
+    pred = _unit(rng, 1, 16)
+    thr = np.asarray([0.5], np.float32)
+    with PredicateCoalescer(hist, CoalescerConfig(max_batch=4,
+                                                  window_ms=5.0),
+                            cache=cache) as coal:
+        s0 = coal.selectivity(pred[0], 0.5)
+        s0b = coal.selectivity(pred[0], 0.5)     # cache hit
+        assert s0b == s0
+        ms.insert(pred.copy())
+        s1 = coal.selectivity(pred[0], 0.5)
+        st_ = coal.stats()
+    n1 = 151
+    assert s1 == pytest.approx((s0 * 150 + 1) / n1, abs=1e-12)
+    assert st_["cache_hits"] == 1
+    resolved = (st_["probe_scored"] + st_["cache_hits"]
+                + st_["coalesced_dups"] + st_["shed"] + st_["degraded"]
+                + st_["errors"])
+    assert st_["requests"] == resolved, st_
+
+
+# ------------------------------------------------------ sharded / chaos
+
+
+@pytest.mark.slow
+def test_sharded_mutable_parity_subprocess(run_multidevice):
+    """4-shard mesh: the mutable store's probes stay bitwise equal to an
+    unsharded fresh full scan across insert / delete / rebuild."""
+    out = run_multidevice("""
+        from repro.core.histogram import SemanticHistogram
+        from repro.index import MutableClusteredStore
+
+        mesh = jax.make_mesh((4,), ("data",))
+        rng = np.random.default_rng(3)
+        def unit(m):
+            x = rng.standard_normal((m, 32)).astype(np.float32)
+            return x / np.linalg.norm(x, axis=1, keepdims=True)
+        x0 = unit(800)
+        ms = MutableClusteredStore(x0, 12, impl="xla", mesh=mesh,
+                                   iters=3, auto_rebuild=False)
+        hist = SemanticHistogram(jnp.asarray(x0), index=ms, mesh=mesh)
+        live = {i: x0[i] for i in range(800)}
+        checks = []
+        def check():
+            xs = np.stack([live[i] for i in sorted(live)])
+            oracle = SemanticHistogram(jnp.asarray(xs))
+            preds = unit(3)
+            thr = rng.uniform(0.6, 1.3, size=(3, 2)).astype(np.float32)
+            c, t = hist.probe_batch(preds, thr, k=9)
+            co, to = oracle.probe_batch(preds, thr, k=9)
+            checks.append(bool(np.array_equal(np.asarray(c), np.asarray(co))
+                          and np.array_equal(np.asarray(t), np.asarray(to))))
+        check()
+        ids = ms.insert(unit(66))
+        for i in ids:
+            live[int(i)] = np.asarray(ms._tail_emb[ms._loc[int(i)][1]])
+        check()
+        for v in (1, 5, 400, int(ids[2])):
+            ms.delete([v]); del live[v]
+        check()
+        assert ms.rebuild(wait=True)
+        check()
+        ids2 = ms.insert(unit(10))
+        for i in ids2:
+            live[int(i)] = np.asarray(ms._tail_emb[ms._loc[int(i)][1]])
+        check()
+        print(json.dumps({"parity": checks, "gen": ms.generation,
+                          "tail_after_rebuild": ms.stats()["tail_rows"]}))
+    """, devices=4)
+    assert all(out["parity"]), out
+    assert out["gen"] == 1
+
+
+@pytest.mark.chaos
+def test_chaos_storm_with_live_ingest_reconciles(rng):
+    """The PR-6 chaos storm extended with an ingest thread mutating the
+    store mid-flight: every request still resolves into exactly one
+    reconciliation bucket and nothing hangs."""
+    from repro.launch.chaos import ChaosConfig, ChaosInjector
+    from repro.runtime.fault_tolerance import RetryPolicy
+
+    x0 = _unit(rng, 400, 24)
+    ms = MutableClusteredStore(x0, 8, impl="xla", iters=3,
+                               rebuild_tail_frac=0.05, auto_rebuild=True)
+    hist = SemanticHistogram(jnp.asarray(x0), index=ms,
+                             cache=PredicateCache(64))
+    chaos = ChaosInjector(ChaosConfig(seed=7, fail_rate=0.3))
+    stop = threading.Event()
+
+    def ingest():
+        r = np.random.default_rng(11)
+        mine = []
+        while not stop.is_set():
+            mine.extend(int(i) for i in ms.insert(_unit(r, 2, 24)))
+            if len(mine) > 6 and r.random() < 0.4:
+                ms.delete([mine.pop(int(r.integers(len(mine))))])
+            time.sleep(0.002)
+
+    ing = threading.Thread(target=ingest, daemon=True)
+    n_threads, per = 6, 3
+    outs = {}
+    thr = np.full(per, 0.8, np.float32)
+    with PredicateCoalescer(
+            hist, CoalescerConfig(max_batch=8, window_ms=15,
+                                  degraded_ok=True),
+            chaos=chaos,
+            retry=RetryPolicy(max_retries=1, base_delay_s=0.001)) as coal:
+        ing.start()
+        try:
+            def worker(i):
+                outs[i] = coal.probe_outcomes(
+                    x0[per * i:per * (i + 1)], thr)
+
+            workers = [threading.Thread(target=worker, args=(i,))
+                       for i in range(n_threads)]
+            for t in workers:
+                t.start()
+            for t in workers:
+                t.join(timeout=120)
+            st_ = coal.stats()
+        finally:
+            stop.set()
+            ing.join(timeout=30)
+    ms.drain_rebuild(timeout=120.0)
+    assert len(outs) == n_threads, "a worker never resolved (hang/drop)"
+    for i in range(n_threads):
+        for o in outs[i]:
+            if o.degraded:
+                assert 0.0 <= o.lo <= o.hi <= 1.0
+            else:
+                assert 0.0 <= o.sel <= 1.0
+    resolved = (st_["probe_scored"] + st_["cache_hits"]
+                + st_["coalesced_dups"] + st_["shed"] + st_["degraded"]
+                + st_["errors"])
+    assert st_["requests"] == resolved == n_threads * per, st_
+    assert ms.inserts > 0, "ingest thread must actually mutate"

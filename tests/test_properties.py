@@ -5,8 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+# hypothesis always resolves: conftest puts the vendored shim
+# (tests/_vendor) on sys.path when the real package is absent — these
+# properties must never silently skip again.
+from hypothesis import given, settings, strategies as st
 
 from repro.core.kvbatch import threshold_from_matches
 from repro.core.metrics import q_error
