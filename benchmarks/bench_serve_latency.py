@@ -1,0 +1,121 @@
+"""Serve-phase latency baseline: the telemetry registry as a benchmark.
+
+Runs a small coalesced-serve workload (PR 8's full telemetry path: one
+``ObsHub`` threaded through the coalescer, index, and plan execution) and
+persists the per-phase latency percentiles the registry's exact-percentile
+histograms report — queue-wait / probe / combine / request — to
+``BENCH_serve_latency.json`` at the repo root. ``scripts/check_bench.py``
+gates serve p95 against that baseline the same way the probe gate works
+(SKIP when no baseline exists; re-run this bench to refresh it after an
+intentional perf change).
+
+The measurement *is* the telemetry: no separate timing harness exists, so
+the gate also exercises the registry end to end — a wiring regression that
+stopped phases from being recorded shows up as a missing-row failure, not
+silence.
+
+CSV: bench,config,us_per_call,derived  (us_per_call = phase p95 in µs)
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+from pathlib import Path
+
+# self-bootstrapping: `python benchmarks/bench_serve_latency.py` works
+# without the PYTHONPATH=src:. incantation
+_ROOT = Path(__file__).resolve().parent.parent
+sys.path[:0] = [p for p in (str(_ROOT), str(_ROOT / "src"))
+                if p not in sys.path]
+
+from benchmarks.common import csv_row
+
+# the serve phases the registry histograms break a request into; "request"
+# and "probe" are the gated ones (queue_wait/combine are sub-ms and noisy)
+PHASES = ("queue_wait", "probe", "combine", "request")
+GATED_PHASES = ("probe", "request")
+
+# one config for baseline and gate: small enough for --quick, big enough
+# that the probe phase dominates (clusters keep the scan pruned, two passes
+# give the second pass cache hits — the workload the serve docs describe)
+SERVE_CONFIG = dict(queries=6, filters=2, passes=2, concurrency=4,
+                    n_images=400, clusters=32, seed=0)
+
+
+def measure_serve_latency(*, queries: int = 6, filters: int = 2,
+                          passes: int = 2, concurrency: int = 4,
+                          n_images: int = 400, clusters: int = 32,
+                          seed: int = 0) -> dict[str, dict]:
+    """Run one coalesced-serve workload with telemetry attached and return
+    ``{phase: histogram summary}`` from the registry snapshot (exact
+    percentiles, ms). Shared with ``scripts/check_bench.py``, which re-runs
+    this and gates phase p95 against the persisted baseline."""
+    from repro.core.optimizer import generate_queries
+    from repro.launch.serve import build_stack, serve_concurrent
+    from repro.obs import ObsHub
+
+    corpus, estimators = build_stack(
+        "wildlife", n_images=n_images, seed=seed, spec_steps=200,
+        index_clusters=clusters)
+    hub = ObsHub()
+    index = estimators["specificity"].hist.index
+    if index is not None:
+        index.obs = hub
+    qs = generate_queries(corpus, n_queries=queries, n_filters=filters,
+                          seed=seed)
+    serve_concurrent(corpus, estimators, qs, est_name="ensemble",
+                     seed=seed, concurrency=concurrency, window_ms=4.0,
+                     max_batch=64, cache_size=1024, cache_bits=12,
+                     passes=passes, obs=hub)
+    hists = hub.registry.snapshot()["histograms"]
+    return {ph: hists.get(f"serve.{ph}_ms", {"count": 0}) for ph in PHASES}
+
+
+def main() -> list[str]:
+    rows = [csv_row("bench", "config", "us_per_call", "derived")]
+    recs: list[dict] = []
+
+    def add(bench, config, us_per_call, derived) -> None:
+        rows.append(csv_row(bench, config, us_per_call, derived))
+        recs.append({"bench": str(bench), "config": str(config),
+                     "us_per_call": str(us_per_call),
+                     "derived": str(derived)})
+
+    cfg = SERVE_CONFIG
+    phases = measure_serve_latency(**cfg)
+    cfg_str = (f"q={cfg['queries']}x{cfg['passes']},f={cfg['filters']},"
+               f"c={cfg['concurrency']},N={cfg['n_images']},"
+               f"K={cfg['clusters']}")
+    for ph in PHASES:
+        s = phases[ph]
+        if not s.get("count"):
+            add("serve_phase_cpu", f"{cfg_str},phase={ph}", "-", "no data")
+            continue
+        add("serve_phase_cpu", f"{cfg_str},phase={ph}",
+            f"{s['p95'] * 1e3:.0f}",
+            f"p50={s['p50']:.2f}ms,p95={s['p95']:.2f}ms,"
+            f"p99={s['p99']:.2f}ms,count={s['count']}")
+
+    # persist machine-readably at the repo root (same shape as
+    # BENCH_probe_scaling.json) so check_bench can gate against it
+    import json
+
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"], cwd=_ROOT,
+                             capture_output=True, text=True,
+                             timeout=30).stdout.strip() or None
+    except OSError:
+        sha = None
+    (_ROOT / "BENCH_serve_latency.json").write_text(json.dumps({
+        "bench": "bench_serve_latency",
+        "git_sha": sha,
+        "config": dict(cfg),
+        "rows": recs,
+    }, indent=1) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row)

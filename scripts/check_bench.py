@@ -12,6 +12,15 @@ every probe slower (an accidental de-jit, a dtype upcast, a lost fast path).
 Tolerance defaults to 3x: CPU wall times on shared machines are noisy, and
 the gate's job is to catch order-of-magnitude regressions, not 10% drift.
 
+A second gate covers the serving path (PR 8): ``BENCH_serve_latency.json``
+(written by ``benchmarks/bench_serve_latency.py``) persists the per-phase
+p95 latencies the telemetry registry reports for a small coalesced-serve
+workload. This gate re-runs the same workload through the same
+``measure_serve_latency`` helper and fails if a gated phase's p95 exceeds
+``tolerance x`` its baseline (with an absolute floor so sub-ms phases
+don't flap on scheduler noise). Like the probe gate, it SKIPs when no
+baseline exists.
+
 Run directly (``python scripts/check_bench.py [--quick]``) or via
 ``python scripts/smoke_all.py --check-bench``. Exit code 1 on regression.
 """
@@ -71,6 +80,41 @@ def check_mutable_rows(data: dict, *, min_speedup: float = 3.0
     return fails
 
 
+def load_serve_baseline(path: Path) -> dict[str, float]:
+    """``serve_phase_cpu`` rows of a persisted serve-latency bench JSON as
+    {phase: p95 µs}."""
+    data = json.loads(path.read_text())
+    base: dict[str, float] = {}
+    for row in data.get("rows", []):
+        if row.get("bench") != "serve_phase_cpu":
+            continue
+        if str(row["us_per_call"]) == "-":
+            continue
+        phase = str(row["config"]).rsplit("phase=", 1)[-1]
+        base[phase] = float(row["us_per_call"])
+    return base
+
+
+def compare_serve(baseline: dict[str, float], measured: dict[str, float],
+                  tolerance: float, *, floor_us: float = 5_000.0
+                  ) -> list[str]:
+    """Pure serve-phase comparison: one failure per gated phase whose
+    re-measured p95 exceeds tolerance x max(baseline, floor). The floor
+    keeps sub-ms phases (combine, an all-cache-hit probe) from failing on
+    absolute jitters that are large relatively but trivial in wall time."""
+    fails = []
+    for ph, us in sorted(measured.items()):
+        if ph not in baseline:
+            fails.append(f"phase={ph}: no serve_phase_cpu baseline row "
+                         f"(re-run benchmarks/bench_serve_latency.py)")
+        elif us > tolerance * max(baseline[ph], floor_us):
+            fails.append(
+                f"phase={ph}: measured p95 {us / 1e3:.1f}ms > "
+                f"{tolerance:.1f}x baseline "
+                f"{max(baseline[ph], floor_us) / 1e3:.1f}ms")
+    return fails
+
+
 def compare(baseline: dict[int, float], measured: dict[int, float],
             tolerance: float) -> list[str]:
     """Pure comparison (unit-testable without measuring): one failure
@@ -95,40 +139,83 @@ def main(argv: list[str] | None = None) -> int:
                     help="fail if measured > tolerance x baseline "
                          "(default 3.0 — CPU wall noise headroom)")
     ap.add_argument("--quick", action="store_true",
-                    help="re-measure only the N=10k row")
+                    help="re-measure only the N=10k probe row and a "
+                         "reduced serve workload")
+    ap.add_argument("--serve-baseline",
+                    default=str(REPO / "BENCH_serve_latency.json"),
+                    help="persisted serve-latency bench JSON to gate "
+                         "against")
     args = ap.parse_args(argv)
+
+    fails: list[str] = []
 
     path = Path(args.baseline)
     if not path.exists():
         # first run on a fresh checkout: nothing to gate against yet —
         # the bench run itself creates the baseline
-        print(f"check_bench: SKIP (no baseline at {path.name}; run "
-              f"benchmarks/bench_probe_scaling.py to create one)")
-        return 0
-    baseline = load_baseline(path)
-    if not baseline:
-        print(f"check_bench: FAIL ({path.name} has no probe_measured_cpu "
-              f"rows)", file=sys.stderr)
-        return 1
+        print(f"check_bench: SKIP probe gate (no baseline at {path.name}; "
+              f"run benchmarks/bench_probe_scaling.py to create one)")
+    else:
+        baseline = load_baseline(path)
+        if not baseline:
+            print(f"check_bench: FAIL ({path.name} has no "
+                  f"probe_measured_cpu rows)", file=sys.stderr)
+            return 1
 
-    from benchmarks.bench_probe_scaling import measure_probe_us
+        from benchmarks.bench_probe_scaling import measure_probe_us
 
-    measured = {n: measure_probe_us(n)
-                for n in (QUICK_NS if args.quick else FULL_NS)}
-    for n, us in sorted(measured.items()):
-        base = baseline.get(n)
-        ratio = f"{us / base:.2f}x baseline" if base else "no baseline"
-        print(f"  probe_measured_cpu N={n}: {us:.0f}us ({ratio})")
+        measured = {n: measure_probe_us(n)
+                    for n in (QUICK_NS if args.quick else FULL_NS)}
+        for n, us in sorted(measured.items()):
+            base = baseline.get(n)
+            ratio = f"{us / base:.2f}x baseline" if base else "no baseline"
+            print(f"  probe_measured_cpu N={n}: {us:.0f}us ({ratio})")
 
-    fails = compare(baseline, measured, args.tolerance)
-    fails += check_mutable_rows(json.loads(path.read_text()))
+        fails += compare(baseline, measured, args.tolerance)
+        fails += check_mutable_rows(json.loads(path.read_text()))
+
+    serve_path = Path(args.serve_baseline)
+    if not serve_path.exists():
+        print(f"check_bench: SKIP serve gate (no baseline at "
+              f"{serve_path.name}; run benchmarks/bench_serve_latency.py "
+              f"to create one)")
+    else:
+        serve_base = load_serve_baseline(serve_path)
+        if not serve_base:
+            print(f"check_bench: FAIL ({serve_path.name} has no "
+                  f"serve_phase_cpu rows)", file=sys.stderr)
+            return 1
+
+        from benchmarks.bench_serve_latency import (
+            GATED_PHASES,
+            SERVE_CONFIG,
+            measure_serve_latency,
+        )
+
+        cfg = (dict(SERVE_CONFIG, queries=4, passes=1) if args.quick
+               else dict(SERVE_CONFIG))
+        phases = measure_serve_latency(**cfg)
+        serve_meas = {ph: phases[ph]["p95"] * 1e3 for ph in GATED_PHASES
+                      if phases[ph].get("count")}
+        for ph in GATED_PHASES:
+            if ph not in serve_meas:
+                fails.append(f"phase={ph}: serve re-measure recorded no "
+                             f"latency samples (telemetry wiring broke?)")
+                continue
+            base = serve_base.get(ph)
+            ratio = (f"{serve_meas[ph] / base:.2f}x baseline" if base
+                     else "no baseline")
+            print(f"  serve_phase_cpu phase={ph}: p95 "
+                  f"{serve_meas[ph] / 1e3:.1f}ms ({ratio})")
+        fails += compare_serve(serve_base, serve_meas, args.tolerance)
+
     if fails:
         print("check_bench: FAIL")
         for f in fails:
             print(f"  {f}")
         return 1
-    print(f"OK  check_bench              probe within "
-          f"{args.tolerance:.1f}x of {path.name}")
+    print(f"OK  check_bench              probe + serve p95 within "
+          f"{args.tolerance:.1f}x of persisted baselines")
     return 0
 
 

@@ -40,7 +40,8 @@ REQUIRED_FLAGS = {
     "repro.launch.serve": ("--concurrency", "--index-clusters", "--shards",
                            "--split-radius", "--balance-boundary",
                            "--deadline-ms", "--chaos", "--ingest-rate",
-                           "--rebuild-tail-frac"),
+                           "--rebuild-tail-frac", "--metrics-json",
+                           "--trace-out"),
 }
 
 # substrings README/docs must keep mentioning somewhere (operator-facing
@@ -67,6 +68,14 @@ REQUIRED_TOPICS = {
                 "serve --ingest-rate / --rebuild-tail-frac) must stay "
                 "documented — it is where ingest cost lives between "
                 "rebuilds",
+    "q-error": "the live estimator accuracy accounting (PR 8: per-"
+               "estimator q-error histograms measured against ground "
+               "truth after each plan executes, degraded answers "
+               "recording interval width + containment instead, the "
+               "serve exit q-error table and --metrics-json qerror "
+               "section) must stay documented — it is how operators see "
+               "estimator quality in production, not just in offline "
+               "benchmarks",
 }
 
 

@@ -11,13 +11,16 @@ injection through the serving control plane: flusher kill + probe failures
 with retries, bound-only degraded answers, exact counter reconciliation),
 an ingest smoke (mutable store: hot-tail inserts + tombstone deletes +
 a background rebuild, probes bitwise equal to a fresh full scan at every
-step), and a guard that the tier-1 suite actually collects hypothesis
-property tests (they silently skipped for several PRs when the package
-was missing — the vendored shim makes that impossible now)
+step), an observability smoke (a fully-instrumented serve run: metrics
+snapshot + sampled trace spans, validated to reconcile exactly against
+each other — docs/observability.md), and a guard that the tier-1 suite
+actually collects hypothesis property tests (they silently skipped for
+several PRs when the package was missing — the vendored shim makes that
+impossible now)
 so hot-path regressions surface here first. ``--check-docs`` additionally
 runs scripts/check_docs.py (README/docs drift vs actual entrypoints);
-``--check-bench`` runs scripts/check_bench.py --quick (probe perf gate vs
-the persisted BENCH_probe_scaling.json baseline)."""
+``--check-bench`` runs scripts/check_bench.py --quick (probe + serve-p95
+perf gates vs the persisted BENCH_*.json baselines)."""
 
 import os
 import subprocess
@@ -412,6 +415,65 @@ def run_ingest_smoke():
           f"live={ms.n_live}, gen={ms.generation}")
 
 
+def run_obs_smoke():
+    """Full telemetry end to end: a coalesced serve run in a subprocess
+    with --metrics-json + sampled --trace-out, then validate the snapshot
+    schema, the exact counter reconciliation, the span schema, and that
+    the trace's summary record carries the same resolution totals as the
+    metrics snapshot (one source of truth — docs/observability.md)."""
+    import json
+    import tempfile
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parent.parent
+    env = {**os.environ, "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": str(root / "src")}
+    env.pop("XLA_FLAGS", None)
+    with tempfile.TemporaryDirectory() as td:
+        mpath, tpath = Path(td) / "m.json", Path(td) / "t.jsonl"
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve",
+             "--concurrency", "4", "--queries", "3", "--filters", "2",
+             "--passes", "2", "--index-clusters", "16",
+             "--n-images", "300", "--metrics-json", str(mpath),
+             "--trace-out", str(tpath), "--trace-sample", "2"],
+            capture_output=True, text=True, timeout=600, cwd=root, env=env)
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        snap = json.loads(mpath.read_text())
+        recs = [json.loads(ln)
+                for ln in tpath.read_text().splitlines() if ln]
+    assert snap["schema"] == 1, snap["schema"]
+    coal = snap["coalescer"]
+    assert coal["reconciles"] is True, coal
+    assert snap["latency_ms"]["probe"]["count"] > 0, snap["latency_ms"]
+    assert snap["qerror"], "no q-error recorded for any estimator"
+    # span schema: every record has a kind; submits carry the resolution
+    # breakdown the docs promise; scans correlate to a flush
+    kinds = {}
+    for rec in recs:
+        kinds[rec["kind"]] = kinds.get(rec["kind"], 0) + 1
+        if rec["kind"] == "submit":
+            assert {"trace", "pred", "resolution", "wall_ms"} <= set(rec), rec
+        if rec["kind"] == "scan":
+            assert {"flush", "rows_scanned", "scan_fraction"} <= set(rec), rec
+    for kind in ("submit", "flush", "scan", "plan", "summary"):
+        assert kinds.get(kind, 0) > 0, (kind, kinds)
+    assert kinds["summary"] == 1, kinds
+    (summary,) = [rec for rec in recs if rec["kind"] == "summary"]
+    # the summary record and the snapshot read the same counters
+    for key in ("requests", "probe_scored", "cache_hits", "coalesced_dups",
+                "shed", "degraded", "errors", "probes_fired"):
+        assert summary[key] == coal[key], (key, summary[key], coal[key])
+    # emitted span counts in the summary match the actual JSONL contents
+    # (summary itself is emitted after its own span_counts() read)
+    for kind, n in summary["spans"].items():
+        assert kinds.get(kind, 0) == n, (kind, n, kinds)
+    print(f"OK  obs_telemetry            {coal['requests']} requests "
+          f"reconcile across snapshot+trace, "
+          f"{sum(kinds.values())} spans, "
+          f"qerror[{','.join(sorted(snap['qerror']))}]")
+
+
 def run_hypothesis_guard():
     """Fail loudly if the tier-1 suite would collect zero hypothesis
     property tests — the silent-skip failure mode this PR fixes."""
@@ -448,7 +510,7 @@ if __name__ == "__main__":
     archs = argv or list(ASSIGNED)
     for smoke in (run_probe_smoke, run_coalescer_smoke, run_index_smoke,
                   run_sharded_smoke, run_balanced_smoke, run_chaos_smoke,
-                  run_ingest_smoke, run_hypothesis_guard):
+                  run_ingest_smoke, run_obs_smoke, run_hypothesis_guard):
         try:
             smoke()
         except Exception:

@@ -131,7 +131,12 @@ def plan_query(filters: Sequence[int], estimator, seed: int = 0,
 def execute_cascade(
     corpus: Corpus, plan: QueryPlan, *, seed: int = 0,
     per_call_s: float = DEFAULT_VLM_CALL_S,
+    obs=None, est_name: str | None = None,
 ) -> ExecutionResult:
+    """Run the cascade; with ``obs`` (a ``repro.obs.ObsHub``), feed the
+    now-known true selectivities back as per-estimator q-error accounting
+    (``obs.record_plan``) — execution makes ground truth free, the
+    observation behind Larch-style learned feedback (PAPERS.md)."""
     alive = np.arange(len(corpus.images))
     calls = 0
     for f in plan.filter_order:
@@ -143,6 +148,8 @@ def execute_cascade(
     exec_s = calls * per_call_s
     est_exec_s = plan.est_vlm_calls * per_call_s
     total = plan.est_latency_s + est_exec_s + exec_s
+    if obs is not None:
+        obs.record_plan(est_name or "estimator", corpus, plan)
     return ExecutionResult(plan=plan, vlm_calls=calls, result_ids=alive,
                            exec_s=exec_s, total_s=total)
 

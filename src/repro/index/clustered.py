@@ -140,6 +140,9 @@ class ClusteredStore:
         self._lock = threading.Lock()
         self._cum = {"probes": 0, "launches": 0, "rows_scanned": 0,
                      "rows_full_equiv": 0}
+        # telemetry hub (repro.obs.ObsHub), attached by the serve layer;
+        # duck-typed so the index never imports the obs package
+        self.obs = None
 
     # ------------------------------------------------------------- bounds
 
@@ -481,6 +484,11 @@ class ClusteredStore:
             self._cum["launches"] += stats["launches"]
             self._cum["rows_scanned"] += stats["rows_scanned"]
             self._cum["rows_full_equiv"] += stats["rows_full_equiv"]
+            frac = (self._cum["rows_scanned"]
+                    / max(1, self._cum["rows_full_equiv"]))
+        obs = self.obs
+        if obs is not None:
+            obs.index_scan(stats, probes=probes, fraction=frac)
 
     def stats(self) -> dict:
         """Cumulative scan accounting; ``scan_fraction`` is rows actually

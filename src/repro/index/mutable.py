@@ -178,6 +178,7 @@ class MutableClusteredStore:
         self._rebuild_thread: threading.Thread | None = None
         self._deleted_during_rebuild: set[int] = set()
         self._pre_swap_hook = None        # test hook: runs just before swap
+        self._obs = None
         self._next_id = len(x)
         self._apply_state(self._prepare_state(base, np.arange(len(x))))
         self._reset_tail(np.empty((0, self.d), np.float32),
@@ -232,6 +233,9 @@ class MutableClusteredStore:
 
     def _apply_state(self, st: dict) -> None:
         self._base = st["base"]
+        # re-attach the telemetry hub across generation swaps (absent
+        # only during __init__'s first _apply_state call)
+        self._base.obs = getattr(self, "_obs", None)
         self._base_ids = st["base_ids"]
         self._base_emb_np = st["emb"]
         self._segments = st["segments"]
@@ -672,6 +676,12 @@ class MutableClusteredStore:
                 self.version += 1
                 self.last_rebuild_s = time.perf_counter() - t0
                 self.last_rebuild_incremental = init_c is not None
+                obs, gen = self._obs, self.generation
+                rebuild_s = self.last_rebuild_s
+            if obs is not None:
+                obs.rebuild(seconds=rebuild_s,
+                            incremental=init_c is not None,
+                            generation=gen)
             return True
         finally:
             with self._lock:
@@ -700,6 +710,21 @@ class MutableClusteredStore:
         self._reset_tail(
             np.asarray(tail_x, np.float32).reshape(-1, self.d),
             np.asarray(tail_ids, np.int64))
+
+    # ----------------------------------------------------------- telemetry
+
+    @property
+    def obs(self):
+        """Telemetry hub; assigning forwards it to the CURRENT base index
+        (scan accounting lives there) and every rebuild's generation swap
+        re-forwards it to the new base automatically."""
+        return self._obs
+
+    @obs.setter
+    def obs(self, hub) -> None:
+        with self._lock:
+            self._obs = hub
+            self._base.obs = hub
 
     # --------------------------------------------------------------- stats
 

@@ -110,6 +110,11 @@ class ShardedClusteredStore:
         self._lock = threading.Lock()
         self._probes = 0
         self._launches = 0
+        self._rows_scanned = 0
+        self._rows_full_equiv = 0
+        # telemetry hub, attached by the serve layer to the WRAPPER only
+        # (per-shard stores keep obs=None so a probe emits once)
+        self.obs = None
 
     # ------------------------------------------------------------ planning
 
@@ -162,9 +167,26 @@ class ShardedClusteredStore:
             shard._record({"launches": 1 if (launched and plan.m) else 0,
                            "rows_scanned": plan.m if launched else 0,
                            "rows_full_equiv": int(nl)}, probes=1)
+        rows = sum(p.m for p in plans) if launched else 0
+        full = sum(int(nl) for nl in live_n)
         with self._lock:
             self._probes += 1
             self._launches += 1 if launched else 0
+            self._rows_scanned += rows
+            self._rows_full_equiv += full
+            frac = self._rows_scanned / max(1, self._rows_full_equiv)
+        obs = self.obs
+        if obs is not None:
+            obs.index_scan(
+                {"launches": 1 if launched else 0, "rows_scanned": rows,
+                 "rows_full_equiv": full,
+                 "scan_fraction": rows / max(1, full)},
+                probes=1, fraction=frac,
+                per_shard=[{"shard": s,
+                            "rows_scanned": int(p.m) if launched else 0,
+                            "rows_full_equiv": int(nl)}
+                           for s, (p, nl) in
+                           enumerate(zip(plans, live_n))])
 
     def boundary_mass(self) -> np.ndarray:
         """Predicted boundary mass per shard: ``sum(size_c * radius_c)``
@@ -211,6 +233,8 @@ class ShardedClusteredStore:
         with self._lock:
             self._probes = 0
             self._launches = 0
+            self._rows_scanned = 0
+            self._rows_full_equiv = 0
 
 
 def _cluster_items(gcs: ClusteredStore) -> list:

@@ -101,8 +101,9 @@ class ChaosInjector:
     lock, then (in order) kills, delays, fails, or runs the real probe.
     """
 
-    def __init__(self, config: ChaosConfig):
+    def __init__(self, config: ChaosConfig, *, obs=None):
         self.cfg = config
+        self.obs = obs       # telemetry hub (the coalescer fills it in)
         self._rng = np.random.default_rng(config.seed)
         self._lock = threading.Lock()
         self.launches = 0
@@ -126,6 +127,17 @@ class ChaosInjector:
                     self.injected_delays += 1
                 if not kill and fail:
                     self.injected_failures += 1
+            # fault decisions become telemetry events (emitted OUTSIDE
+            # the lock — the obs hub takes its own locks)
+            obs = self.obs
+            if obs is not None:
+                if kill:
+                    obs.event("chaos_kill", launch=ordinal)
+                elif delay:
+                    obs.event("chaos_delay", launch=ordinal,
+                              delay_ms=self.cfg.delay_ms)
+                if not kill and fail:
+                    obs.event("chaos_fail", launch=ordinal)
             if kill:
                 raise FlusherKill(
                     f"chaos: flusher killed at launch {ordinal}")

@@ -69,6 +69,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.obs import ObsHub, set_flush_ctx
 from repro.runtime.fault_tolerance import (
     CircuitBreaker,
     RetryPolicy,
@@ -223,9 +224,15 @@ class ProbeOutcome:
 
 
 class _Pending:
-    """One in-flight predicate: all duplicate submitters wait on ``event``."""
+    """One in-flight predicate: all duplicate submitters wait on ``event``.
 
-    __slots__ = ("key", "emb", "thr", "ts", "event", "value", "error")
+    ``qw_s`` / ``probe_s`` are the flush-side timing breakdown (queue
+    wait until dequeue, probe dispatch wall) stamped by ``_flush`` so
+    every waiter — creator and piggybacked duplicates alike — can split
+    its own wall time into queue-wait / probe / combine."""
+
+    __slots__ = ("key", "emb", "thr", "ts", "event", "value", "error",
+                 "qw_s", "probe_s")
 
     def __init__(self, key, emb, thr):
         self.key = key
@@ -235,6 +242,8 @@ class _Pending:
         self.event = threading.Event()
         self.value = None
         self.error = None
+        self.qw_s = 0.0
+        self.probe_s = 0.0
 
 
 class PredicateCoalescer:
@@ -269,10 +278,16 @@ class PredicateCoalescer:
     cache + dedup wins as ``predicates_probed`` < ``requests``.
     """
 
+    _COUNTERS = ("requests", "probes_fired", "predicates_probed",
+                 "probe_scored", "cache_hits", "coalesced_dups", "shed",
+                 "degraded", "errors", "retries", "probe_failures",
+                 "breaker_fastfails", "flusher_deaths", "flusher_restarts")
+
     def __init__(self, hist, config: CoalescerConfig | None = None, *,
                  cache: PredicateCache | None = None, chaos=None,
                  retry: RetryPolicy | None = None,
-                 breaker: CircuitBreaker | None = None):
+                 breaker: CircuitBreaker | None = None,
+                 obs: ObsHub | None = None):
         self.hist = hist
         self.cfg = config or CoalescerConfig()
         self.cache = cache if cache is not None else PredicateCache(
@@ -282,29 +297,32 @@ class PredicateCoalescer:
         self.breaker = breaker if breaker is not None else CircuitBreaker(
             failure_threshold=5, cooldown_s=1.0)
         self.watchdog = StepWatchdog()      # flush-latency EWMA
+        # telemetry: counters live in the (possibly shared) registry so
+        # stats(), the exit summary, and --metrics-json read ONE source;
+        # handles are resolved once here, never by name on the hot path
+        self.obs = obs if obs is not None else ObsHub()
+        reg = self.obs.registry
+        self._c = {name: reg.counter(f"coalescer.{name}")
+                   for name in self._COUNTERS}
+        self._hwm = reg.gauge("coalescer.queue_depth_hwm")
+        self._lat = {ph: reg.histogram(f"serve.{ph}_ms")
+                     for ph in ("queue_wait", "probe", "combine",
+                                "request")}
+        if self.breaker.on_transition is None:
+            self.breaker.on_transition = self._on_breaker_transition
         self.chaos = chaos
+        if chaos is not None and getattr(chaos, "obs", None) is None:
+            chaos.obs = self.obs
         self._probe = (chaos.wrap(self._raw_probe) if chaos is not None
                        else self._raw_probe)
         self._cv = threading.Condition()
         self._pending: list[_Pending] = []
         self._inflight: dict[tuple, _Pending] = {}
         self._stop = False
-        self.requests = 0
-        self.probes_fired = 0
-        self.predicates_probed = 0
-        self.probe_scored = 0
-        self.cache_hits = 0
-        self.coalesced_dups = 0
-        self.shed = 0
-        self.degraded = 0
-        self.errors = 0
-        self.retries = 0
-        self.probe_failures = 0
-        self.breaker_fastfails = 0
-        self.flusher_deaths = 0
-        self.flusher_restarts = 0
-        self.queue_depth_hwm = 0
         self._flusher = self._spawn_flusher()
+
+    def _on_breaker_transition(self, old: str, new: str) -> None:
+        self.obs.event("breaker_transition", prev=old, state=new)
 
     def _spawn_flusher(self) -> threading.Thread:
         t = threading.Thread(target=self._run, name="predicate-coalescer",
@@ -369,16 +387,42 @@ class PredicateCoalescer:
 
         out: list[ProbeOutcome | None] = [None] * len(preds)
         waits: list[tuple[int, _Pending, bool]] = []   # (j, entry, creator)
+        t_sub = [0.0] * len(preds)
 
-        def fail(j: int, exc: Exception, pending_waits: int):
+        # one sampling decision per probe_outcomes call: a sampled call
+        # emits a submit span for EVERY predicate it resolves (including
+        # error/abandoned ones), so at --trace-sample 1 per-resolution
+        # span counts equal the reconciliation counters exactly
+        tr = self.obs.tracer
+        sampled = tr is not None and tr.sample_hit("submit")
+        trace_id = tr.next_id() if sampled else None
+
+        def span(j: int, resolution: str, entry: _Pending | None = None,
+                 **extra) -> None:
+            if not sampled:
+                return
+            rec = {"trace": trace_id, "pred": int(j),
+                   "resolution": resolution,
+                   "wall_ms": round((time.monotonic() - t_sub[j]) * 1e3,
+                                    4)}
+            if entry is not None:
+                rec["queue_wait_ms"] = round(entry.qw_s * 1e3, 4)
+                rec["probe_ms"] = round(entry.probe_s * 1e3, 4)
+            rec.update(extra)
+            tr.emit("submit", **rec)
+
+        def fail(j: int, exc: Exception, abandoned: list):
             """No bound fallback: count this raise + every wait this call
             will abandon, so the reconciliation invariant survives the
             exception (abandoned probes still land and fill the cache)."""
-            with self._cv:
-                self.errors += 1 + pending_waits
+            self._c["errors"].inc(1 + len(abandoned))
+            span(j, "errors", error=type(exc).__name__)
+            for jj, _, _ in abandoned:
+                span(jj, "errors", abandoned=True)
             raise exc
 
         for j in range(len(preds)):
+            t_sub[j] = time.monotonic()
             key = self.cache.key(preds[j], [thrs[j]], 1,
                                  version=getattr(self.hist, "version", 0))
             with self._cv:
@@ -387,12 +431,15 @@ class PredicateCoalescer:
                 # lock), so either the get hits or the entry is still
                 # in-flight — a just-flushed duplicate can never slip
                 # through and trigger a redundant store scan
-                self.requests += 1
+                self._c["requests"].inc()
                 cached = self.cache.get(key)
                 if cached is not None:
-                    self.cache_hits += 1
+                    self._c["cache_hits"].inc()
                     sel = int(cached[0][0]) / self.hist.n
                     out[j] = ProbeOutcome(sel, sel, sel, False)
+                    self._lat["request"].observe(
+                        (time.monotonic() - t_sub[j]) * 1e3)
+                    span(j, "cache_hits")
                     continue
                 entry = self._inflight.get(key)
                 if entry is not None:
@@ -400,7 +447,7 @@ class PredicateCoalescer:
                     continue
                 breaker_open = self.breaker.is_open
                 if breaker_open:
-                    self.breaker_fastfails += 1
+                    self._c["breaker_fastfails"].inc()
                 shed = (not breaker_open) and (
                     (self.cfg.max_queue
                      and len(self._pending) >= self.cfg.max_queue)
@@ -415,8 +462,7 @@ class PredicateCoalescer:
                     entry = _Pending(key, preds[j], thrs[j])
                     self._inflight[key] = entry
                     self._pending.append(entry)
-                    self.queue_depth_hwm = max(self.queue_depth_hwm,
-                                               len(self._pending))
+                    self._hwm.record_max(len(self._pending))
                     self._cv.notify_all()
                     waits.append((j, entry, True))
                     continue
@@ -424,15 +470,19 @@ class PredicateCoalescer:
             # resolve the fast-fail outside the lock (bounds read the index)
             if degraded_ok:
                 out[j] = self._bound_outcome(preds[j], thrs[j])
-                with self._cv:
-                    setattr(self, bucket, getattr(self, bucket) + 1)
+                self._c[bucket].inc()
+                self._lat["request"].observe(
+                    (time.monotonic() - t_sub[j]) * 1e3)
+                span(j, bucket)
             elif breaker_open:
                 fail(j, BreakerOpenError(
-                    "probe circuit breaker is open"), len(waits))
+                    "probe circuit breaker is open"), waits)
             else:
-                with self._cv:
-                    self.shed += 1      # shed bucket even when raising
-                    self.errors += len(waits)   # abandoned waits
+                self._c["shed"].inc()   # shed bucket even when raising
+                self._c["errors"].inc(len(waits))   # abandoned waits
+                span(j, "shed", error="ShedError")
+                for jj, _, _ in waits:
+                    span(jj, "errors", abandoned=True)
                 raise ShedError(
                     f"admission control shed the request (queue depth "
                     f"{len(self._pending)}, max_queue={self.cfg.max_queue})")
@@ -444,18 +494,27 @@ class PredicateCoalescer:
             if landed and entry.error is None:
                 sel = int(entry.value[0][0]) / self.hist.n
                 out[j] = ProbeOutcome(sel, sel, sel, False)
-                with self._cv:
-                    if creator:
-                        self.probe_scored += 1
-                    else:
-                        self.coalesced_dups += 1
+                bucket = "probe_scored" if creator else "coalesced_dups"
+                self._c[bucket].inc()
+                wall = time.monotonic() - t_sub[j]
+                combine = max(0.0, wall - entry.qw_s - entry.probe_s)
+                self._lat["queue_wait"].observe(entry.qw_s * 1e3)
+                self._lat["probe"].observe(entry.probe_s * 1e3)
+                self._lat["combine"].observe(combine * 1e3)
+                self._lat["request"].observe(wall * 1e3)
+                span(j, bucket, entry=entry,
+                     combine_ms=round(combine * 1e3, 4))
                 continue
             if degraded_ok:
                 out[j] = self._bound_outcome(preds[j], thrs[j])
-                with self._cv:
-                    self.degraded += 1
+                self._c["degraded"].inc()
+                self._lat["request"].observe(
+                    (time.monotonic() - t_sub[j]) * 1e3)
+                span(j, "degraded",
+                     reason="deadline" if not landed
+                     else type(entry.error).__name__)
                 continue
-            remaining = len(waits) - i - 1
+            remaining = waits[i + 1:]
             if not landed:
                 fail(j, DeadlineExceededError(
                     "deadline expired before the probe landed"), remaining)
@@ -503,44 +562,71 @@ class PredicateCoalescer:
                         + [batch[-1].emb] * (bucket - b))
         thrs = np.asarray([p.thr for p in batch]
                           + [batch[-1].thr] * (bucket - b), np.float32)
-        err, attempt = None, 0
-        while True:
-            if not self.breaker.allow():
-                err = BreakerOpenError("probe circuit breaker is open")
-                break
-            t0 = time.perf_counter()
-            try:
-                counts, topk = self._probe(embs, thrs)
-                counts = np.asarray(counts)
-                topk = np.asarray(topk)
-                self.breaker.record_success()
-                self.watchdog.observe(time.perf_counter() - t0)
-                break
-            except Exception as e:  # noqa: BLE001 — classified below
-                self.breaker.record_failure()
-                with self._cv:
-                    self.probe_failures += 1
-                if (not self.retry.policy.transient(e)
-                        or attempt >= self.retry.max_retries or self._stop):
-                    err = e
+        tr = self.obs.tracer
+        flush_id = tr.next_id() if tr is not None else None
+        t_dq = time.monotonic()
+        for p in batch:
+            # flush_now backdates ts to -inf; clamp so the breakdown
+            # histograms never see an infinite queue wait
+            qw = t_dq - p.ts
+            p.qw_s = qw if qw < 1e6 else 0.0
+        err, attempt, probe_s = None, 0, 0.0
+        # bind the flush id on this (flusher) thread so index-layer scan
+        # spans correlate to this flush without touching probe signatures
+        set_flush_ctx(flush_id)
+        try:
+            while True:
+                if not self.breaker.allow():
+                    err = BreakerOpenError("probe circuit breaker is open")
                     break
-                with self._cv:
-                    self.retries += 1
-                time.sleep(self.retry.delay_s(attempt))
-                attempt += 1
+                t0 = time.perf_counter()
+                try:
+                    counts, topk = self._probe(embs, thrs)
+                    counts = np.asarray(counts)
+                    topk = np.asarray(topk)
+                    self.breaker.record_success()
+                    probe_s = time.perf_counter() - t0
+                    self.watchdog.observe(probe_s)
+                    break
+                except Exception as e:  # noqa: BLE001 — classified below
+                    self.breaker.record_failure()
+                    self._c["probe_failures"].inc()
+                    if (not self.retry.policy.transient(e)
+                            or attempt >= self.retry.max_retries
+                            or self._stop):
+                        err = e
+                        break
+                    self._c["retries"].inc()
+                    self.obs.event("retry", flush=flush_id,
+                                   attempt=attempt,
+                                   error=type(e).__name__)
+                    if self.retry.on_retry is not None:
+                        self.retry.on_retry(attempt, e)
+                    time.sleep(self.retry.delay_s(attempt))
+                    attempt += 1
+        finally:
+            set_flush_ctx(None)
         if err is None:
-            with self._cv:
-                self.probes_fired += 1
-                self.predicates_probed += b
+            self._c["probes_fired"].inc()
+            self._c["predicates_probed"].inc(b)
+        t_sc = time.monotonic()
         for i, p in enumerate(batch):
             if err is None:
                 p.value = (counts[i].copy(), topk[i].copy())
                 self.cache.put(p.key, p.value)
+                p.probe_s = probe_s
             else:
                 p.error = err
             with self._cv:
                 self._inflight.pop(p.key, None)
             p.event.set()
+        if tr is not None:
+            tr.emit("flush", flush=flush_id, batch=b, bucket=bucket,
+                    queue_wait_ms=round(batch[0].qw_s * 1e3, 4),
+                    probe_ms=round(probe_s * 1e3, 4),
+                    combine_ms=round((time.monotonic() - t_sc) * 1e3, 4),
+                    retries=attempt,
+                    outcome="ok" if err is None else type(err).__name__)
 
     def _run(self) -> None:
         try:
@@ -562,13 +648,15 @@ class PredicateCoalescer:
         control plane replaces.
         """
         with self._cv:
-            self.flusher_deaths += 1
+            self._c["flusher_deaths"].inc()
             victims = list(self._inflight.values())
             self._inflight.clear()
             self._pending.clear()
             restart = not self._stop
             if restart:
-                self.flusher_restarts += 1
+                self._c["flusher_restarts"].inc()
+        self.obs.event("flusher_death", error=type(exc).__name__,
+                       restarting=restart)
         err = FlusherDiedError(f"coalescer flusher died: {exc!r}")
         err.__cause__ = exc if isinstance(exc, Exception) else None
         for p in victims:
@@ -617,25 +705,12 @@ class PredicateCoalescer:
         self.close()
 
     def stats(self) -> dict:
-        with self._cv:
-            d = {
-                "requests": self.requests,
-                "probes_fired": self.probes_fired,
-                "predicates_probed": self.predicates_probed,
-                "probe_scored": self.probe_scored,
-                "cache_hits": self.cache_hits,
-                "coalesced_dups": self.coalesced_dups,
-                "shed": self.shed,
-                "degraded": self.degraded,
-                "errors": self.errors,
-                "retries": self.retries,
-                "probe_failures": self.probe_failures,
-                "breaker_fastfails": self.breaker_fastfails,
-                "flusher_deaths": self.flusher_deaths,
-                "flusher_restarts": self.flusher_restarts,
-                "queue_depth_hwm": self.queue_depth_hwm,
-                "flush_ewma_s": self.watchdog.ewma_s,
-            }
+        # counters ARE the registry entries (coalescer.<name>) — one
+        # source of truth for this dict, the exit summary, the trace
+        # summary record, and --metrics-json
+        d = {name: self._c[name].value for name in self._COUNTERS}
+        d["queue_depth_hwm"] = int(self._hwm.value)
+        d["flush_ewma_s"] = self.watchdog.ewma_s
         d["breaker"] = self.breaker.stats()
         d["cache"] = self.cache.stats()
         if self.chaos is not None:

@@ -79,6 +79,19 @@ keys on the store version so mutations can never serve stale counts.
 The run ends with the mutation counters (inserts / deletes / rebuilds /
 tail occupancy). Needs ``--index-clusters`` and ``--concurrency``.
 All knobs: docs/serving.md.
+
+Telemetry (PR 8): every run records into one ``repro.obs``
+MetricsRegistry — coalescer counters, per-phase latency histograms
+(queue-wait / probe / combine / request, exact p50/p95/p99), index
+scan-fraction gauges, and live per-estimator q-error measured against
+ground truth after each plan executes. The exit summary is rendered
+from that registry snapshot; ``--metrics-json PATH`` writes the same
+snapshot as schema-versioned JSON, and ``--trace-out PATH`` with
+``--trace-sample N`` streams 1-in-N per-request trace spans (submit /
+flush / scan / plan / event) as JSONL with a closing reconciliation
+summary. Telemetry observes host-side only — probe results stay
+bitwise identical with it on or off. Schema + tuning:
+docs/observability.md.
 """
 
 from __future__ import annotations
@@ -109,6 +122,8 @@ from repro.launch.coalescer import (
     PredicateCache,
     PredicateCoalescer,
 )
+from repro.obs import ObsHub, Tracer
+from repro.obs import report as obs_report
 
 
 def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
@@ -200,7 +215,8 @@ def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
     }
 
 
-def serve_sequential(corpus, estimators, queries, *, seed: int) -> None:
+def serve_sequential(corpus, estimators, queries, *, seed: int,
+                     obs: ObsHub | None = None) -> None:
     """Original per-query driver: every estimator, one query at a time."""
     oracle = estimators["oracle"]
     for qi, q in enumerate(queries):
@@ -210,7 +226,7 @@ def serve_sequential(corpus, estimators, queries, *, seed: int) -> None:
             if name == "oracle":
                 continue
             res = execute_cascade(corpus, plan_query(q, est, seed=seed),
-                                  seed=seed)
+                                  seed=seed, obs=obs, est_name=name)
             overhead = res.total_s - base.total_s
             print(f"  {name:14s} calls={res.vlm_calls:5d} "
                   f"est_lat={res.plan.est_latency_s*1e3:8.1f}ms "
@@ -222,22 +238,26 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
                      max_batch: int, cache_size: int, cache_bits: int,
                      passes: int, deadline_ms: float = 0.0,
                      max_queue: int = 0, degraded_ok: bool = False,
-                     chaos_spec: str = "", ingest_rate: float = 0.0) -> dict:
+                     chaos_spec: str = "", ingest_rate: float = 0.0,
+                     obs: ObsHub | None = None) -> dict:
     """Cross-query serving: N planner threads share one coalescer + cache.
 
     The control plane rides along per request: each plan's probes carry the
     deadline, the coalescer sheds past ``max_queue``, and ``degraded_ok``
     turns overload/fault resolutions into certified bound-only answers. A
     failing query is a *partial* failure — its worker records the error and
-    the rest of the workload proceeds. Returns the coalescer stats dict
-    (the smoke harness asserts on it)."""
+    the rest of the workload proceeds. ``obs`` (an ``repro.obs.ObsHub``)
+    collects counters / latency histograms / q-error accounting / trace
+    spans; the exit summary is rendered by the caller from its registry.
+    Returns the coalescer stats dict (the smoke harness asserts on it)."""
     est = estimators[est_name]
+    obs = obs if obs is not None else ObsHub()
     cache = PredicateCache(cache_size, bits=cache_bits)
     chaos = None
     if chaos_spec:
         from repro.launch.chaos import ChaosConfig, ChaosInjector
 
-        chaos = ChaosInjector(ChaosConfig.parse(chaos_spec))
+        chaos = ChaosInjector(ChaosConfig.parse(chaos_spec), obs=obs)
     workload = [(p, qi, q) for p in range(passes)
                 for qi, q in enumerate(queries)]
     n_preds = sum(len(q) for _, _, q in workload)
@@ -282,10 +302,11 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
             est.hist,
             CoalescerConfig(max_batch=max_batch, window_ms=window_ms,
                             max_queue=max_queue),
-            cache=cache, chaos=chaos) as coal:
+            cache=cache, chaos=chaos, obs=obs) as coal:
 
         def run_one(job):
             _, qi, q = job
+            t_q = time.perf_counter()
             try:
                 plan = plan_query(q, est, seed=seed, coalescer=coal,
                                   deadline_ms=deadline_ms or None,
@@ -293,8 +314,17 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
             except Exception as e:  # noqa: BLE001 — partial failure
                 failures.append((qi, f"{type(e).__name__}: {e}"))
                 return qi, None, False
-            return qi, execute_cascade(corpus, plan, seed=seed), \
-                plan.degraded
+            res = execute_cascade(corpus, plan, seed=seed, obs=obs,
+                                  est_name=est_name)
+            tr = obs.tracer
+            if tr is not None and tr.sample_hit("plan"):
+                tr.emit("plan", query=int(qi), estimator=est_name,
+                        degraded=bool(plan.degraded),
+                        est_ms=round(plan.est_latency_s * 1e3, 3),
+                        wall_ms=round((time.perf_counter() - t_q) * 1e3,
+                                      3),
+                        vlm_calls=int(res.vlm_calls))
+            return qi, res, plan.degraded
 
         t0 = time.perf_counter()
         with ThreadPoolExecutor(max_workers=concurrency) as pool:
@@ -317,35 +347,18 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
         print(f"  query {qi}: calls={res.vlm_calls:5d} "
               f"(oracle {base.vlm_calls}) |result|={len(res.result_ids)}")
 
-    c = stats["cache"]
-    amort = stats["requests"] / max(1, stats["probes_fired"])
-    print(f"\ncoalescing: {stats['probes_fired']} probes for "
-          f"{stats['requests']} predicate requests across "
-          f"{len(workload)} queries ({amort:.1f} preds amortized/probe, "
-          f"{stats['coalesced_dups']} in-flight dups piggybacked)")
-    print(f"cache: hit_rate={c['hit_rate']:.0%} ({c['hits']} hits / "
-          f"{c['misses']} misses), {c['entries']}/{c['capacity']} entries, "
-          f"{c['evictions']} evictions")
-    br = stats["breaker"]
-    print(f"control plane: shed={stats['shed']} "
-          f"degraded={stats['degraded']} errors={stats['errors']} "
-          f"retries={stats['retries']} "
-          f"probe_failures={stats['probe_failures']} "
-          f"breaker={br['state']}({br['opens']} opens) "
-          f"flusher_deaths={stats['flusher_deaths']} "
-          f"restarts={stats['flusher_restarts']} "
-          f"queue_hwm={stats['queue_depth_hwm']}")
-    if chaos is not None:
-        cs = stats["chaos"]
-        print(f"chaos: {cs['injected_failures']} failures, "
-              f"{cs['injected_delays']} delays, {cs['injected_kills']} "
-              f"kills injected over {cs['launches']} probe launches")
-    if degraded_plans or failures:
-        print(f"degraded plans: {degraded_plans}; failed queries: "
-              f"{len(failures)}"
-              + (f" (first: {failures[0][1]})" if failures else ""))
-    print(f"wall: {wall_s:.2f}s for {len(workload)} queries "
-          f"({len(workload)/wall_s:.1f} qps)")
+    # Everything the run learned goes through the registry: the exit
+    # summary (obs.report.render) and --metrics-json are both views of
+    # the same snapshot, so the human block can never drift from the
+    # machine one.
+    reg = obs.registry
+    reg.counter("serve.queries").inc(len(workload))
+    reg.counter("serve.degraded_plans").inc(degraded_plans)
+    reg.counter("serve.failed_queries").inc(len(failures))
+    reg.gauge("serve.wall_s").set(wall_s)
+    reg.gauge("serve.qps").set(len(workload) / wall_s if wall_s else 0.0)
+    if failures:
+        print(f"  first failure: {failures[0][1]}")
     return stats
 
 
@@ -430,14 +443,32 @@ def main(argv=None) -> None:
                          "e.g. 'seed=1,fail=0.3,delay=0.2,delay-ms=5,"
                          "kill-at=3' — seeded probe failures/delays and a "
                          "flusher kill at the given launch ordinal")
+    ap.add_argument("--n-images", type=int, default=1000,
+                    help="corpus size (rows in the embedding store)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the exit metrics snapshot (counters, "
+                         "latency/q-error histograms, reconciliation) to "
+                         "this path as schema-versioned JSON — the same "
+                         "snapshot the human summary renders")
+    ap.add_argument("--trace-out", default="",
+                    help="write sampled per-request trace spans (submit/"
+                         "flush/scan/plan/event + a closing summary) to "
+                         "this path as JSONL")
+    ap.add_argument("--trace-sample", type=int, default=1,
+                    help="trace 1-in-N requests per span kind (1 = every "
+                         "request; raise under load to bound overhead)")
     args = ap.parse_args(argv)
 
     if args.ingest_rate > 0 and args.concurrency <= 1:
         ap.error("--ingest-rate streams during the concurrent serve "
                  "path — it needs --concurrency > 1")
+    tracer = (Tracer(args.trace_out, sample=args.trace_sample)
+              if args.trace_out else None)
+    hub = ObsHub(tracer=tracer)
     print(f"building semantic-histogram stack for '{args.dataset}' "
           f"(probe impl={args.impl})...")
     corpus, estimators = build_stack(args.dataset, seed=args.seed,
+                                     n_images=args.n_images,
                                      impl=args.impl,
                                      index_clusters=args.index_clusters,
                                      shards=args.shards,
@@ -445,44 +476,40 @@ def main(argv=None) -> None:
                                      balance_boundary=args.balance_boundary,
                                      ingest=args.ingest_rate > 0,
                                      rebuild_tail_frac=args.rebuild_tail_frac)
+    index = estimators["specificity"].hist.index
+    if index is not None:
+        index.obs = hub
     queries = generate_queries(corpus, n_queries=args.queries,
                                n_filters=args.filters, seed=args.seed)
+    stats = None
     if args.concurrency > 1:
-        serve_concurrent(
+        stats = serve_concurrent(
             corpus, estimators, queries, est_name=args.estimator,
             seed=args.seed, concurrency=args.concurrency,
             window_ms=args.window_ms, max_batch=args.max_batch,
             cache_size=args.cache_size, cache_bits=args.cache_bits,
             passes=args.passes, deadline_ms=args.deadline_ms,
             max_queue=args.max_queue, degraded_ok=args.degraded_ok,
-            chaos_spec=args.chaos, ingest_rate=args.ingest_rate)
+            chaos_spec=args.chaos, ingest_rate=args.ingest_rate,
+            obs=hub)
     else:
-        serve_sequential(corpus, estimators, queries, seed=args.seed)
-    index = estimators["specificity"].hist.index
-    if index is not None:
-        s = index.stats()
-        if getattr(index, "is_mutable", False):
-            last = (f"; last rebuild {s['last_rebuild_s']:.2f}s ("
-                    + ("incremental" if s["last_rebuild_incremental"]
-                       else "full") + ")") if s["rebuilds"] else ""
-            print(f"\nmutable store: {s['inserts']} inserts, "
-                  f"{s['deletes']} deletes, {s['rebuilds']} background "
-                  f"rebuilds (generation {s['generation']}, version "
-                  f"{s['version']}); live {s['n_live']} = base "
-                  f"{s['base_live']} (+{s['base_dead']} tombstoned) + "
-                  f"hot tail {s['tail_live']}{last}")
-            s = s["base_stats"]
-        print(f"\nindex: {s['probes']} pruned probes, "
-              f"{s['rows_scanned']}/{s['rows_full_equiv']} rows scanned "
-              f"(scan_fraction={s['scan_fraction']:.0%}) across "
-              f"{s['launches']} kernel launches")
-        if "per_shard" in s:
-            fr = [p["scan_fraction"] for p in s["per_shard"]]
-            print("per-shard scan fraction: ["
-                  + ", ".join(f"{f:.0%}" for f in fr)
-                  + f"] (spread {s['spread']:.0%} = boundary-work "
-                  f"imbalance; probes pay the max, "
-                  f"{s['max_scan_fraction']:.0%})")
+        serve_sequential(corpus, estimators, queries, seed=args.seed,
+                         obs=hub)
+    snap = obs_report.build_snapshot(
+        registry=hub.registry, coalescer=stats,
+        index=index.stats() if index is not None else None,
+        mutable=bool(getattr(index, "is_mutable", False)))
+    print()
+    print(obs_report.render(snap))
+    if args.metrics_json:
+        obs_report.write_json(snap, args.metrics_json)
+        print(f"metrics snapshot -> {args.metrics_json}")
+    if tracer is not None:
+        if stats is not None:
+            hub.write_trace_summary(stats)
+        tracer.close()
+        print(f"trace spans -> {args.trace_out} "
+              f"({tracer.emitted} records, sample=1/{args.trace_sample})")
 
 
 if __name__ == "__main__":

@@ -71,6 +71,8 @@ class RetryPolicy:
     multiplier: float = 2.0
     max_delay_s: float = 1.0
     policy: FaultPolicy = dataclasses.field(default_factory=FaultPolicy)
+    on_retry: Callable | None = None    # default (attempt, exc) observer;
+    #                                     a per-call on_retry overrides it
 
     def delay_s(self, attempt: int) -> float:
         return min(self.base_delay_s * self.multiplier ** attempt,
@@ -78,6 +80,8 @@ class RetryPolicy:
 
     def call(self, fn: Callable, *args, on_retry: Callable | None = None,
              sleep: Callable[[float], None] = time.sleep, **kwargs):
+        if on_retry is None:
+            on_retry = self.on_retry
         for attempt in range(self.max_retries + 1):
             try:
                 return fn(*args, **kwargs)
@@ -101,22 +105,32 @@ class CircuitBreaker:
     the breaker; a trial failure re-opens it (restarting the cooldown).
     ``is_open`` is a non-consuming read for fast-path checks (it never
     starts a trial). ``clock`` is injectable for deterministic tests.
+    ``on_transition(old, new)`` observes every state change (fired
+    OUTSIDE the breaker lock, so observers may take their own locks);
+    the serving coalescer wires it to the telemetry event stream.
     Thread-safe.
     """
 
     def __init__(self, failure_threshold: int = 5, cooldown_s: float = 30.0,
-                 *, clock: Callable[[], float] = time.monotonic):
+                 *, clock: Callable[[], float] = time.monotonic,
+                 on_transition: Callable[[str, str], None] | None = None):
         if failure_threshold < 1:
             raise ValueError(
                 f"failure_threshold must be >= 1, got {failure_threshold}")
         self.failure_threshold = failure_threshold
         self.cooldown_s = cooldown_s
         self.clock = clock
+        self.on_transition = on_transition
         self._lock = threading.Lock()
         self.state = "closed"           # closed | open | half-open
         self.failures = 0               # consecutive
         self.opens = 0
         self._opened_at = 0.0
+
+    def _fire(self, transition: tuple | None) -> None:
+        cb = self.on_transition
+        if cb is not None and transition is not None:
+            cb(*transition)
 
     @property
     def is_open(self) -> bool:
@@ -127,30 +141,41 @@ class CircuitBreaker:
 
     def allow(self) -> bool:
         """Consuming check: open + cooldown elapsed admits one trial."""
+        fire = None
         with self._lock:
             if self.state == "closed":
-                return True
-            if self.state == "open":
+                out = True
+            elif self.state == "open":
                 if self.clock() - self._opened_at >= self.cooldown_s:
                     self.state = "half-open"
-                    return True
-                return False
-            return True                 # half-open: trial in progress
+                    fire = ("open", "half-open")
+                    out = True
+                else:
+                    out = False
+            else:
+                out = True              # half-open: trial in progress
+        self._fire(fire)
+        return out
 
     def record_success(self) -> None:
         with self._lock:
+            old = self.state
             self.failures = 0
             self.state = "closed"
+        self._fire((old, "closed") if old != "closed" else None)
 
     def record_failure(self) -> None:
+        fire = None
         with self._lock:
             self.failures += 1
             if (self.state == "half-open"
                     or self.failures >= self.failure_threshold):
                 if self.state != "open":
                     self.opens += 1
+                    fire = (self.state, "open")
                 self.state = "open"
                 self._opened_at = self.clock()
+        self._fire(fire)
 
     def stats(self) -> dict:
         with self._lock:

@@ -1,0 +1,384 @@
+"""Telemetry subsystem (PR 8): metrics registry, trace spans, q-error
+accounting, and the guarantees the serving stack leans on:
+
+  * **parity** — probe results are bitwise identical with telemetry
+    fully on (registry + sample=1 tracer) and fully off; telemetry
+    observes host-side only, by construction;
+  * **overhead** — the registry hot path (counter incs + histogram
+    observes + a sampled span) costs < 5% of one coalesced-serve
+    request;
+  * **one source of truth** — ``stats()``, the registry snapshot, and
+    the trace spans reconcile exactly (chaos-storm variant in
+    tests/test_robustness.py);
+  * **honest q-error** — degraded (bound-only) plans record interval
+    width + containment, never a fake point q-error.
+"""
+
+import json
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.estimators import Estimate
+from repro.core.histogram import SemanticHistogram
+from repro.core.metrics import q_error
+from repro.core.optimizer import QueryPlan, execute_cascade
+from repro.core.synthetic import make_corpus
+from repro.launch.coalescer import CoalescerConfig, PredicateCoalescer
+from repro.obs import (
+    LATENCY_MS_EDGES,
+    QERROR_EDGES,
+    Histogram,
+    MetricsRegistry,
+    ObsHub,
+    Tracer,
+    get_flush_ctx,
+    set_flush_ctx,
+)
+
+
+def _unit_rows(rng, n, d):
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+# ------------------------------------------------------------- registry
+
+
+def test_histogram_exact_percentiles(rng):
+    reg = MetricsRegistry()
+    h = reg.histogram("t.lat", edges=LATENCY_MS_EDGES)
+    vals = rng.lognormal(mean=1.0, sigma=1.5, size=1000)
+    for v in vals:
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 1000
+    for q, key in ((50, "p50"), (95, "p95"), (99, "p99")):
+        assert s[key] == pytest.approx(np.percentile(vals, q), rel=1e-12)
+    assert s["min"] == vals.min() and s["max"] == vals.max()
+    # bucket counts cover every observation (nonzero buckets only)
+    assert sum(c for _, c in s["buckets"]) == 1000
+    # buffer doubling kept every raw value, in order
+    np.testing.assert_array_equal(h.values(), vals)
+
+
+def test_empty_histogram_and_zero_percentile():
+    h = Histogram("x", threading.Lock())
+    assert h.summary() == {"count": 0}
+    assert h.percentile(95) == 0.0
+
+
+def test_registry_get_or_create_is_idempotent_and_typed():
+    reg = MetricsRegistry()
+    c1 = reg.counter("a")
+    assert reg.counter("a") is c1
+    with pytest.raises(TypeError, match="already registered"):
+        reg.gauge("a")
+    with pytest.raises(TypeError):
+        reg.histogram("a")
+    g = reg.gauge("g")
+    g.set(2.0)
+    g.record_max(1.0)       # lower: ignored
+    g.record_max(7.5)
+    assert g.value == 7.5
+
+
+def test_registry_thread_safety():
+    reg = MetricsRegistry()
+    c = reg.counter("hits")
+    h = reg.histogram("lat")
+
+    def worker():
+        for i in range(1000):
+            c.inc()
+            h.observe(float(i))
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 8000
+    assert h.count == 8000
+
+
+def test_snapshot_schema():
+    reg = MetricsRegistry()
+    reg.counter("z.c").inc(3)
+    reg.gauge("a.g").set(1.5)
+    reg.histogram("m.h").observe(2.0)
+    snap = reg.snapshot()
+    assert set(snap) == {"counters", "gauges", "histograms"}
+    assert snap["counters"] == {"z.c": 3}
+    assert snap["gauges"] == {"a.g": 1.5}
+    assert snap["histograms"]["m.h"]["count"] == 1
+    # edges families are sane: q-error starts at 1.0 (>= 1 by definition)
+    assert QERROR_EDGES[0] == pytest.approx(1.0)
+
+
+# --------------------------------------------------------------- tracer
+
+
+def test_tracer_sampling_and_jsonl(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    with Tracer(path, sample=3) as tr:
+        hits = [tr.sample_hit("submit") for _ in range(10)]
+        assert hits == [True, False, False] * 3 + [True]   # 1st included
+        tr.emit("submit", resolution="cache_hits", pred=0)
+        tr.emit("submit", resolution="probe_scored", pred=1)
+        tr.emit("flush", batch=2)
+        assert tr.next_id() < tr.next_id()      # monotonic ids
+    recs = [json.loads(line) for line in open(path)]
+    assert [r["kind"] for r in recs] == ["submit", "submit", "flush"]
+    assert tr.span_counts() == {"submit": 2, "flush": 1}
+    assert tr.submit_counts() == {"cache_hits": 1, "probe_scored": 1}
+    tr.close()                                   # idempotent
+    tr.emit("submit", resolution="late")         # after close: dropped
+    assert tr.emitted == 3
+    with pytest.raises(ValueError, match="sample"):
+        Tracer(str(tmp_path / "u.jsonl"), sample=0)
+
+
+def test_flush_ctx_is_thread_local():
+    set_flush_ctx(7)
+    seen = []
+    t = threading.Thread(target=lambda: seen.append(get_flush_ctx()))
+    t.start()
+    t.join()
+    assert get_flush_ctx() == 7 and seen == [None]
+    set_flush_ctx(None)
+    assert get_flush_ctx() is None
+
+
+def test_scan_span_only_inside_flush_ctx(tmp_path):
+    hub = ObsHub(tracer=Tracer(str(tmp_path / "t.jsonl")))
+    st = {"launches": 1, "rows_scanned": 10, "rows_full_equiv": 100,
+          "scan_fraction": 0.1}
+    hub.index_scan(st, fraction=0.1)            # outside a flush: no span
+    set_flush_ctx(42)
+    try:
+        hub.index_scan(st, fraction=0.1)
+    finally:
+        set_flush_ctx(None)
+    hub.tracer.close()
+    assert hub.tracer.span_counts() == {"scan": 1}
+    assert hub.registry.counter("index.rows_scanned").value == 20
+    assert hub.registry.gauge("index.scan_fraction").value == 0.1
+
+
+# ------------------------------------------------- parity & reconciliation
+
+
+def test_probe_results_bitwise_equal_with_telemetry_on(rng, tmp_path):
+    """The acceptance bar: full telemetry (registry + sample=1 tracer)
+    must not perturb a single bit of any probe result."""
+    x = _unit_rows(rng, 400, 32)
+    hist = SemanticHistogram(jnp.asarray(x))
+    preds = x[:6]
+    thrs = np.linspace(0.3, 0.9, 6).astype(np.float32)
+
+    def run(obs):
+        with PredicateCoalescer(
+                hist, CoalescerConfig(max_batch=3, window_ms=5),
+                obs=obs) as coal:
+            outs = []
+            for lo in range(0, 6, 3):
+                outs += coal.probe_outcomes(preds[lo:lo + 3],
+                                            thrs[lo:lo + 3])
+            return [(o.sel, o.lo, o.hi, o.degraded) for o in outs]
+
+    tr = Tracer(str(tmp_path / "t.jsonl"), sample=1)
+    traced = run(ObsHub(tracer=tr))
+    tr.close()
+    plain = run(None)                            # coalescer-default hub
+    assert traced == plain                       # bitwise float equality
+    assert tr.submit_counts().get("probe_scored", 0) == 6
+
+
+def test_stats_registry_and_spans_reconcile(rng, tmp_path):
+    """stats() reads the registry handles, and at sample=1 the submit
+    spans partition requests exactly like the counters do."""
+    x = _unit_rows(rng, 300, 32)
+    hist = SemanticHistogram(jnp.asarray(x))
+    tr = Tracer(str(tmp_path / "t.jsonl"), sample=1)
+    hub = ObsHub(tracer=tr)
+    with PredicateCoalescer(
+            hist, CoalescerConfig(max_batch=4, window_ms=5),
+            obs=hub) as coal:
+        coal.probe_outcomes(x[:4], np.full(4, 0.8, np.float32))
+        coal.probe_outcomes(x[:4], np.full(4, 0.8, np.float32))  # hits
+        st = coal.stats()
+    hub.write_trace_summary(st)
+    tr.close()
+    assert st["requests"] == 8
+    assert st["probe_scored"] == 4 and st["cache_hits"] == 4
+    snap = hub.registry.snapshot()["counters"]
+    for name in ("requests", "probe_scored", "cache_hits",
+                 "coalesced_dups", "shed", "degraded", "errors"):
+        assert snap[f"coalescer.{name}"] == st[name], name
+    sub = tr.submit_counts()
+    assert sum(sub.values()) == st["requests"]
+    for bucket, n in sub.items():
+        assert st[bucket] == n, (bucket, sub)
+    # the closing summary record repeats the same totals
+    summary = json.loads(open(str(tmp_path / "t.jsonl")).readlines()[-1])
+    assert summary["kind"] == "summary"
+    assert summary["requests"] == 8 and summary["cache_hits"] == 4
+    # latency breakdown observed once per scored/hit request
+    hists = hub.registry.snapshot()["histograms"]
+    assert hists["serve.request_ms"]["count"] == 8
+    assert hists["serve.probe_ms"]["count"] == 4
+
+
+def test_registry_hot_path_overhead_under_5pct(rng):
+    """Micro-bench: the REGISTRY per-request hot path (two counter
+    incs, gauge max, all four phase-histogram observes) must cost < 5%
+    of one measured coalesced-serve request. Fails loudly if the hot
+    path ever grows a name lookup or per-call allocation. (The tracer
+    is bounded separately — its cost is governed by ``--trace-sample``,
+    and the parity test pins its correctness.)"""
+    x = _unit_rows(rng, 400, 32)
+    hist = SemanticHistogram(jnp.asarray(x))
+    n_req, reps = 0, 3
+    with PredicateCoalescer(
+            hist, CoalescerConfig(max_batch=8, window_ms=2)) as coal:
+        coal.probe_outcomes(x[:8], np.full(8, 0.8, np.float32))  # warmup
+        t0 = time.perf_counter()
+        for r in range(reps):
+            lo = 8 * (r + 1)
+            coal.probe_outcomes(x[lo:lo + 8],
+                                np.full(8, 0.8, np.float32))
+            n_req += 8
+        serve_per_req = (time.perf_counter() - t0) / n_req
+
+    reg = MetricsRegistry()
+    c_req = reg.counter("coalescer.requests")
+    c_res = reg.counter("coalescer.probe_scored")
+    hwm = reg.gauge("coalescer.queue_depth_hwm")
+    lat = [reg.histogram(f"serve.{ph}_ms")
+           for ph in ("queue_wait", "probe", "combine", "request")]
+    n = 5000
+    t0 = time.perf_counter()
+    for i in range(n):
+        c_req.inc()
+        c_res.inc()
+        hwm.record_max(i % 7)
+        for h in lat:
+            h.observe(0.5)
+    registry_per_req = (time.perf_counter() - t0) / n
+    ratio = registry_per_req / serve_per_req
+    assert ratio < 0.05, (
+        f"registry hot path is {ratio:.1%} of a serve request "
+        f"({registry_per_req*1e6:.1f}us vs {serve_per_req*1e6:.1f}us)")
+
+
+# ------------------------------------------------------ q-error accounting
+
+
+def _plan(node_id, est):
+    return QueryPlan(filter_order=[node_id], estimates=[est],
+                     est_latency_s=0.0, est_vlm_calls=0.0)
+
+
+def test_record_plan_exact_estimate_records_q_error():
+    c = make_corpus("wildlife", n_images=200, seed=0)
+    hub = ObsHub()
+    node = c.predicate_nodes()[0]
+    true = c.true_selectivity(node)
+    est = Estimate(selectivity=min(1.0, true * 2 + 0.01), measured_s=0.0,
+                   vlm_calls=0.0)
+    hub.record_plan("specificity", c, _plan(node, est))
+    h = hub.registry.histogram("qerror.specificity", edges=QERROR_EDGES)
+    assert h.count == 1
+    expect = q_error(est.selectivity, true, len(c.images))
+    assert h.values()[0] == pytest.approx(expect, rel=1e-12)
+    assert expect >= 1.0
+    snap = hub.registry.snapshot()
+    assert "qerror.bound_contained" not in snap["counters"]
+
+
+def test_record_plan_degraded_records_interval_not_point(rng):
+    """A bound-only estimate must never fake a point q-error: it records
+    the certified interval's width and whether the truth fell inside."""
+    c = make_corpus("wildlife", n_images=200, seed=0)
+    node = c.predicate_nodes()[0]
+    true = c.true_selectivity(node)
+
+    hub = ObsHub()
+    lo, hi = max(0.0, true - 0.1), min(1.0, true + 0.2)
+    est = Estimate(selectivity=0.5 * (lo + hi), measured_s=0.0,
+                   vlm_calls=0.0,
+                   extra={"degraded": True, "sel_interval": (lo, hi)})
+    hub.record_plan("ensemble", c, _plan(node, est))
+    snap = hub.registry.snapshot()
+    w = snap["histograms"]["qerror.degraded_interval_width"]
+    assert w["count"] == 1 and w["max"] == pytest.approx(hi - lo)
+    assert snap["counters"]["qerror.bound_contained"] == 1
+    assert "qerror.bound_violations" not in snap["counters"]
+    assert "qerror.ensemble" not in snap["histograms"]
+
+    # an interval that misses the truth is a violation, loudly counted
+    hub2 = ObsHub()
+    bad = Estimate(selectivity=true + 0.2, measured_s=0.0, vlm_calls=0.0,
+                   extra={"degraded": True,
+                          "sel_interval": (true + 0.1, true + 0.3)})
+    hub2.record_plan("ensemble", c, _plan(node, bad))
+    snap2 = hub2.registry.snapshot()
+    assert snap2["counters"]["qerror.bound_violations"] == 1
+    assert "qerror.bound_contained" not in snap2["counters"]
+
+
+def test_execute_cascade_feeds_q_error_accounting():
+    c = make_corpus("wildlife", n_images=200, seed=0)
+    node = c.predicate_nodes()[1]
+    est = Estimate(selectivity=0.3, measured_s=0.0, vlm_calls=0.0)
+    hub = ObsHub()
+    res = execute_cascade(c, _plan(node, est), seed=0, obs=hub,
+                          est_name="kvbatch")
+    assert res.vlm_calls == len(c.images)
+    assert hub.registry.histogram("qerror.kvbatch",
+                                  edges=QERROR_EDGES).count == 1
+    # obs=None (the default): no accounting, no error
+    execute_cascade(c, _plan(node, est), seed=0)
+
+
+# ------------------------------------------------------- events & rebuild
+
+
+def test_hub_events_and_rebuild(tmp_path):
+    hub = ObsHub(tracer=Tracer(str(tmp_path / "t.jsonl")))
+    hub.event("retry", flush=1, attempt=0, error="TransientError")
+    hub.event("retry", flush=2, attempt=0, error="TransientError")
+    hub.rebuild(seconds=0.25, incremental=True, generation=3)
+    hub.tracer.close()
+    snap = hub.registry.snapshot()
+    assert snap["counters"]["events.retry"] == 2
+    assert snap["counters"]["events.generation_swap"] == 1
+    assert snap["counters"]["index.generation_swaps"] == 1
+    assert snap["gauges"]["index.generation"] == 3
+    assert snap["histograms"]["index.rebuild_s"]["count"] == 1
+    recs = [json.loads(line) for line in open(str(tmp_path / "t.jsonl"))]
+    assert [r["event"] for r in recs] == ["retry", "retry",
+                                          "generation_swap"]
+
+
+def test_breaker_transitions_emit_events(rng):
+    from repro.runtime.fault_tolerance import CircuitBreaker
+
+    seen = []
+    clk = {"t": 0.0}
+    br = CircuitBreaker(failure_threshold=2, cooldown_s=1.0,
+                        clock=lambda: clk["t"],
+                        on_transition=lambda old, new: seen.append(
+                            (old, new)))
+    br.record_failure()
+    br.record_failure()                          # -> open
+    assert seen == [("closed", "open")]
+    clk["t"] = 2.0
+    assert br.allow()                            # -> half-open trial
+    br.record_success()                          # -> closed
+    assert seen == [("closed", "open"), ("open", "half-open"),
+                    ("half-open", "closed")]

@@ -556,3 +556,117 @@ def test_chaos_sweep_is_hang_free_and_lossless(rng):
     assert st["flusher_deaths"] >= 1, "the kill-at=5 launch must have fired"
     assert st["flusher_restarts"] >= 1
     _assert_reconciles(st)
+
+
+@pytest.mark.chaos
+def test_chaos_storm_with_full_telemetry_reconciles(rng, tmp_path):
+    """PR 8: the storm (failures + a flusher kill + restart) with the
+    registry AND a sample=1 tracer attached — the legacy ``stats()``
+    dict, the registry counters, the per-resolution submit-span counts,
+    and the JSONL summary record must all agree EXACTLY, and exact
+    answers must stay bitwise equal to an untraced run."""
+    import json
+
+    from repro.obs import ObsHub, Tracer
+
+    x, _ = clustered_unit_vectors(600, 32, n_centers=10, spread=0.2, seed=6)
+    cs = build_clustered_store(x, 10, iters=4, seed=0, impl="xla")
+    n_threads, per = 6, 3
+    thr = np.full(per, 0.8, np.float32)
+
+    def storm(obs):
+        hist = SemanticHistogram(jnp.asarray(x), index=cs)
+        chaos = ChaosInjector(ChaosConfig(seed=9, fail_rate=0.3,
+                                          kill_flusher_at=2))
+        outs = {}
+        with PredicateCoalescer(
+                hist, CoalescerConfig(max_batch=6, window_ms=20,
+                                      degraded_ok=True),
+                chaos=chaos,
+                retry=RetryPolicy(max_retries=1, base_delay_s=0.001),
+                obs=obs) as coal:
+
+            def worker(i):
+                outs[i] = coal.probe_outcomes(
+                    x[per * i:per * (i + 1)], thr)
+
+            threads = [threading.Thread(target=worker, args=(i,))
+                       for i in range(n_threads)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=60)
+            # kill fired? then the restart must have been counted too
+            st = coal.stats()
+        return outs, st
+
+    path = str(tmp_path / "storm.jsonl")
+    tr = Tracer(path, sample=1)
+    hub = ObsHub(tracer=tr)
+    outs, st = storm(hub)
+    hub.write_trace_summary(st)
+    tr.close()
+
+    assert len(outs) == n_threads
+    assert st["requests"] == n_threads * per
+    assert st["errors"] == 0                    # degraded_ok: no raises
+    _assert_reconciles(st)
+    if st["flusher_deaths"]:
+        assert st["flusher_restarts"] >= 1
+
+    # 1. registry counters == legacy stats() buckets (one source of truth)
+    counters = hub.registry.snapshot()["counters"]
+    for name in ("requests", "probe_scored", "cache_hits",
+                 "coalesced_dups", "shed", "degraded", "errors",
+                 "retries", "probe_failures", "flusher_deaths",
+                 "flusher_restarts", "probes_fired"):
+        assert counters[f"coalescer.{name}"] == st[name], name
+
+    # 2. sample=1 submit spans partition requests exactly like counters
+    sub = tr.submit_counts()
+    assert sum(sub.values()) == st["requests"]
+    for bucket, count in sub.items():
+        assert st[bucket] == count, (bucket, sub, st)
+
+    # 3. the JSONL summary record carries the same totals + span counts
+    recs = [json.loads(line) for line in open(path)]
+    summary = recs[-1]
+    assert summary["kind"] == "summary"
+    for name in ("requests", "probe_scored", "cache_hits",
+                 "coalesced_dups", "shed", "degraded", "errors"):
+        assert summary[name] == st[name], name
+    n_submit = sum(1 for r in recs if r["kind"] == "submit")
+    assert n_submit == st["requests"]
+    assert summary["spans"].get("submit", 0) == n_submit
+    # chaos injections surfaced as events on the same stream
+    if st["chaos"]["injected_failures"]:
+        assert counters.get("events.chaos_fail", 0) \
+            == st["chaos"]["injected_failures"]
+    if st["flusher_deaths"]:
+        assert counters["events.flusher_death"] == st["flusher_deaths"]
+
+    # 4. bitwise parity under faults: a *sequential* storm (so batch
+    # composition — and with it each seeded per-launch injection — is
+    # deterministic) resolves identically with telemetry on and off
+    def seq_storm(obs):
+        hist = SemanticHistogram(jnp.asarray(x), index=cs)
+        chaos = ChaosInjector(ChaosConfig(seed=9, fail_rate=0.5,
+                                          kill_flusher_at=2))
+        with PredicateCoalescer(
+                hist, CoalescerConfig(max_batch=per, window_ms=20,
+                                      degraded_ok=True),
+                chaos=chaos, retry=RetryPolicy(max_retries=0),
+                obs=obs) as coal:
+            outs = [coal.probe_outcomes(x[per * i:per * (i + 1)], thr)
+                    for i in range(4)]
+            return ([(o.sel, o.lo, o.hi, o.degraded)
+                     for batch in outs for o in batch], coal.stats())
+
+    tr2 = Tracer(str(tmp_path / "seq.jsonl"), sample=1)
+    traced, st_a = seq_storm(ObsHub(tracer=tr2))
+    tr2.close()
+    plain, st_b = seq_storm(None)
+    assert traced == plain, "results diverged under telemetry"
+    assert any(d for *_, d in traced), "chaos must actually degrade some"
+    for name in ("requests", "probe_scored", "degraded", "errors"):
+        assert st_a[name] == st_b[name], name
