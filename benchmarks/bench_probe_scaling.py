@@ -8,7 +8,9 @@ layer: cross-query coalescing (one probe for G concurrent queries' filters
 vs one probe per query) and the LRU predicate cache on a hot workload
 (repeated predicates skip the scan entirely), (d) the cluster-pruned index:
 scan fraction + speedup vs selectivity on a clustered store (exact counts,
-sublinear rows at low selectivity), (e) the sharded-probe collective
+sublinear rows at low selectivity), (d') compound conjunction probes — one
+joint-bound pass for B correlated predicates, bitwise equal to the composed
+full scan — (e) the sharded-probe collective
 cost model: counts/top-k combine is O(B*k), so probe latency stays flat as
 the store scales across chips (DESIGN.md §2), and (f) boundary-mass-
 balanced index builds: on a Zipf-skewed grouped store, contiguous shard
@@ -386,6 +388,39 @@ def main() -> list[str]:
         f"scan_frac={cs.stats()['scan_fraction']:.1%},"
         f"err={abs(kth_full-kth_prn):.1e}")
 
+    # compound probes (PR 9): one joint-bound pass over a B-way conjunction
+    # of correlated predicates (nearest rows of the same planted cluster),
+    # each conjunct calibrated to ~1% marginal selectivity. Joint
+    # classification prunes at least as hard as the per-predicate union;
+    # counts stay bitwise equal to the composed full scan, and check_bench
+    # gates that these rows stay within tolerance of the single-predicate
+    # probe_pruned_cpu sel=1.0% baseline.
+    near = np.argsort(-(xc @ pred_idx))[:4]
+    preds_near = xc[near]
+    kth_c = max(1, int(0.01 * n_idx))
+    thr_near = np.array(
+        [np.sort(1.0 - xc @ p)[kth_c - 1] + 1e-6 for p in preds_near])
+    for b in (2, 3, 4):
+        pb, tb_ = preds_near[:b], thr_near[:b]
+        c_cfull = hist_full.count_compound(pb, tb_)    # composed full scan
+        cs.reset_stats()
+        c_cprn = hist_idx.count_compound(pb, tb_)      # warm pruned shapes
+        assert c_cprn == c_cfull, (b, c_cprn, c_cfull)
+        frac = cs.stats()["scan_fraction"]
+        iters = 3
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            hist_full.count_compound(pb, tb_)
+        full_us = (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            hist_idx.count_compound(pb, tb_)
+        prn_us = (time.perf_counter() - t0) / iters * 1e6
+        add("probe_compound_cpu", f"N={n_idx},K={k_idx},B={b},sel=1.0%",
+            f"{prn_us:.0f}",
+            f"scan_frac={frac:.1%},full={full_us:.0f}us,"
+            f"speedup={full_us/prn_us:.1f}x,count_diff={c_cprn - c_cfull}")
+
     # mutable store (PR 7): (a) incremental vs full index rebuild after 10%
     # drift — the k-means warm start + batched re-split + shard-sticky
     # repack must make catching up with drift >= 3x cheaper than building
@@ -530,6 +565,8 @@ def main() -> list[str]:
             "single_device": {"dims": 1152, "store_rows": [10_000, 100_000,
                                                            500_000]},
             "pruned_index": {"n": 100_000, "dims": 256, "k_clusters": 256},
+            "compound": {"n": 100_000, "dims": 256, "k_clusters": 256,
+                         "widths": [2, 3, 4], "marginal_sel": 0.01},
             "sharded": {"n": 100_000, "dims": 256, "shards": 4,
                         "k_per_shard": 160},
             "balanced": {"n": 100_000, "dims": 256, "shards": 4,

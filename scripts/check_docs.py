@@ -41,7 +41,7 @@ REQUIRED_FLAGS = {
                            "--split-radius", "--balance-boundary",
                            "--deadline-ms", "--chaos", "--ingest-rate",
                            "--rebuild-tail-frac", "--metrics-json",
-                           "--trace-out"),
+                           "--trace-out", "--compound", "--feedback"),
 }
 
 # substrings README/docs must keep mentioning somewhere (operator-facing
@@ -76,6 +76,16 @@ REQUIRED_TOPICS = {
                "section) must stay documented — it is how operators see "
                "estimator quality in production, not just in offline "
                "benchmarks",
+    "compound": "compound-predicate estimation (PR 9: the joint "
+                "cluster-bound pass — conjunctions/disjunctions "
+                "classified against every conjunct at once, one masked "
+                "launch over the union of surviving boundary segments, "
+                "bitwise equal to the composed full scans — plus "
+                "conditional-selectivity cascade ordering via serve "
+                "--compound and the learned observed-selectivity "
+                "feedback loop via serve --feedback) must stay "
+                "documented — it is how correlated multi-filter queries "
+                "escape the independence assumption",
 }
 
 

@@ -13,7 +13,10 @@ an ingest smoke (mutable store: hot-tail inserts + tombstone deletes +
 a background rebuild, probes bitwise equal to a fresh full scan at every
 step), an observability smoke (a fully-instrumented serve run: metrics
 snapshot + sampled trace spans, validated to reconcile exactly against
-each other — docs/observability.md), and a guard that the tier-1 suite
+each other — docs/observability.md), a compound-planner smoke (correlated
+2/3/4-filter conjunctions: independence-assumption vs compound-probe
+estimates vs ground truth, plus coalesced compound planning with exact
+counter reconciliation), and a guard that the tier-1 suite
 actually collects hypothesis property tests (they silently skipped for
 several PRs when the package was missing — the vendored shim makes that
 impossible now)
@@ -415,6 +418,113 @@ def run_ingest_smoke():
           f"live={ms.n_live}, gen={ms.generation}")
 
 
+def run_compound_smoke():
+    """Compound planning end to end on correlated conjunctions: joint
+    (compound-probe) estimates vs the independence assumption vs ground
+    truth for 2/3/4-filter plans — the compound median q-error must not
+    lose at any width — and coalesced compound planning keeps the
+    coalescer's resolution counters reconciling exactly."""
+    from repro.core.estimators import Estimate
+    from repro.core.histogram import SemanticHistogram
+    from repro.core.metrics import q_error
+    from repro.core.optimizer import plan_query
+    from repro.core.synthetic import make_corpus
+    from repro.index import build_clustered_store
+    from repro.launch.coalescer import CoalescerConfig, PredicateCoalescer
+
+    corpus = make_corpus("wildlife", n_images=600, seed=1)
+    n = len(corpus.images)
+    cs = build_clustered_store(np.asarray(corpus.images, np.float32), 24,
+                               iters=6, seed=0, impl="xla")
+    hist = SemanticHistogram(jnp.asarray(corpus.images), impl="xla",
+                             index=cs)
+    pset = set(corpus.predicate_nodes())
+
+    emb_thr = {}
+
+    def calib(nid):
+        """Truth-calibrated (embedding, threshold, marginal sel): isolates
+        joint-vs-independent estimation from threshold-calibration error."""
+        if nid not in emb_thr:
+            emb = corpus.text_embedding(nid, 0)
+            d = np.sort(1.0 - corpus.images @ emb)
+            k = len(corpus.true_matches(nid))
+            emb_thr[nid] = (emb, float(d[max(k - 1, 0)] + 1e-6), k / n)
+        return emb_thr[nid]
+
+    # correlated conjunctions: ancestor->descendant chains in the concept
+    # tree (the workload where the independence assumption is worst)
+    chains = {2: [], 3: [], 4: []}
+
+    def walk(nid, path):
+        path = path + [nid]
+        if 2 <= len(path) <= 4 and all(p in pset for p in path):
+            chains[len(path)].append(list(path))
+        if len(path) < 4:
+            for ch in corpus.concepts[nid].children:
+                walk(ch, path)
+
+    for r in (nid for nid, c in corpus.concepts.items()
+              if c.parent is None):
+        walk(r, [])
+
+    report = []
+    for b in (2, 3, 4):
+        assert chains[b], f"no depth-{b} correlated chains in the corpus"
+        qe_ind, qe_comp = [], []
+        for q in chains[b][:8]:
+            cal = [calib(f) for f in q]
+            embs = np.stack([c[0] for c in cal])
+            thrs = np.asarray([c[1] for c in cal])
+            truth = set(corpus.true_matches(q[0]))
+            for f in q[1:]:
+                truth &= set(corpus.true_matches(f))
+            true_joint = len(truth) / n
+            ind = float(np.prod([c[2] for c in cal]))
+            comp = hist.selectivity_compound(embs, thrs, mode="and")
+            qe_ind.append(q_error(ind, true_joint, n))
+            qe_comp.append(q_error(comp, true_joint, n))
+        mi, mc = float(np.median(qe_ind)), float(np.median(qe_comp))
+        assert mc <= mi, (b, mc, mi)
+        report.append(f"B={b} {mi:.1f}->{mc:.1f}")
+
+    class CalibEstimator:
+        name = "calib"
+        supports_probe = True
+
+        def estimate_batch(self, node_ids, seed=0, probe=None):
+            embs = np.stack([calib(f)[0] for f in node_ids])
+            thrs = np.asarray([calib(f)[1] for f in node_ids])
+            sels = probe(embs, thrs) if probe is not None else \
+                hist.selectivity_batch(embs, thrs)
+            return [Estimate(float(s), 0.0, 0.0, threshold=float(t))
+                    for s, t in zip(sels, thrs)]
+
+        def compound_selectivity(self, node_ids, thresholds, seed=0):
+            embs = np.stack([calib(f)[0] for f in node_ids])
+            return hist.selectivity_compound(embs, np.asarray(thresholds),
+                                             mode="and")
+
+    est = CalibEstimator()
+    with PredicateCoalescer(hist, CoalescerConfig(window_ms=1.0)) as coal:
+        plans = [plan_query(q, est, coalescer=coal, compound=True)
+                 for q in (chains[2][0], chains[3][0], chains[4][0])]
+        stats = coal.stats()
+    for plan in plans:
+        assert plan.prefix_sels is not None
+        assert len(plan.prefix_sels) == len(plan.filter_order)
+        # joint prefix selectivity can only shrink as conjuncts are added
+        assert all(a >= b - 1e-12 for a, b in
+                   zip(plan.prefix_sels, plan.prefix_sels[1:])), plan
+    total = (stats["probe_scored"] + stats["cache_hits"]
+             + stats["coalesced_dups"] + stats["shed"]
+             + stats["degraded"] + stats["errors"])
+    assert stats["requests"] == total, stats
+    print(f"OK  compound_planner         q-error ind->compound "
+          f"{'; '.join(report)}; counters reconcile "
+          f"({stats['requests']} requests)")
+
+
 def run_obs_smoke():
     """Full telemetry end to end: a coalesced serve run in a subprocess
     with --metrics-json + sampled --trace-out, then validate the snapshot
@@ -510,7 +620,8 @@ if __name__ == "__main__":
     archs = argv or list(ASSIGNED)
     for smoke in (run_probe_smoke, run_coalescer_smoke, run_index_smoke,
                   run_sharded_smoke, run_balanced_smoke, run_chaos_smoke,
-                  run_ingest_smoke, run_obs_smoke, run_hypothesis_guard):
+                  run_ingest_smoke, run_obs_smoke, run_compound_smoke,
+                  run_hypothesis_guard):
         try:
             smoke()
         except Exception:

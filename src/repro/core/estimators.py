@@ -27,6 +27,7 @@ into one cross-query micro-batched probe (estimators advertising this with
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Any
 
@@ -187,15 +188,123 @@ class KVBatchEstimator:
 
 
 class EnsembleEstimator:
-    """Paper §3.3: average the two thresholds; most robust across datasets."""
+    """Paper §3.3: average the two thresholds; most robust across datasets.
+
+    Compound + feedback extensions (PR 9):
+
+    * ``compound_selectivity(node_ids, thresholds)`` estimates the joint
+      selectivity of a conjunction through the histogram's one-launch
+      compound probe (``supports_compound``), so ``plan_query`` can order
+      cascades by *conditional* instead of independent selectivities.
+    * ``feedback=True`` enables the Larch-style loop: ``observe`` (called
+      by ``execute_cascade`` after every plan) EMA-updates a multiplicative
+      log-space correction from observed-vs-predicted selectivity ratios,
+      applied to subsequent predictions.
+    * ``observed_cache`` (a ``PredicateCache``-shaped object) stores the
+      *observed* selectivities keyed by quantized predicate + store
+      version — repeated traffic then answers from ground truth and the
+      measured q-error converges to 1. Keys fold in ``hist.version``, so
+      a mutation invalidates every observed entry (staleness rule: an
+      observed selectivity is only trusted at the exact store version it
+      was measured against).
+    """
 
     supports_probe = True        # estimate_batch accepts probe= (coalescer)
+    supports_compound = True     # compound_selectivity available
 
-    def __init__(self, spec: SpecificityEstimator, kvb: KVBatchEstimator):
+    def __init__(self, spec: SpecificityEstimator, kvb: KVBatchEstimator, *,
+                 feedback: bool = False, observed_cache=None,
+                 feedback_alpha: float = 0.25):
         self.spec, self.kvb = spec, kvb
         self.hist = spec.hist
         self.corpus = spec.corpus
         self.name = "ensemble"
+        self.feedback = feedback
+        self.observed_cache = observed_cache
+        self.feedback_alpha = float(feedback_alpha)
+        self._log_corr = 0.0                 # EMA of log(observed/predicted)
+        self._corr_lock = threading.Lock()
+
+    # --------------------------------------------------- feedback helpers
+
+    def _correct(self, sel: float) -> float:
+        """Apply the learned multiplicative correction (identity until
+        feedback has observed anything)."""
+        if not self.feedback or self._log_corr == 0.0:
+            return float(sel)
+        return float(min(1.0, max(0.0, sel * np.exp(self._log_corr))))
+
+    def _observed_lookup(self, emb: np.ndarray) -> float | None:
+        """Observed marginal selectivity for this predicate at the CURRENT
+        store version, or None. A version bump changes the key, so stale
+        observations are never served."""
+        cache = self.observed_cache
+        if cache is None:
+            return None
+        return cache.get_observed(
+            cache.observed_key(emb, version=self.hist.version))
+
+    def observe(self, corpus, plan, observed_prefix,
+                seed: int = 0) -> None:
+        """Write one executed plan's ground truth back into the estimator.
+
+        Per-filter: EMA-update the log correction from the ratio of true
+        to predicted marginal selectivity (execution makes truth free —
+        same stance as ``obs.record_plan``), and cache each filter's
+        observed marginal under its version-keyed quantized embedding.
+        Per-prefix: cache the observed survival fraction of every cascade
+        prefix under the order-invariant compound key, so the compound
+        planner's next probe of the same conjunction answers from
+        observation.
+        """
+        eps = 1.0 / max(len(corpus.images), 1)
+        cache = self.observed_cache
+        ratios = []
+        embs, thrs = [], []
+        for i, (node_id, est) in enumerate(zip(plan.filter_order,
+                                               plan.estimates)):
+            true = float(corpus.true_selectivity(node_id))
+            ratios.append(np.log((true + eps)
+                                 / (float(est.selectivity) + eps)))
+            emb = corpus.text_embedding(node_id, seed)
+            embs.append(emb)
+            thrs.append(est.threshold)
+            if cache is not None:
+                cache.put_observed(
+                    cache.observed_key(emb, version=self.hist.version),
+                    true)
+                if i >= 1 and all(t is not None for t in thrs):
+                    cache.put_observed(
+                        cache.compound_key(np.stack(embs), thrs, "and",
+                                           version=self.hist.version),
+                        float(observed_prefix[i]))
+        if self.feedback and ratios:
+            with self._corr_lock:
+                self._log_corr = ((1.0 - self.feedback_alpha)
+                                  * self._log_corr
+                                  + self.feedback_alpha
+                                  * float(np.mean(ratios)))
+
+    # ----------------------------------------------------------- compound
+
+    def compound_selectivity(self, node_ids, thresholds, seed: int = 0,
+                             *, mode: str = "and") -> float:
+        """Joint selectivity of a conjunction/disjunction of calibrated
+        filters — one compound probe through the index's joint cluster
+        bounds. Consults the observed-selectivity cache first (keyed by
+        the order-invariant quantized compound key + store version)."""
+        embs = _predicate_embeddings(self.corpus, node_ids, seed)
+        thr = np.asarray(thresholds, np.float64)
+        cache = self.observed_cache
+        key = None
+        if cache is not None:
+            key = cache.compound_key(embs, thr, mode,
+                                     version=self.hist.version)
+            hit = cache.get_observed(key)
+            if hit is not None:
+                return float(hit)
+        sel = self.hist.selectivity_compound(embs, thr, mode=mode)
+        return self._correct(sel)
 
     def estimate(self, node_id: int, seed: int = 0) -> Estimate:
         e1 = self.spec.estimate(node_id, seed)
@@ -224,10 +333,20 @@ class EnsembleEstimator:
         thrs = 0.5 * (t_spec + t_kvb)
         sels = sel_batch(embs, thrs)
         dt = (time.perf_counter() - t0) / max(1, len(node_ids))
-        return [Estimate(float(s), dt, vlm_calls=1.0, threshold=float(t),
-                         extra={"sample_matches": int(m),
-                                "machine_cpu_s": machine_s})
-                for s, t, m in zip(sels, thrs, ms)]
+        out = []
+        for j, (s, t, m) in enumerate(zip(sels, thrs, ms)):
+            extra: dict = {"sample_matches": int(m),
+                           "machine_cpu_s": machine_s}
+            observed = self._observed_lookup(embs[j])
+            if observed is not None:
+                # ground truth from an executed plan at this exact store
+                # version beats any prediction — q-error 1 by definition
+                sel, extra["observed"] = float(observed), True
+            else:
+                sel = self._correct(float(s))
+            out.append(Estimate(sel, dt, vlm_calls=1.0, threshold=float(t),
+                                extra=extra))
+        return out
 
 
 class OracleEstimator:

@@ -384,6 +384,46 @@ class SemanticHistogram:
     def selectivity(self, pred: np.ndarray, threshold: float) -> float:
         return self.count_within(pred, threshold) / self.n
 
+    def count_compound(self, preds: np.ndarray, thresholds: np.ndarray, *,
+                       mode: str = "and") -> int:
+        """Exact match count of a conjunction ("and") / disjunction ("or")
+        of per-predicate threshold filters, in one pass.
+
+        preds (B, d) are the B conjuncts of ONE compound predicate,
+        thresholds (B,) their per-conjunct thresholds. With an index
+        attached the joint cluster-bound pass resolves most clusters with
+        zero rows read and ONE masked launch scores the surviving boundary
+        union; the result is bitwise-equal to composing per-predicate full
+        scans (the canonical batched XLA contraction — compound row sets
+        cannot route through the Pallas kernels, which return only counts
+        and top-k, never per-row masks).
+        """
+        if mode not in ("and", "or"):
+            raise ValueError(f"mode must be 'and' or 'or', got {mode!r}")
+        preds_np = np.asarray(preds, np.float32)
+        thr_np = np.asarray(thresholds, np.float32).reshape(-1)
+        if self._mutable:
+            count, _ = self.index.probe_compound(preds_np, thr_np,
+                                                 mode=mode)
+            return int(count)
+        if self.index is not None:
+            count, _ = self.index.probe_compound(preds_np, thr_np,
+                                                 mode=mode)
+            return int(count)
+        from repro.index.clustered import _compound_masked_xla
+
+        store = self._row_stable_store()
+        return int(_compound_masked_xla(
+            store, jnp.int32(self._n_static), jnp.asarray(preds_np),
+            jnp.asarray(thr_np), mode=mode))
+
+    def selectivity_compound(self, preds: np.ndarray,
+                             thresholds: np.ndarray, *,
+                             mode: str = "and") -> float:
+        """Compound selectivity: ``count_compound / n`` over live rows."""
+        return self.count_compound(preds, thresholds, mode=mode) \
+            / max(self.n, 1)
+
     def kth_smallest_distance(self, pred: np.ndarray, k: int) -> float:
         k = max(1, min(k, self.n))
         if self._mutable:

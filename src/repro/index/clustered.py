@@ -79,6 +79,25 @@ def _masked_probe_batch_xla(store, n_valid, preds, thr, *, k: int):
     return cosine_probe_batch_masked_ref(store, n_valid, preds, thr, k)
 
 
+@partial(jax.jit, static_argnames=("mode",))
+def _compound_masked_xla(store, n_valid, preds, thr, *, mode: str):
+    """One masked launch scoring a whole conjunction/disjunction.
+
+    Per-row distances come from the same ``nd,bd->bn`` contraction as every
+    batched scan twin, so each conjunct's per-row match decision is bitwise
+    the decision a full batched scan makes for that row — the compound
+    count is then exactly the AND/OR of the full scans' row sets. Dead
+    (padding) rows score +inf for every conjunct, so they match nothing
+    under either mode.
+    """
+    sims = jnp.einsum("nd,bd->bn", store.astype(f32), preds.astype(f32))
+    dists = jnp.where(jnp.arange(store.shape[0])[None, :] < n_valid,
+                      1.0 - sims, jnp.inf)
+    match = dists <= thr[:, None]                       # (B, n)
+    hit = match.all(axis=0) if mode == "and" else match.any(axis=0)
+    return hit.sum().astype(jnp.int32)
+
+
 @partial(jax.jit, static_argnames=("k",))
 def _masked_probe_xla(store, n_valid, pred, thr, *, k: int):
     """Scalar twin mirroring ``histogram._local_probe``'s ``nd,d->n``
@@ -422,6 +441,139 @@ class ClusteredStore:
         }
         self._record(stats, probes=1)
         return counts, np.asarray(topk), stats
+
+    # ----------------------------------------------------------- compound
+
+    @staticmethod
+    def _compound_classes(allin_pk: np.ndarray, allout_pk: np.ndarray,
+                          mode: str) -> tuple[np.ndarray, np.ndarray]:
+        """Joint (K,) all-in / all-out masks from per-predicate (B, K) ones.
+
+        AND: a cluster is all-out the moment ANY conjunct all-outs it, and
+        all-in only when EVERY conjunct all-ins it. OR is the De Morgan
+        dual. This is why conjunctions prune *harder* than per-predicate
+        probes: the joint all-out set is the union of the per-predicate
+        all-out sets, so the surviving boundary set is a subset of every
+        per-predicate boundary union.
+        """
+        if mode == "and":
+            return allin_pk.all(axis=0), allout_pk.any(axis=0)
+        return allin_pk.any(axis=0), allout_pk.all(axis=0)
+
+    def plan_compound(self, preds: np.ndarray, thr: np.ndarray, *,
+                      mode: str = "and",
+                      live_sizes: np.ndarray | None = None) -> ScanPlan:
+        """Classify every cluster against a whole conjunction/disjunction.
+
+        preds (B, d) are the B conjuncts of ONE compound predicate; thr (B,)
+        their per-conjunct thresholds. Unlike ``plan_scan`` — which unions
+        boundary sets across independent predicates — the per-conjunct
+        all-in/all-out sets are intersected *before* any boundary scan, so
+        the scan union only holds clusters the compound itself cannot
+        resolve. ``extra`` is (1, 1): the summed size of bound-resolved
+        all-in clusters (rows matching every conjunct / at least one,
+        by mode) outside the scan union.
+        """
+        if mode not in ("and", "or"):
+            raise ValueError(f"mode must be 'and' or 'or', got {mode!r}")
+        sizes = self.sizes if live_sizes is None else \
+            np.asarray(live_sizes, np.int64)
+        n_live = int(sizes.sum())
+        lb, ub = self.cluster_bounds(preds)                  # (B, K) f64
+        thr64 = np.asarray(thr, np.float64).reshape(-1, 1)   # (B, 1)
+        allin_pk = ub <= thr64 - self.eps                    # (B, K)
+        allout_pk = lb > thr64 + self.eps
+        allin, allout = self._compound_classes(allin_pk, allout_pk, mode)
+        nonempty = sizes > 0
+        boundary = ~(allin | allout) & nonempty              # (K,)
+        in_union = boundary.copy()
+        scan_ids = np.flatnonzero(in_union)
+        if int(sizes[scan_ids].sum()) >= 0.9 * n_live:
+            in_union = nonempty.copy()
+            scan_ids = np.flatnonzero(in_union)
+        resolved = nonempty & ~in_union
+        extra = np.array([[int(sizes[allin & resolved].sum())]], np.int64)
+        return ScanPlan(scan_ids=scan_ids,
+                        m=int(sizes[scan_ids].sum()), extra=extra,
+                        boundary_clusters=int(boundary.sum()))
+
+    def compound_count_bounds(self, preds: np.ndarray,
+                              thresholds: np.ndarray, *, mode: str = "and",
+                              live_sizes: np.ndarray | None = None,
+                              ) -> tuple[int, int]:
+        """Certified (lo, hi) interval on the compound match count — zero
+        rows read. lo sums joint all-in cluster sizes, hi sums every
+        cluster not jointly all-out; the joint classes come from the same
+        eps-slacked f64 bounds as ``count_bounds``, so
+        lo <= true compound count <= hi."""
+        if mode not in ("and", "or"):
+            raise ValueError(f"mode must be 'and' or 'or', got {mode!r}")
+        preds = np.asarray(preds, np.float32)
+        lb, ub = self.cluster_bounds(preds)
+        thr64 = np.asarray(thresholds, np.float64).reshape(-1, 1)
+        allin, allout = self._compound_classes(
+            ub <= thr64 - self.eps, lb > thr64 + self.eps, mode)
+        sizes = self.sizes if live_sizes is None else \
+            np.asarray(live_sizes, np.int64)
+        return int(sizes[allin].sum()), int(sizes[~allout & (sizes > 0)].sum())
+
+    def probe_compound(self, preds: np.ndarray, thresholds: np.ndarray, *,
+                       mode: str = "and", live: np.ndarray | None = None,
+                       live_sizes: np.ndarray | None = None,
+                       ) -> tuple[int, dict]:
+        """Exact compound match count in ONE masked launch over the joint
+        boundary union. Bitwise-equal to composing full batched XLA scans:
+        the launch scores every surviving row against every conjunct with
+        the same ``nd,bd->bn`` contraction the full scan uses (per-row
+        reductions are row-local, so gathering a subset never changes a
+        row's distance), then ANDs/ORs the per-row match bits.
+
+        The gather always pads to an explicit power-of-two bucket — never
+        the zero-copy full-store shortcut — so no real row lands in a
+        trailing remainder loop and per-row scores match the row-stable
+        full-scan reference exactly. Returns (count, stats) with the same
+        stats keys as ``probe_pruned``.
+        """
+        preds = np.asarray(preds, np.float32)
+        thr = np.asarray(thresholds, np.float32).reshape(-1)
+        if preds.ndim != 2 or preds.shape[0] != thr.shape[0]:
+            raise ValueError(
+                f"preds {preds.shape} and thresholds {thr.shape} must agree "
+                f"on the number of conjuncts")
+        if live is not None and live_sizes is None:
+            live_sizes = self.live_cluster_sizes(live)
+        n_eff = self.n if live_sizes is None \
+            else int(np.asarray(live_sizes).sum())
+        plan = self.plan_compound(preds, thr, mode=mode,
+                                  live_sizes=live_sizes)
+
+        if len(plan.scan_ids) and plan.m:
+            rows = self.scan_rows(plan.scan_ids, live)
+            m = int(len(rows))
+            bucket = max(128, 1 << max(0, m - 1).bit_length())
+            pad = np.zeros(bucket - m, np.int64)
+            buf = jnp.take(self.embeddings,
+                           jnp.asarray(np.concatenate([rows, pad])), axis=0)
+            scanned = int(_compound_masked_xla(
+                buf, jnp.asarray(m, jnp.int32), jnp.asarray(preds),
+                jnp.asarray(thr), mode=mode))
+        else:
+            m = 0
+            scanned = 0
+        count = scanned + int(plan.extra[0, 0])
+
+        stats = {
+            "launches": 1 if m else 0,
+            "rows_scanned": m,
+            "rows_full_equiv": n_eff,
+            "scan_fraction": m / max(1, n_eff),
+            "scanned_clusters": int(len(plan.scan_ids)),
+            "boundary_clusters": plan.boundary_clusters,
+            "clusters": self.k_clusters,
+            "batch": int(preds.shape[0]),
+        }
+        self._record(stats, probes=1)
+        return count, stats
 
     def kth_smallest(self, pred: np.ndarray, k: int, *, impl: str = "xla",
                      interpret: bool = True,

@@ -88,6 +88,18 @@ def _tail_probe_batch_xla(store, mask, preds, thr, *, k: int):
     return counts.astype(jnp.int32), -neg_top
 
 
+@partial(jax.jit, static_argnames=("mode",))
+def _tail_compound_xla(store, mask, preds, thr, *, mode: str):
+    """Compound rowmask tail scan — same ``nd,bd->bn`` contraction as
+    ``clustered._compound_masked_xla``, with tombstoned (and padding) rows
+    masked to +inf so they match no conjunct under either mode."""
+    sims = jnp.einsum("nd,bd->bn", store.astype(f32), preds.astype(f32))
+    dists = jnp.where(mask[None, :] != 0, 1.0 - sims, jnp.inf)
+    match = dists <= thr[:, None]
+    hit = match.all(axis=0) if mode == "and" else match.any(axis=0)
+    return hit.sum().astype(jnp.int32)
+
+
 class MutableClusteredStore:
     """Streaming-mutable wrapper over the exact cluster-pruned index.
 
@@ -428,6 +440,44 @@ class MutableClusteredStore:
         else:
             topk = np.full((b, k), np.inf, np.float32)
         return counts.astype(np.int32), topk
+
+    def probe_compound(self, preds: np.ndarray, thresholds: np.ndarray, *,
+                       mode: str = "and") -> tuple[int, dict]:
+        """Exact compound match count over live rows: base compound probe
+        (joint cluster bounds, live-masked) + compound rowmask tail scan,
+        counts summed. Bitwise what composing fresh full scans of the live
+        rows yields — per-row distances are row-local, so base/tail
+        decomposition and tombstone masking never change a row's score.
+        """
+        preds = np.asarray(preds, np.float32)
+        thr = np.asarray(thresholds, np.float32).reshape(-1)
+        (base, gen, live, ls, base_live_n,
+         temb, tlive, tail_live_n) = self._snapshot()
+        count = 0
+        stats = None
+        if base_live_n:
+            if self.mesh is not None:
+                rows = base.shard_rows
+                live_l = [live[s * rows:(s + 1) * rows]
+                          for s in range(base.n_shards)]
+                c, stats = base.probe_compound(
+                    preds, thr, mode=mode, live=live_l, live_sizes=ls,
+                    live_n=[int(x.sum()) for x in ls])
+            else:
+                c, stats = base.probe_compound(preds, thr, mode=mode,
+                                               live=live, live_sizes=ls[0])
+            count += int(c)
+        if tail_live_n:
+            m = len(temb)
+            bucket = max(128, 1 << max(0, m - 1).bit_length())
+            emb_p = np.zeros((bucket, temb.shape[1]), np.float32)
+            emb_p[:m] = temb
+            mask = np.zeros(bucket, np.int32)
+            mask[:m] = tlive
+            count += int(_tail_compound_xla(
+                jnp.asarray(emb_p), jnp.asarray(mask), jnp.asarray(preds),
+                jnp.asarray(thr), mode=mode))
+        return count, (stats or {"launches": 0, "rows_scanned": 0})
 
     def _sharded_base_probe(self, base, gen, preds, thr, k, need_topk,
                             scalar, live, ls):

@@ -152,6 +152,69 @@ class ShardedClusteredStore:
                          for s, ls in zip(self.shards, live_sizes)))
         return sum(los), sum(his)
 
+    # ----------------------------------------------------------- compound
+
+    def probe_compound(self, preds: np.ndarray, thresholds: np.ndarray, *,
+                       mode: str = "and", live: list | None = None,
+                       live_sizes: list | None = None,
+                       live_n: list | None = None) -> tuple[int, dict]:
+        """Exact compound match count across all shards.
+
+        Each shard plans the conjunction/disjunction jointly
+        (``ClusteredStore.plan_compound`` — per-conjunct all-in/all-out
+        sets intersected before any boundary scan), gathers only its
+        surviving boundary segments into an explicit power-of-two bucket,
+        and scores them through the same masked XLA launch as the
+        single-device path; per-shard counts and bound-resolved extras sum.
+        Per-row distances are row-local, so the shard decomposition is
+        bitwise-invariant vs one scan of the whole store.
+
+        ``live``/``live_sizes``/``live_n``: one per-shard entry each
+        (mutable-store tombstones), as in ``plan_shards``/``record``.
+        Returns (count, stats) — stats aggregated across shards with the
+        same keys as ``ClusteredStore.probe_compound``.
+        """
+        from repro.index.clustered import _compound_masked_xla
+
+        preds = np.asarray(preds, np.float32)
+        thr = np.asarray(thresholds, np.float32).reshape(-1)
+        if live is None:
+            live = [None] * self.n_shards
+        if live_sizes is None:
+            live_sizes = [None] * self.n_shards
+        plans = [s.plan_compound(preds, thr, mode=mode, live_sizes=ls)
+                 for s, ls in zip(self.shards, live_sizes)]
+        count = sum(int(p.extra[0, 0]) for p in plans)
+        rows_scanned = 0
+        for shard, plan, lv in zip(self.shards, plans, live):
+            if not (len(plan.scan_ids) and plan.m):
+                continue
+            rows = shard.scan_rows(plan.scan_ids, lv)
+            m = int(len(rows))
+            rows_scanned += m
+            bucket = max(128, 1 << max(0, m - 1).bit_length())
+            pad = np.zeros(bucket - m, np.int64)
+            buf = jnp.take(shard.embeddings,
+                           jnp.asarray(np.concatenate([rows, pad])), axis=0)
+            count += int(_compound_masked_xla(
+                buf, jnp.asarray(m, jnp.int32), jnp.asarray(preds),
+                jnp.asarray(thr), mode=mode))
+        launched = rows_scanned > 0
+        self.record(plans, launched=launched, live_n=live_n)
+        nl = live_n if live_n is not None else [s.n for s in self.shards]
+        n_eff = sum(int(x) for x in nl)
+        stats = {
+            "launches": 1 if launched else 0,
+            "rows_scanned": rows_scanned,
+            "rows_full_equiv": n_eff,
+            "scan_fraction": rows_scanned / max(1, n_eff),
+            "scanned_clusters": sum(len(p.scan_ids) for p in plans),
+            "boundary_clusters": sum(p.boundary_clusters for p in plans),
+            "clusters": sum(s.k_clusters for s in self.shards),
+            "batch": int(preds.shape[0]),
+        }
+        return count, stats
+
     # -------------------------------------------------------------- stats
 
     def record(self, plans: list, *, launched: bool,

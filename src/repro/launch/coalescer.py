@@ -124,6 +124,13 @@ class PredicateCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # observed-selectivity side table (PR 9): ground truth written back
+        # by the feedback loop after plan execution, keyed by quantized
+        # predicate(s) + store version — separate from the probe cache so
+        # observed entries never evict probe results (and vice versa)
+        self._observed: OrderedDict[tuple, float] = OrderedDict()
+        self.observed_hits = 0
+        self.observed_misses = 0
 
     def key(self, emb: np.ndarray, thresholds, k: int,
             version: int = 0) -> tuple:
@@ -139,6 +146,55 @@ class PredicateCache:
         t = np.round(np.atleast_1d(np.asarray(thresholds, np.float64))
                      * scale).astype(np.int32)
         return (q.tobytes(), t.tobytes(), int(k), int(version))
+
+    def observed_key(self, emb: np.ndarray, version: int = 0) -> tuple:
+        """Key for one predicate's *observed* (executed ground-truth)
+        selectivity. Thresholds are deliberately absent: the observed
+        value is the VLM-measured truth for the predicate itself, not a
+        property of a calibrated threshold. ``version`` folds in the store
+        mutation counter — an observed selectivity is only trusted at the
+        exact store version it was measured against (staleness rule)."""
+        scale = float(1 << self.bits)
+        q = np.round(np.asarray(emb, np.float64) * scale).astype(np.int32)
+        return ("obs", q.tobytes(), int(version))
+
+    def compound_key(self, embs: np.ndarray, thresholds, mode: str,
+                     version: int = 0) -> tuple:
+        """Order-invariant key for a compound predicate's selectivity.
+
+        Each conjunct quantizes (embedding, threshold) like ``key``; the
+        per-conjunct parts are then sorted, so ``A AND B`` and ``B AND A``
+        share one entry (conjunction/disjunction are commutative).
+        Thresholds participate because the compound selectivity is a
+        property of the calibrated filters, not the bare predicates.
+        """
+        scale = float(1 << self.bits)
+        thr = np.atleast_1d(np.asarray(thresholds, np.float64))
+        parts = []
+        for emb, t in zip(np.asarray(embs, np.float64), thr):
+            q = np.round(emb * scale).astype(np.int32)
+            tq = int(np.round(float(t) * scale))
+            parts.append((q.tobytes(), tq))
+        return ("compound", str(mode), tuple(sorted(parts)), int(version))
+
+    def get_observed(self, key: tuple) -> float | None:
+        """Observed selectivity on hit (LRU-refreshed), None on miss."""
+        with self._lock:
+            val = self._observed.get(key)
+            if val is None:
+                self.observed_misses += 1
+                return None
+            self._observed.move_to_end(key)
+            self.observed_hits += 1
+            return val
+
+    def put_observed(self, key: tuple, sel: float) -> None:
+        with self._lock:
+            if key in self._observed:
+                self._observed.move_to_end(key)
+            self._observed[key] = float(sel)
+            while len(self._observed) > self.capacity:
+                self._observed.popitem(last=False)
 
     def get(self, key: tuple):
         """(counts, topk) on hit (LRU-refreshed), None on miss."""
@@ -174,6 +230,11 @@ class PredicateCache:
                 "misses": self.misses,
                 "evictions": self.evictions,
                 "hit_rate": self.hits / total if total else 0.0,
+                "observed": {
+                    "entries": len(self._observed),
+                    "hits": self.observed_hits,
+                    "misses": self.observed_misses,
+                },
             }
 
 

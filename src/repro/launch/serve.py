@@ -216,17 +216,31 @@ def build_stack(dataset: str, *, n_images: int = 1000, sample: int = 32,
 
 
 def serve_sequential(corpus, estimators, queries, *, seed: int,
-                     obs: ObsHub | None = None) -> None:
-    """Original per-query driver: every estimator, one query at a time."""
+                     obs: ObsHub | None = None,
+                     compound: bool = False,
+                     feedback: bool = False) -> None:
+    """Original per-query driver: every estimator, one query at a time.
+
+    ``compound`` orders multi-filter plans by conditional selectivity
+    (estimators exposing ``compound_selectivity``); ``feedback`` turns on
+    the ensemble's learned write-back loop with a dedicated
+    observed-selectivity cache."""
     oracle = estimators["oracle"]
+    if feedback:
+        ens = estimators.get("ensemble")
+        if ens is not None and ens.observed_cache is None:
+            ens.feedback = True
+            ens.observed_cache = PredicateCache(1024)
     for qi, q in enumerate(queries):
         base = execute_cascade(corpus, plan_query(q, oracle), seed=seed)
         print(f"\nquery {qi}: filters={q}  oracle calls={base.vlm_calls}")
         for name, est in estimators.items():
             if name == "oracle":
                 continue
-            res = execute_cascade(corpus, plan_query(q, est, seed=seed),
-                                  seed=seed, obs=obs, est_name=name)
+            fb = est if (feedback and hasattr(est, "observe")) else None
+            res = execute_cascade(
+                corpus, plan_query(q, est, seed=seed, compound=compound),
+                seed=seed, obs=obs, est_name=name, feedback=fb)
             overhead = res.total_s - base.total_s
             print(f"  {name:14s} calls={res.vlm_calls:5d} "
                   f"est_lat={res.plan.est_latency_s*1e3:8.1f}ms "
@@ -239,7 +253,8 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
                      passes: int, deadline_ms: float = 0.0,
                      max_queue: int = 0, degraded_ok: bool = False,
                      chaos_spec: str = "", ingest_rate: float = 0.0,
-                     obs: ObsHub | None = None) -> dict:
+                     obs: ObsHub | None = None, compound: bool = False,
+                     feedback: bool = False) -> dict:
     """Cross-query serving: N planner threads share one coalescer + cache.
 
     The control plane rides along per request: each plan's probes carry the
@@ -253,6 +268,11 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
     est = estimators[est_name]
     obs = obs if obs is not None else ObsHub()
     cache = PredicateCache(cache_size, bits=cache_bits)
+    if feedback and hasattr(est, "observe"):
+        # the serving predicate cache doubles as the observed-selectivity
+        # store: same quantization, same LRU discipline, version-keyed
+        est.feedback = True
+        est.observed_cache = cache
     chaos = None
     if chaos_spec:
         from repro.launch.chaos import ChaosConfig, ChaosInjector
@@ -310,12 +330,14 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
             try:
                 plan = plan_query(q, est, seed=seed, coalescer=coal,
                                   deadline_ms=deadline_ms or None,
-                                  degraded_ok=degraded_ok)
+                                  degraded_ok=degraded_ok,
+                                  compound=compound)
             except Exception as e:  # noqa: BLE001 — partial failure
                 failures.append((qi, f"{type(e).__name__}: {e}"))
                 return qi, None, False
+            fb = est if (feedback and hasattr(est, "observe")) else None
             res = execute_cascade(corpus, plan, seed=seed, obs=obs,
-                                  est_name=est_name)
+                                  est_name=est_name, feedback=fb)
             tr = obs.tracer
             if tr is not None and tr.sample_hit("plan"):
                 tr.emit("plan", query=int(qi), estimator=est_name,
@@ -443,6 +465,18 @@ def main(argv=None) -> None:
                          "e.g. 'seed=1,fail=0.3,delay=0.2,delay-ms=5,"
                          "kill-at=3' — seeded probe failures/delays and a "
                          "flusher kill at the given launch ordinal")
+    ap.add_argument("--compound", action="store_true",
+                    help="order multi-filter plans by conditional (joint) "
+                         "selectivity through the index's one-launch "
+                         "compound probe instead of the independence "
+                         "assumption (estimators exposing "
+                         "compound_selectivity; see docs/index.md)")
+    ap.add_argument("--feedback", action="store_true",
+                    help="Larch-style learned loop: after each executed "
+                         "plan, write observed per-filter and per-prefix "
+                         "selectivities back into the ensemble's "
+                         "correction weights and the version-keyed "
+                         "observed-selectivity cache")
     ap.add_argument("--n-images", type=int, default=1000,
                     help="corpus size (rows in the embedding store)")
     ap.add_argument("--metrics-json", default="",
@@ -491,10 +525,11 @@ def main(argv=None) -> None:
             passes=args.passes, deadline_ms=args.deadline_ms,
             max_queue=args.max_queue, degraded_ok=args.degraded_ok,
             chaos_spec=args.chaos, ingest_rate=args.ingest_rate,
-            obs=hub)
+            obs=hub, compound=args.compound, feedback=args.feedback)
     else:
         serve_sequential(corpus, estimators, queries, seed=args.seed,
-                         obs=hub)
+                         obs=hub, compound=args.compound,
+                         feedback=args.feedback)
     snap = obs_report.build_snapshot(
         registry=hub.registry, coalescer=stats,
         index=index.stats() if index is not None else None,

@@ -92,9 +92,16 @@ class ObsHub:
 
     # ----------------------------------------------------------- accuracy
 
-    def record_plan(self, est_name: str, corpus, plan) -> None:
+    def record_plan(self, est_name: str, corpus, plan,
+                    observed_prefix=None) -> None:
         """Per-estimator q-error (exact estimates) / interval accounting
-        (degraded estimates) for one executed plan."""
+        (degraded estimates) for one executed plan.
+
+        ``observed_prefix`` — the cascade's observed per-prefix survival
+        fractions (``execute_cascade`` passes them) — additionally feeds
+        ``qerror.prefix.{est_name}`` when the plan carries compound
+        ``prefix_sels``: the q-error of every estimated joint prefix
+        selectivity against what the cascade actually observed."""
         from repro.core.metrics import q_error
 
         r = self.registry
@@ -112,6 +119,12 @@ class ObsHub:
                 r.histogram(f"qerror.{est_name}",
                             edges=QERROR_EDGES).observe(
                     q_error(est.selectivity, true, n))
+        prefix_sels = getattr(plan, "prefix_sels", None)
+        if prefix_sels and observed_prefix:
+            for est_sel, obs_sel in zip(prefix_sels, observed_prefix):
+                r.histogram(f"qerror.prefix.{est_name}",
+                            edges=QERROR_EDGES).observe(
+                    q_error(float(est_sel), float(obs_sel), n))
 
     # ------------------------------------------------------------ summary
 

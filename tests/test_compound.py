@@ -1,0 +1,380 @@
+"""Compound-predicate estimation end to end (PR 9).
+
+Parity: the joint cluster-bound probe (``probe_compound``) must be
+bitwise-equal to composing full batched XLA scans — same ``nd,bd->bn``
+contraction, per-row match bits ANDed/ORed in numpy. Stores are built with
+``impl="xla"``: compound row sets cannot route through the Pallas kernels
+(they return only counts + top-k, never per-row masks), so the canonical
+batched XLA contraction IS the compound evaluation path and the parity
+claim is scoped to it (docs/index.md, "Compound predicates").
+
+Planner: greedy conditional ordering beats the independence assumption on
+correlated predicates; the Larch-style feedback loop shrinks measured
+q-error over repeated traffic and never serves a stale observed
+selectivity across store versions.
+"""
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.estimators import Estimate
+from repro.core.histogram import SemanticHistogram
+from repro.core.metrics import q_error
+from repro.core.optimizer import execute_cascade, generate_queries, plan_query
+from repro.core.synthetic import clustered_unit_vectors, make_corpus
+from repro.index.clustered import build_clustered_store
+from repro.index.mutable import MutableClusteredStore
+from repro.index.sharded import build_sharded_clustered_store
+from repro.launch.coalescer import PredicateCache
+
+# ------------------------------------------------------------- reference
+
+
+def _ref_count(store, preds, thrs, mode):
+    """Composed full scans: the canonical batched XLA contraction over an
+    8-row-aligned buffer (row-stable — no real row in a remainder loop),
+    per-predicate match masks composed in numpy. ``store`` rows must be
+    8-aligned (every fixture here is)."""
+    store = np.asarray(store, np.float32)
+    assert store.shape[0] % 8 == 0, "fixture must be row-stable"
+    sims = np.asarray(jnp.einsum("nd,bd->bn", jnp.asarray(store),
+                                 jnp.asarray(preds, jnp.float32)))
+    match = (1.0 - sims) <= np.asarray(thrs, np.float32)[:, None]
+    hit = match.all(axis=0) if mode == "and" else match.any(axis=0)
+    return int(hit.sum())
+
+
+@functools.lru_cache(maxsize=1)
+def _fixture():
+    """(x, labels): 2048 x 64 unit rows in 8 planted clusters — rows from
+    one planted cluster give correlated predicates (overlapping threshold
+    balls, so conjunctions have nonzero counts)."""
+    x, labels = clustered_unit_vectors(2048, 64, n_centers=8, spread=0.3,
+                                       seed=0)
+    return x, np.asarray(labels)
+
+
+def _correlated_preds(x, labels, b, seed):
+    """b predicates drawn from ONE planted cluster + per-pred thresholds
+    spanning selectivities (correlated balls: AND is nonzero)."""
+    rng = np.random.default_rng(seed)
+    c = int(rng.integers(labels.max() + 1))
+    rows = np.flatnonzero(labels == c)
+    preds = x[rng.choice(rows, size=b, replace=False)].astype(np.float32)
+    return preds
+
+
+def _thrs_at(x, preds, sel):
+    return np.asarray([np.sort(1.0 - x @ p)[int(sel * len(x))]
+                       for p in preds], np.float32)
+
+
+# --------------------------------------------------------------- parity
+
+
+@pytest.mark.parametrize("mode", ["and", "or"])
+@pytest.mark.parametrize("k_clusters,sel,b", [
+    (8, 0.01, 2), (8, 0.10, 3), (32, 0.01, 3), (32, 0.10, 2),
+])
+def test_compound_parity_unsharded(mode, k_clusters, sel, b):
+    x, labels = _fixture()
+    cs = build_clustered_store(x, k_clusters, iters=4, seed=0, impl="xla")
+    preds = _correlated_preds(x, labels, b, seed=k_clusters + b)
+    thrs = _thrs_at(x, preds, sel)
+    count, stats = cs.probe_compound(preds, thrs, mode=mode)
+    ref = _ref_count(cs.embeddings, preds, thrs, mode)
+    assert count == ref, f"count_diff={count - ref}"
+    assert stats["rows_scanned"] <= cs.n
+
+
+@pytest.mark.parametrize("mode", ["and", "or"])
+@pytest.mark.parametrize("n_shards,sel", [(2, 0.01), (4, 0.10)])
+def test_compound_parity_sharded(mode, n_shards, sel):
+    x, labels = _fixture()
+    ss = build_sharded_clustered_store(x, 8, n_shards, iters=4, seed=0,
+                                       impl="xla")
+    preds = _correlated_preds(x, labels, 3, seed=n_shards)
+    thrs = _thrs_at(x, preds, sel)
+    count, stats = ss.probe_compound(preds, thrs, mode=mode)
+    ref = _ref_count(ss.embeddings, preds, thrs, mode)
+    assert count == ref, f"count_diff={count - ref}"
+    # accounting flowed through the wrapper (probes tally, per-shard rows)
+    assert ss.stats()["probes"] == 1
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["and", "or"])
+def test_compound_parity_sweep(mode):
+    """Full matrix: K x selectivity x B x sharded/unsharded, every cell
+    bitwise-equal (count_diff=0)."""
+    x, labels = _fixture()
+    for k_clusters in (16, 64):
+        cs = build_clustered_store(x, k_clusters, iters=4, seed=1,
+                                   impl="xla")
+        for sel in (0.002, 0.05, 0.30):
+            for b in (2, 3, 4):
+                preds = _correlated_preds(x, labels, b,
+                                          seed=1000 * k_clusters + b)
+                thrs = _thrs_at(x, preds, sel)
+                count, _ = cs.probe_compound(preds, thrs, mode=mode)
+                assert count == _ref_count(cs.embeddings, preds, thrs,
+                                           mode)
+    for n_shards in (2, 4):
+        ss = build_sharded_clustered_store(x, 16, n_shards, iters=4,
+                                           seed=1, impl="xla")
+        for sel in (0.002, 0.30):
+            preds = _correlated_preds(x, labels, 4, seed=n_shards + 7)
+            thrs = _thrs_at(x, preds, sel)
+            count, _ = ss.probe_compound(preds, thrs, mode=mode)
+            assert count == _ref_count(ss.embeddings, preds, thrs, mode)
+
+
+@pytest.mark.parametrize("mode", ["and", "or"])
+def test_compound_parity_mutable(mode):
+    """Insert + delete, then compound-probe: equals composing masks over
+    the live rows (base live + tail live), row-stable reference."""
+    x, labels = _fixture()
+    x = x[:1024]
+    mut = MutableClusteredStore(x, 16, seed=0, impl="xla",
+                                auto_rebuild=False)
+    rng = np.random.default_rng(5)
+    extra = rng.normal(size=(96, x.shape[1])).astype(np.float32)
+    extra /= np.linalg.norm(extra, axis=1, keepdims=True)
+    mut.insert(extra)
+    mut.delete(list(rng.choice(1024, size=40, replace=False)))
+
+    preds = _correlated_preds(x, labels[:1024], 3, seed=11)
+    thrs = _thrs_at(x, preds, 0.08)
+    count, _ = mut.probe_compound(preds, thrs, mode=mode)
+
+    # reference: live base rows (stored order) + live tail rows, padded to
+    # an 8-aligned buffer; dead rows excluded before the scan
+    base_emb = np.asarray(mut._base_emb_np, np.float32)
+    live_rows = base_emb[mut._live]
+    tail = mut._tail_emb[:mut._tail_len][
+        mut._tail_live[:mut._tail_len].astype(bool)]
+    rows = np.concatenate([live_rows, tail])
+    pad = (-len(rows)) % 8
+    buf = np.concatenate([rows, np.zeros((pad, rows.shape[1]), np.float32)])
+    sims = np.asarray(jnp.einsum("nd,bd->bn", jnp.asarray(buf),
+                                 jnp.asarray(preds)))
+    match = ((1.0 - sims) <= thrs[:, None])
+    match[:, len(rows):] = False
+    hit = match.all(axis=0) if mode == "and" else match.any(axis=0)
+    assert count == int(hit.sum())
+
+
+def test_compound_count_bounds_contain_truth():
+    x, labels = _fixture()
+    cs = build_clustered_store(x, 16, iters=4, seed=0, impl="xla")
+    preds = _correlated_preds(x, labels, 3, seed=3)
+    thrs = _thrs_at(x, preds, 0.05)
+    for mode in ("and", "or"):
+        lo, hi = cs.compound_count_bounds(preds, thrs, mode=mode)
+        count, _ = cs.probe_compound(preds, thrs, mode=mode)
+        assert lo <= count <= hi
+
+
+def test_compound_prunes_harder_than_per_predicate_union():
+    """The joint boundary set is a subset of the per-predicate boundary
+    union, so a conjunction never scans more rows than the batched
+    per-predicate probe."""
+    x, labels = _fixture()
+    cs = build_clustered_store(x, 32, iters=4, seed=0, impl="xla")
+    preds = _correlated_preds(x, labels, 3, seed=9)
+    thrs = _thrs_at(x, preds, 0.01)
+    plan_c = cs.plan_compound(preds, thrs, mode="and")
+    plan_p = cs.plan_scan(preds, thrs[:, None], k=1, need_topk=False)
+    assert plan_c.m <= plan_p.m
+    assert set(plan_c.scan_ids).issubset(set(plan_p.scan_ids)) \
+        or plan_p.m >= 0.9 * cs.n   # unless promotion rewrote the union
+
+
+def test_histogram_compound_routing_matches_bare_store():
+    """selectivity_compound through an index equals the bare-store path."""
+    x, labels = _fixture()
+    cs = build_clustered_store(x, 16, iters=4, seed=0, impl="xla")
+    h_bare = SemanticHistogram(jnp.asarray(x), impl="xla")
+    h_idx = SemanticHistogram(jnp.asarray(x), impl="xla", index=cs)
+    preds = _correlated_preds(x, labels, 2, seed=21)
+    thrs = _thrs_at(x, preds, 0.05)
+    for mode in ("and", "or"):
+        # counts are permutation-invariant (the index reorders rows)
+        assert (h_idx.count_compound(preds, thrs, mode=mode)
+                == h_bare.count_compound(preds, thrs, mode=mode)
+                == _ref_count(x, preds, thrs, mode))
+
+
+def test_compound_mode_validation():
+    x, _ = _fixture()
+    cs = build_clustered_store(x, 8, iters=2, seed=0, impl="xla")
+    with pytest.raises(ValueError, match="mode"):
+        cs.probe_compound(x[:2], np.array([0.1, 0.1]), mode="xor")
+
+
+# -------------------------------------------------------------- planner
+
+
+class _JointTableEstimator:
+    """Fixed marginals + a joint-selectivity table: lets the greedy
+    conditional planner be checked against hand-computed orders."""
+
+    name = "joint-table"
+
+    def __init__(self, marginals, joints):
+        self.marginals = marginals     # node_id -> sel
+        self.joints = joints           # frozenset(node_ids) -> sel
+
+    def estimate_batch(self, node_ids, seed=0):
+        return [Estimate(self.marginals[n], 0.0, 0.0, threshold=0.5)
+                for n in node_ids]
+
+    def compound_selectivity(self, node_ids, thresholds, seed=0):
+        return self.joints[frozenset(node_ids)]
+
+
+def test_plan_query_compound_orders_by_conditional_selectivity():
+    """A is least selective marginally after itself, but C is strongly
+    anti-correlated with A — conditional ordering must pick A, C, B while
+    the independence order would pick A, B, C."""
+    est = _JointTableEstimator(
+        marginals={1: 0.30, 2: 0.35, 3: 0.40},
+        joints={frozenset({1, 2}): 0.30,     # B contains A: no reduction
+                frozenset({1, 3}): 0.12,     # C anti-correlated with A
+                frozenset({1, 2, 3}): 0.10})
+    indep = plan_query([1, 2, 3], est)
+    assert indep.filter_order == [1, 2, 3]
+    assert indep.prefix_sels is None
+    plan = plan_query([1, 2, 3], est, compound=True)
+    assert plan.filter_order == [1, 3, 2]
+    assert plan.prefix_sels == [0.30, 0.12, 0.10]
+
+
+def test_plan_query_compound_skips_without_thresholds():
+    """Estimates lacking calibrated thresholds can't be compound-probed —
+    the planner must fall back to the independence order, not crash."""
+
+    class NoThr(_JointTableEstimator):
+        def estimate_batch(self, node_ids, seed=0):
+            return [Estimate(self.marginals[n], 0.0, 0.0)
+                    for n in node_ids]
+
+    est = NoThr({1: 0.3, 2: 0.2}, {frozenset({1, 2}): 0.1})
+    plan = plan_query([1, 2], est, compound=True)
+    assert plan.filter_order == [2, 1]
+    assert plan.prefix_sels is None
+
+
+def test_compound_beats_independence_on_correlated_workload():
+    """Acceptance: on ancestor/descendant (correlated) conjunctions with
+    truth-calibrated thresholds, the compound probe's joint-selectivity
+    q-error beats the independence product's, median over all pairs."""
+    corpus = make_corpus("wildlife", n_images=600, seed=1)
+    n = len(corpus.images)
+    cs = build_clustered_store(np.asarray(corpus.images, np.float32), 24,
+                               iters=6, seed=0, impl="xla")
+    hist = SemanticHistogram(jnp.asarray(corpus.images), impl="xla",
+                             index=cs)
+
+    def calib(nid):
+        emb = corpus.text_embedding(nid, 0)
+        d = np.sort(1.0 - corpus.images @ emb)
+        k = len(corpus.true_matches(nid))
+        return emb, float(d[max(k - 1, 0)] + 1e-6), k / n
+
+    preds = set(corpus.predicate_nodes())
+    pairs = [[nid, ch] for nid, c in corpus.concepts.items()
+             for ch in c.children if nid in preds and ch in preds]
+    assert len(pairs) >= 10
+    qe_ind, qe_comp = [], []
+    for q in pairs:
+        (e0, t0, s0), (e1, t1, s1) = calib(q[0]), calib(q[1])
+        joint_true = len(set(corpus.true_matches(q[0]))
+                         & set(corpus.true_matches(q[1]))) / n
+        comp = hist.selectivity_compound(np.stack([e0, e1]),
+                                         np.array([t0, t1]), mode="and")
+        qe_ind.append(q_error(s0 * s1, joint_true, n))
+        qe_comp.append(q_error(comp, joint_true, n))
+    assert np.median(qe_comp) < np.median(qe_ind)
+
+
+# ------------------------------------------------------------- feedback
+
+
+def test_observed_cache_version_staleness():
+    """An observed selectivity keyed at version v must never serve at any
+    other version — and the compound key is order-invariant."""
+    cache = PredicateCache(16)
+    emb = np.ones(8) / np.sqrt(8.0)
+    cache.put_observed(cache.observed_key(emb, version=3), 0.25)
+    assert cache.get_observed(cache.observed_key(emb, version=3)) == 0.25
+    assert cache.get_observed(cache.observed_key(emb, version=4)) is None
+    assert cache.get_observed(cache.observed_key(emb, version=2)) is None
+
+    a = np.ones(8) / np.sqrt(8.0)
+    b = -a
+    k_ab = cache.compound_key(np.stack([a, b]), [0.1, 0.2], "and",
+                              version=1)
+    k_ba = cache.compound_key(np.stack([b, a]), [0.2, 0.1], "and",
+                              version=1)
+    assert k_ab == k_ba                           # commutative
+    assert k_ab != cache.compound_key(np.stack([a, b]), [0.1, 0.2], "or",
+                                      version=1)  # mode participates
+    assert k_ab != cache.compound_key(np.stack([a, b]), [0.1, 0.2], "and",
+                                      version=2)  # version participates
+
+
+def test_feedback_never_serves_stale_observed_across_versions():
+    """Integration: the ensemble's observed lookup keys fold in
+    hist.version, so a store mutation invalidates every observation."""
+    x, _ = _fixture()
+    x = x[:512]
+    mut = MutableClusteredStore(x, 8, seed=0, impl="xla",
+                                auto_rebuild=False)
+    hist = SemanticHistogram(jnp.asarray(x), impl="xla", index=mut)
+    cache = PredicateCache(32)
+    emb = np.asarray(x[3], np.float64)
+    v0 = hist.version
+    cache.put_observed(cache.observed_key(emb, version=v0), 0.125)
+    assert cache.get_observed(
+        cache.observed_key(emb, version=hist.version)) == 0.125
+    mut.insert(x[:1])                      # mutation bumps the version
+    assert hist.version != v0
+    assert cache.get_observed(
+        cache.observed_key(emb, version=hist.version)) is None
+
+
+@pytest.mark.slow
+def test_feedback_loop_converges_over_repeated_traffic():
+    """Acceptance: the Larch-style loop monotonically shrinks the
+    ensemble's median per-filter q-error across >= 3 repeated passes of
+    the same correlated traffic (observed ground truth caches under the
+    version key, the EMA correction absorbs systematic bias)."""
+    from repro.core.metrics import summarize_q_errors
+    from repro.launch.serve import build_stack
+
+    corpus, est = build_stack("wildlife", n_images=400, sample=16,
+                              spec_steps=120, seed=0, index_clusters=16)
+    ens = est["ensemble"]
+    ens.feedback = True
+    ens.observed_cache = PredicateCache(256)
+    queries = generate_queries(corpus, n_queries=3, n_filters=3, seed=2)
+    n = len(corpus.images)
+    medians = []
+    for _ in range(3):
+        qerrs = []
+        for q in queries:
+            plan = plan_query(q, ens, seed=0, compound=True)
+            for node, e in zip(plan.filter_order, plan.estimates):
+                qerrs.append(q_error(e.selectivity,
+                                     corpus.true_selectivity(node), n))
+            execute_cascade(corpus, plan, seed=0, feedback=ens)
+        medians.append(summarize_q_errors(np.asarray(qerrs))["median"])
+    assert medians[1] <= medians[0]
+    assert medians[2] <= medians[1]
+    assert medians[-1] < medians[0]        # strict overall improvement
+    obs_stats = ens.observed_cache.stats()["observed"]
+    assert obs_stats["hits"] > 0

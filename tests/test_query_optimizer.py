@@ -82,3 +82,116 @@ def test_bad_estimates_cost_more_calls():
     good = sum(run_query(c, q, oracle, seed=0).vlm_calls for q in qs)
     bad = sum(run_query(c, q, Anti(), seed=0).vlm_calls for q in qs)
     assert bad >= good
+
+
+# --------------------------- PR 9 regressions ---------------------------
+
+
+class _MultiProbeBatchEstimator:
+    """Batched estimator whose probe fires TWICE per batch (the pattern
+    that silently lost degraded marks before the fix: outcomes accumulate
+    past ``len(ests)``)."""
+
+    name = "multiprobe"
+    supports_probe = True
+
+    def estimate_batch(self, node_ids, seed=0, probe=None):
+        embs = np.zeros((len(node_ids), 4), np.float32)
+        thrs = np.full(len(node_ids), 0.5, np.float32)
+        sels = probe(embs, thrs)
+        sels = probe(embs, thrs)        # refinement pass: second call
+        return [Estimate(float(s), 0.0, 0.0, threshold=0.5) for s in sels]
+
+
+class _FakeOutcomeCoalescer:
+    """Coalescer stub returning scripted ``ProbeOutcome``s."""
+
+    def __init__(self, degraded_flags):
+        from repro.launch.coalescer import ProbeOutcome
+
+        self._mk = lambda d: ProbeOutcome(0.25, 0.1, 0.4, degraded=d)
+        self.flags = list(degraded_flags)
+        self.calls = 0
+
+    def probe_outcomes(self, preds, thresholds, *, deadline=None,
+                       degraded_ok=None):
+        out = []
+        for _ in range(len(preds)):
+            d = self.flags[self.calls % len(self.flags)]
+            self.calls += 1
+            out.append(self._mk(d))
+        return out
+
+
+def test_degraded_marking_survives_multiple_probe_calls():
+    """Regression (optimizer.py bug 1): an estimator probing twice per
+    batch used to skip degraded marking entirely (len(outcomes) !=
+    len(ests)); outcomes must map back per filter across call groups."""
+    # filter 1 degraded on the second probe call only: flags per outcome,
+    # consumed in order (f0, f1), (f0, f1) -> degrade the 4th outcome
+    coal = _FakeOutcomeCoalescer([False, False, False, True])
+    plan = plan_query([7, 8], _MultiProbeBatchEstimator(), coalescer=coal)
+    assert plan.degraded
+    degraded = [e for e in plan.estimates if e.extra.get("degraded")]
+    assert len(degraded) == 1
+    assert degraded[0].extra["sel_interval"] == (0.1, 0.4)
+
+
+def test_irreconcilable_probe_outcomes_raise():
+    """A probe batch that is not a whole multiple of the filter count
+    cannot be attributed per filter — must raise, not silently skip."""
+
+    class OddProbe:
+        name = "odd"
+        supports_probe = True
+
+        def estimate_batch(self, node_ids, seed=0, probe=None):
+            # probes a batch of the WRONG size (drops one filter)
+            probe(np.zeros((len(node_ids) - 1, 4), np.float32),
+                  np.full(len(node_ids) - 1, 0.5, np.float32))
+            return [Estimate(0.1, 0.0, 0.0) for _ in node_ids]
+
+    coal = _FakeOutcomeCoalescer([False])
+    with pytest.raises(RuntimeError, match="cannot reconcile"):
+        plan_query([7, 8], OddProbe(), coalescer=coal)
+
+
+def test_run_query_forwards_control_plane_and_obs():
+    """Regression (optimizer.py bug 2): the convenience wrapper dropped
+    obs/est_name/coalescer/deadline/degraded_ok, so wrapped plans never
+    reached ``obs.record_plan``."""
+    c = _corpus()
+
+    class SpyObs:
+        def __init__(self):
+            self.plans = []
+
+        def record_plan(self, est_name, corpus, plan, observed_prefix=None):
+            self.plans.append((est_name, plan, observed_prefix))
+
+    spy = SpyObs()
+    coal = _FakeOutcomeCoalescer([True])
+    q = generate_queries(c, n_queries=1, n_filters=2, seed=0)[0]
+    res = run_query(c, q, _MultiProbeBatchEstimator(), seed=0,
+                    coalescer=coal, degraded_ok=True, obs=spy,
+                    est_name="multiprobe")
+    assert len(spy.plans) == 1
+    name, plan, observed_prefix = spy.plans[0]
+    assert name == "multiprobe"
+    assert plan.degraded          # coalescer reached plan_query
+    assert len(observed_prefix) == len(q)
+    assert res.plan is plan
+
+
+def test_generate_queries_validates_n_filters():
+    """Regression (optimizer.py bug 3): n_filters past the predicate count
+    used to crash inside numpy with an opaque error."""
+    c = _corpus()
+    n_preds = len(c.predicate_nodes())
+    with pytest.raises(ValueError, match="exceeds the corpus"):
+        generate_queries(c, n_queries=1, n_filters=n_preds + 1, seed=0)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        generate_queries(c, n_queries=1, n_filters=0, seed=0)
+    # boundary: exactly every predicate is fine
+    qs = generate_queries(c, n_queries=2, n_filters=n_preds, seed=0)
+    assert all(len(set(q)) == n_preds for q in qs)
