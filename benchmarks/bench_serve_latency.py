@@ -72,6 +72,44 @@ def measure_serve_latency(*, queries: int = 6, filters: int = 2,
     return {ph: hists.get(f"serve.{ph}_ms", {"count": 0}) for ph in PHASES}
 
 
+def measure_fleet_failover(*, killed: int, queries: int = 6,
+                           filters: int = 2, passes: int = 2,
+                           concurrency: int = 4, n_images: int = 400,
+                           clusters: int = 32, seed: int = 0) -> dict:
+    """One replicated-serve workload (``--replicas 3``), optionally with a
+    chaos ``replica-kill`` landing mid-run, returning the request-phase
+    latency summary plus the fleet reconciliation verdict. The killed=1
+    row prices failover: survivors absorb the dead replica's keys, so the
+    run must still reconcile exactly and lose zero requests."""
+    from repro.core.optimizer import generate_queries
+    from repro.launch.serve import build_stack, serve_concurrent
+    from repro.obs import ObsHub
+
+    corpus, estimators = build_stack(
+        "wildlife", n_images=n_images, seed=seed, spec_steps=200,
+        index_clusters=clusters)
+    hub = ObsHub()
+    qs = generate_queries(corpus, n_queries=queries, n_filters=filters,
+                          seed=seed)
+    # dispatch ordinal 4 lands mid-run: after the fleet warms up, well
+    # before the workload drains
+    chaos = "replica-kill=1@4" if killed else ""
+    stats = serve_concurrent(
+        corpus, estimators, qs, est_name="ensemble", seed=seed,
+        concurrency=concurrency, window_ms=4.0, max_batch=64,
+        cache_size=1024, cache_bits=12, passes=passes, chaos_spec=chaos,
+        replicas=3, heartbeat_ms=20.0, obs=hub)
+    hists = hub.registry.snapshot()["histograms"]
+    from repro.launch.fleet import FLEET_BUCKETS
+
+    reconciles = (stats["requests"]
+                  == sum(stats[b] for b in FLEET_BUCKETS))
+    return {"request": hists.get("serve.request_ms", {"count": 0}),
+            "requests": stats["requests"], "reconciles": reconciles,
+            "failovers": stats["failovers"],
+            "healthy": stats["healthy_replicas"]}
+
+
 def main() -> list[str]:
     rows = [csv_row("bench", "config", "us_per_call", "derived")]
     recs: list[dict] = []
@@ -96,6 +134,22 @@ def main() -> list[str]:
             f"{s['p95'] * 1e3:.0f}",
             f"p50={s['p50']:.2f}ms,p95={s['p95']:.2f}ms,"
             f"p99={s['p99']:.2f}ms,count={s['count']}")
+
+    # fleet failover rows (PR 10): request p95 through a 3-replica fleet,
+    # healthy vs one replica chaos-killed mid-run. check_bench's
+    # check_fleet_rows gate asserts both rows exist and reconcile.
+    for killed in (0, 1):
+        f = measure_fleet_failover(killed=killed, **cfg)
+        s = f["request"]
+        fcfg = f"{cfg_str},R=3,killed={killed}"
+        if not s.get("count"):
+            add("fleet_failover_cpu", fcfg, "-", "no data")
+            continue
+        add("fleet_failover_cpu", fcfg, f"{s['p95'] * 1e3:.0f}",
+            f"p50={s['p50']:.2f}ms,p95={s['p95']:.2f}ms,"
+            f"count={s['count']},requests={f['requests']},"
+            f"failovers={f['failovers']},healthy={f['healthy']},"
+            f"reconciles={'OK' if f['reconciles'] else 'VIOLATED'}")
 
     # persist machine-readably at the repo root (same shape as
     # BENCH_probe_scaling.json) so check_bench can gate against it

@@ -145,6 +145,46 @@ def load_serve_baseline(path: Path) -> dict[str, float]:
     return base
 
 
+def check_fleet_rows(data: dict, *, tolerance: float = 10.0) -> list[str]:
+    """Gate the persisted fleet-failover rows (PR 10): both the healthy
+    (killed=0) and the mid-run replica-kill (killed=1) 3-replica rows
+    must be present, both must have reconciled exactly (the kill lost
+    zero requests — every one resolved into a fleet bucket), and the
+    failover run's request p95 must stay within ``tolerance``x of the
+    healthy fleet's: failover re-dispatches a batch, it must not
+    serialize the workload. Static gate over the persisted JSON —
+    ``benchmarks/bench_serve_latency.py`` re-measures."""
+    rows: dict[int, tuple[float, str]] = {}
+    for row in data.get("rows", []):
+        if row.get("bench") != "fleet_failover_cpu":
+            continue
+        cfg = str(row["config"])
+        killed = int(cfg.rsplit("killed=", 1)[-1])
+        if str(row["us_per_call"]) == "-":
+            rows[killed] = (float("nan"), str(row["derived"]))
+        else:
+            rows[killed] = (float(row["us_per_call"]),
+                            str(row["derived"]))
+    fails = []
+    for killed in (0, 1):
+        if killed not in rows:
+            fails.append(f"no fleet_failover_cpu row for killed={killed} "
+                         f"(re-run benchmarks/bench_serve_latency.py)")
+            continue
+        us, derived = rows[killed]
+        if us != us:  # NaN: the bench recorded no latency samples
+            fails.append(f"fleet_failover_cpu killed={killed}: no data "
+                         f"({derived})")
+        elif "reconciles=OK" not in derived:
+            fails.append(f"fleet_failover_cpu killed={killed}: fleet "
+                         f"counters did not reconcile ({derived})")
+    if not fails and rows[1][0] > tolerance * rows[0][0]:
+        fails.append(
+            f"fleet_failover_cpu: killed=1 p95 {rows[1][0] / 1e3:.1f}ms > "
+            f"{tolerance:.1f}x healthy-fleet p95 {rows[0][0] / 1e3:.1f}ms")
+    return fails
+
+
 def compare_serve(baseline: dict[str, float], measured: dict[str, float],
                   tolerance: float, *, floor_us: float = 5_000.0
                   ) -> list[str]:
@@ -260,6 +300,7 @@ def main(argv: list[str] | None = None) -> int:
             print(f"  serve_phase_cpu phase={ph}: p95 "
                   f"{serve_meas[ph] / 1e3:.1f}ms ({ratio})")
         fails += compare_serve(serve_base, serve_meas, args.tolerance)
+        fails += check_fleet_rows(json.loads(serve_path.read_text()))
 
     if fails:
         print("check_bench: FAIL")

@@ -41,7 +41,8 @@ REQUIRED_FLAGS = {
                            "--split-radius", "--balance-boundary",
                            "--deadline-ms", "--chaos", "--ingest-rate",
                            "--rebuild-tail-frac", "--metrics-json",
-                           "--trace-out", "--compound", "--feedback"),
+                           "--trace-out", "--compound", "--feedback",
+                           "--replicas", "--hedge-ms", "--heartbeat-ms"),
 }
 
 # substrings README/docs must keep mentioning somewhere (operator-facing
@@ -86,6 +87,14 @@ REQUIRED_TOPICS = {
                 "feedback loop via serve --feedback) must stay "
                 "documented — it is how correlated multi-filter queries "
                 "escape the independence assumption",
+    "cache affinity": "the replicated fleet's consistent-hash routing "
+                      "(PR 10: vnode ring over quantized predicate "
+                      "embeddings, per-replica LRU caches partitioning "
+                      "the key space, serve --replicas / --hedge-ms / "
+                      "--heartbeat-ms, health-checked failover to ring "
+                      "successors, hedge_cancelled accounting) must stay "
+                      "documented — it is why R replicas don't cost R "
+                      "duplicated caches",
 }
 
 

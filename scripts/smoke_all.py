@@ -16,14 +16,20 @@ snapshot + sampled trace spans, validated to reconcile exactly against
 each other — docs/observability.md), a compound-planner smoke (correlated
 2/3/4-filter conjunctions: independence-assumption vs compound-probe
 estimates vs ground truth, plus coalesced compound planning with exact
-counter reconciliation), and a guard that the tier-1 suite
+counter reconciliation), a fleet smoke (replicated serving, PR 10: cache-affinity routing on a
+3-replica fleet beats the duplicated-cache random baseline on a skewed
+hot workload, and a subprocess ``serve --replicas 3`` survives a chaos
+replica-kill mid-run with zero failed queries and exact fleet
+reconciliation), and a guard that the tier-1 suite
 actually collects hypothesis property tests (they silently skipped for
 several PRs when the package was missing — the vendored shim makes that
 impossible now)
 so hot-path regressions surface here first. ``--check-docs`` additionally
 runs scripts/check_docs.py (README/docs drift vs actual entrypoints);
 ``--check-bench`` runs scripts/check_bench.py --quick (probe + serve-p95
-perf gates vs the persisted BENCH_*.json baselines)."""
+perf gates vs the persisted BENCH_*.json baselines); ``--quick`` skips
+the per-arch model smokes (CI's fast path — the serving/index smokes
+still run)."""
 
 import os
 import subprocess
@@ -584,6 +590,93 @@ def run_obs_smoke():
           f"qerror[{','.join(sorted(snap['qerror']))}]")
 
 
+def run_fleet_smoke():
+    """Replicated serving fleet (PR 10) end to end. In-process: on an
+    80%-hot skewed workload, a 3-replica affinity fleet's aggregate cache
+    hit rate meets the single-replica oracle and beats (>=) the
+    duplicated-cache random-routing baseline, with exact per-replica AND
+    fleet-wide reconciliation. Subprocess: ``serve --replicas 3`` with a
+    chaos ``replica-kill`` mid-run exits cleanly — survivors absorb the
+    dead replica's keys, zero failed queries, fleet counters reconcile."""
+    import json
+    import tempfile
+    from pathlib import Path
+
+    from repro.core.histogram import SemanticHistogram
+    from repro.launch.coalescer import CoalescerConfig, PredicateCoalescer
+    from repro.launch.fleet import FLEET_BUCKETS, FleetConfig, ReplicaSet
+
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((500, 32)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    hot, cold = x[:8], x[100:110]
+    thr8, thr2 = np.full(8, 0.8, np.float32), np.full(2, 0.8, np.float32)
+    # 5 passes x (8 hot + 2 fresh cold) = 50 requests, 80% hot repeats
+    ccfg = CoalescerConfig(window_ms=1.0, cache_capacity=60)
+
+    def reconciled(st):
+        assert st["requests"] == sum(st[b] for b in FLEET_BUCKETS), st
+        assert st["reconciles"], st
+        for rep in st["replicas"]:
+            assert rep["requests"] == sum(rep[b] for b in FLEET_BUCKETS)
+            assert rep["reconciles"], rep
+        return st
+
+    def fleet_hit_rate(routing):
+        hists = [SemanticHistogram(jnp.asarray(x)) for _ in range(3)]
+        with ReplicaSet(hists, ccfg, fleet=FleetConfig(
+                replicas=3, routing=routing, heartbeat_ms=0.0,
+                seed=7)) as fleet:
+            for p in range(5):
+                fleet.probe_outcomes(hot, thr8)
+                fleet.probe_outcomes(cold[2 * p:2 * p + 2], thr2)
+            st = reconciled(fleet.stats())
+        return st["cache"]["hit_rate"]
+
+    with PredicateCoalescer(SemanticHistogram(jnp.asarray(x)),
+                            ccfg) as solo:
+        for p in range(5):
+            solo.probe_outcomes(hot, thr8)
+            solo.probe_outcomes(cold[2 * p:2 * p + 2], thr2)
+        single = solo.stats()["cache"]["hit_rate"]
+    affinity = fleet_hit_rate("affinity")
+    random_ = fleet_hit_rate("random")
+    # affinity partitions the hot set, so 1/3-capacity caches match the
+    # full-size single cache; random routing duplicates and re-misses
+    assert affinity >= single, (affinity, single)
+    assert affinity >= random_, (affinity, random_)
+
+    root = Path(__file__).resolve().parent.parent
+    env = {**os.environ, "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": str(root / "src")}
+    env.pop("XLA_FLAGS", None)
+    with tempfile.TemporaryDirectory() as td:
+        mpath = Path(td) / "m.json"
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve",
+             "--concurrency", "4", "--queries", "6", "--filters", "2",
+             "--passes", "2", "--n-images", "300",
+             "--replicas", "3", "--heartbeat-ms", "20",
+             "--chaos", "replica-kill=1@4",
+             "--metrics-json", str(mpath)],
+            capture_output=True, text=True, timeout=600, cwd=root, env=env)
+        assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+        snap = json.loads(mpath.read_text())
+    fl = snap["fleet"]
+    assert fl["reconciles"] is True, fl
+    assert all(rep["reconciles"] for rep in fl["replicas"]), fl
+    assert fl["chaos"]["injected_kills"] == 1, fl["chaos"]
+    dead = [rep["rid"] for rep in fl["replicas"] if not rep["alive"]]
+    assert dead == [1], dead
+    assert fl["replicas"][1]["requests"] + fl["requests"] > 0
+    # post-kill recovery: survivors finished the workload, nothing failed
+    assert snap["serve"]["failed_queries"] == 0, snap["serve"]
+    assert snap["serve"]["queries"] > 0
+    print(f"OK  fleet_replicas           hit_rate affinity="
+          f"{affinity:.0%} >= single={single:.0%}, random={random_:.0%}; "
+          f"replica-kill survived, {fl['requests']} requests reconcile")
+
+
 def run_hypothesis_guard():
     """Fail loudly if the tier-1 suite would collect zero hypothesis
     property tests — the silent-skip failure mode this PR fixes."""
@@ -617,11 +710,15 @@ if __name__ == "__main__":
         from check_bench import main as check_bench_main
         if check_bench_main(["--quick"]) != 0:
             fails.append("check_bench")
-    archs = argv or list(ASSIGNED)
+    quick = "--quick" in argv
+    argv = [a for a in argv if a != "--quick"]
+    # --quick: CI's fast path — serving/index smokes only, no per-arch
+    # model runs (those dominate wall time and have their own tier-1 tests)
+    archs = argv if quick else (argv or list(ASSIGNED))
     for smoke in (run_probe_smoke, run_coalescer_smoke, run_index_smoke,
                   run_sharded_smoke, run_balanced_smoke, run_chaos_smoke,
                   run_ingest_smoke, run_obs_smoke, run_compound_smoke,
-                  run_hypothesis_guard):
+                  run_fleet_smoke, run_hypothesis_guard):
         try:
             smoke()
         except Exception:

@@ -276,12 +276,19 @@ class CoalescerConfig:
 @dataclasses.dataclass(frozen=True)
 class ProbeOutcome:
     """One request's resolution: exact (lo == sel == hi) or degraded
-    (``sel`` is the midpoint of the certified interval [lo, hi])."""
+    (``sel`` is the midpoint of the certified interval [lo, hi]).
+
+    ``bucket`` names the reconciliation bucket the resolution was counted
+    under (``probe_scored`` / ``cache_hits`` / ``coalesced_dups`` /
+    ``shed`` / ``degraded``). The fleet router (PR 10) reads it to
+    attribute each outcome to the replica that produced it without
+    re-deriving the classification."""
 
     sel: float
     lo: float
     hi: float
     degraded: bool = False
+    bucket: str = ""
 
 
 class _Pending:
@@ -348,7 +355,8 @@ class PredicateCoalescer:
                  cache: PredicateCache | None = None, chaos=None,
                  retry: RetryPolicy | None = None,
                  breaker: CircuitBreaker | None = None,
-                 obs: ObsHub | None = None):
+                 obs: ObsHub | None = None,
+                 metrics_prefix: str = "coalescer"):
         self.hist = hist
         self.cfg = config or CoalescerConfig()
         self.cache = cache if cache is not None else PredicateCache(
@@ -360,12 +368,15 @@ class PredicateCoalescer:
         self.watchdog = StepWatchdog()      # flush-latency EWMA
         # telemetry: counters live in the (possibly shared) registry so
         # stats(), the exit summary, and --metrics-json read ONE source;
-        # handles are resolved once here, never by name on the hot path
+        # handles are resolved once here, never by name on the hot path.
+        # ``metrics_prefix`` namespaces the counters so fleet replicas
+        # sharing one registry don't merge their per-replica counts.
         self.obs = obs if obs is not None else ObsHub()
+        self.metrics_prefix = metrics_prefix
         reg = self.obs.registry
-        self._c = {name: reg.counter(f"coalescer.{name}")
+        self._c = {name: reg.counter(f"{metrics_prefix}.{name}")
                    for name in self._COUNTERS}
-        self._hwm = reg.gauge("coalescer.queue_depth_hwm")
+        self._hwm = reg.gauge(f"{metrics_prefix}.queue_depth_hwm")
         self._lat = {ph: reg.histogram(f"serve.{ph}_ms")
                      for ph in ("queue_wait", "probe", "combine",
                                 "request")}
@@ -415,13 +426,14 @@ class PredicateCoalescer:
         return np.asarray([o.sel for o in
                            self.probe_outcomes(preds, thresholds)])
 
-    def _bound_outcome(self, emb: np.ndarray, thr: float) -> ProbeOutcome:
+    def _bound_outcome(self, emb: np.ndarray, thr: float,
+                       bucket: str = "degraded") -> ProbeOutcome:
         """Certified bound-only answer for one predicate (never cached)."""
         lo, hi = self.hist.selectivity_bounds(
             np.asarray(emb)[None, :], np.asarray([thr], np.float32))
         lo, hi = float(lo[0]), float(hi[0])
         return ProbeOutcome(sel=0.5 * (lo + hi), lo=lo, hi=hi,
-                            degraded=True)
+                            degraded=True, bucket=bucket)
 
     def probe_outcomes(self, preds: np.ndarray, thresholds: np.ndarray, *,
                        deadline: float | None = None,
@@ -497,7 +509,8 @@ class PredicateCoalescer:
                 if cached is not None:
                     self._c["cache_hits"].inc()
                     sel = int(cached[0][0]) / self.hist.n
-                    out[j] = ProbeOutcome(sel, sel, sel, False)
+                    out[j] = ProbeOutcome(sel, sel, sel, False,
+                                          bucket="cache_hits")
                     self._lat["request"].observe(
                         (time.monotonic() - t_sub[j]) * 1e3)
                     span(j, "cache_hits")
@@ -506,10 +519,16 @@ class PredicateCoalescer:
                 if entry is not None:
                     waits.append((j, entry, False))
                     continue
-                breaker_open = self.breaker.is_open
+                # a killed / closing coalescer has no flusher to land the
+                # probe: fail fast (degraded or FlusherDiedError) instead
+                # of enqueuing into a queue nobody will ever drain — the
+                # fleet router relies on this to fail over immediately
+                # when a replica dies between health check and dispatch
+                dead = self._stop or not self._flusher.is_alive()
+                breaker_open = (not dead) and self.breaker.is_open
                 if breaker_open:
                     self._c["breaker_fastfails"].inc()
-                shed = (not breaker_open) and (
+                shed = (not breaker_open and not dead) and (
                     (self.cfg.max_queue
                      and len(self._pending) >= self.cfg.max_queue)
                     or (self.cfg.max_pending_age_ms and self._pending
@@ -519,7 +538,7 @@ class PredicateCoalescer:
                         and self.watchdog.ewma_s is not None
                         and time.monotonic() + self.watchdog.ewma_s
                         > deadline))
-                if not (breaker_open or shed):
+                if not (breaker_open or shed or dead):
                     entry = _Pending(key, preds[j], thrs[j])
                     self._inflight[key] = entry
                     self._pending.append(entry)
@@ -527,14 +546,18 @@ class PredicateCoalescer:
                     self._cv.notify_all()
                     waits.append((j, entry, True))
                     continue
-                bucket = "degraded" if breaker_open else "shed"
+                bucket = "shed" if shed else "degraded"
             # resolve the fast-fail outside the lock (bounds read the index)
             if degraded_ok:
-                out[j] = self._bound_outcome(preds[j], thrs[j])
+                out[j] = self._bound_outcome(preds[j], thrs[j],
+                                             bucket=bucket)
                 self._c[bucket].inc()
                 self._lat["request"].observe(
                     (time.monotonic() - t_sub[j]) * 1e3)
                 span(j, bucket)
+            elif dead:
+                fail(j, FlusherDiedError(
+                    "coalescer is closed or its flusher died"), waits)
             elif breaker_open:
                 fail(j, BreakerOpenError(
                     "probe circuit breaker is open"), waits)
@@ -554,8 +577,8 @@ class PredicateCoalescer:
             landed = entry.event.wait(timeout=timeout)
             if landed and entry.error is None:
                 sel = int(entry.value[0][0]) / self.hist.n
-                out[j] = ProbeOutcome(sel, sel, sel, False)
                 bucket = "probe_scored" if creator else "coalesced_dups"
+                out[j] = ProbeOutcome(sel, sel, sel, False, bucket=bucket)
                 self._c[bucket].inc()
                 wall = time.monotonic() - t_sub[j]
                 combine = max(0.0, wall - entry.qw_s - entry.probe_s)
@@ -728,6 +751,31 @@ class PredicateCoalescer:
             self._flusher = self._spawn_flusher()
 
     # ---------------------------------------------------------- lifecycle
+
+    def queue_depth(self) -> int:
+        """Current pending-queue depth (fleet backpressure reads this)."""
+        with self._cv:
+            return len(self._pending)
+
+    @property
+    def alive(self) -> bool:
+        """True while the flusher is running and the coalescer is open."""
+        return not self._stop and self._flusher.is_alive()
+
+    def kill(self, exc: BaseException | None = None) -> None:
+        """Abrupt, permanent shutdown (chaos ``replica-kill``).
+
+        Unlike ``close()`` this does NOT drain: the flusher is told to
+        stop, every pending/in-flight waiter is failed immediately with
+        ``FlusherDiedError``, and no replacement flusher is started
+        (``_stop`` suppresses the restart). Submits after the kill fail
+        fast via the dead-flusher guard in ``probe_outcomes``.
+        """
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._on_flusher_death(
+            exc if exc is not None else RuntimeError("replica killed"))
 
     def flush_now(self) -> None:
         """Close the current window immediately (tests / drain)."""

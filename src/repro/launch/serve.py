@@ -254,7 +254,9 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
                      max_queue: int = 0, degraded_ok: bool = False,
                      chaos_spec: str = "", ingest_rate: float = 0.0,
                      obs: ObsHub | None = None, compound: bool = False,
-                     feedback: bool = False) -> dict:
+                     feedback: bool = False, replicas: int = 1,
+                     hedge_ms: float = 0.0,
+                     heartbeat_ms: float = 50.0) -> dict:
     """Cross-query serving: N planner threads share one coalescer + cache.
 
     The control plane rides along per request: each plan's probes carry the
@@ -264,17 +266,34 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
     the rest of the workload proceeds. ``obs`` (an ``repro.obs.ObsHub``)
     collects counters / latency histograms / q-error accounting / trace
     spans; the exit summary is rendered by the caller from its registry.
-    Returns the coalescer stats dict (the smoke harness asserts on it)."""
+    Returns the coalescer stats dict (the smoke harness asserts on it).
+
+    ``replicas > 1`` (PR 10) serves through a ``repro.launch.fleet``
+    ``ReplicaSet`` instead of one coalescer: R replicas over the same
+    store build, predicates routed by cache affinity with health-checked
+    failover, optional hedged duplicates (``hedge_ms``), heartbeat
+    monitoring (``heartbeat_ms``), and replica-scoped chaos keys in
+    ``chaos_spec`` (``replica-kill=R@N`` / ``replica-slow=R@N:MS`` /
+    ``partition=R@A-B``). Returns the fleet stats dict (it carries a
+    ``replicas`` list — that's how the caller tells the two shapes
+    apart)."""
     est = estimators[est_name]
     obs = obs if obs is not None else ObsHub()
     cache = PredicateCache(cache_size, bits=cache_bits)
     if feedback and hasattr(est, "observe"):
         # the serving predicate cache doubles as the observed-selectivity
         # store: same quantization, same LRU discipline, version-keyed
+        # (with a fleet this cache only holds observed selectivities —
+        # the probe caches live inside the replicas)
         est.feedback = True
         est.observed_cache = cache
-    chaos = None
-    if chaos_spec:
+    chaos = fleet_chaos = None
+    if chaos_spec and replicas > 1:
+        from repro.launch.chaos import FleetChaos, FleetChaosConfig
+
+        fleet_chaos = FleetChaos(FleetChaosConfig.parse(chaos_spec),
+                                 obs=obs)
+    elif chaos_spec:
         from repro.launch.chaos import ChaosConfig, ChaosInjector
 
         chaos = ChaosInjector(ChaosConfig.parse(chaos_spec), obs=obs)
@@ -286,6 +305,8 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
           f"requests, estimator={est_name}, threads={concurrency}, "
           f"window={window_ms}ms, max_batch={max_batch}, "
           f"cache={cache_size}x{cache_bits}bit"
+          + (f", replicas={replicas}" if replicas > 1 else "")
+          + (f", hedge={hedge_ms}ms" if hedge_ms else "")
           + (f", deadline={deadline_ms}ms" if deadline_ms else "")
           + (f", max_queue={max_queue}" if max_queue else "")
           + (", degraded-ok" if degraded_ok else "")
@@ -317,12 +338,30 @@ def serve_concurrent(corpus, estimators, queries, *, est_name: str,
                                          name="serve-ingest", daemon=True)
         ingest_thread.start()
 
+    ccfg = CoalescerConfig(max_batch=max_batch, window_ms=window_ms,
+                           cache_capacity=cache_size,
+                           cache_bits=cache_bits, max_queue=max_queue)
+    if replicas > 1:
+        from repro.launch.fleet import FleetConfig, ReplicaSet
+
+        # every replica gets its own store HANDLE over the same arrays /
+        # index object — bitwise-identical probes, one copy of the data
+        hists = [est.hist] + [
+            SemanticHistogram(est.hist.embeddings, mesh=est.hist.mesh,
+                              impl=est.hist.impl, index=est.hist.index)
+            for _ in range(replicas - 1)]
+        serving = ReplicaSet(
+            hists, ccfg,
+            fleet=FleetConfig(replicas=replicas, hedge_ms=hedge_ms,
+                              heartbeat_ms=heartbeat_ms,
+                              max_replica_queue=max_queue),
+            chaos=fleet_chaos, obs=obs)
+    else:
+        serving = PredicateCoalescer(est.hist, ccfg, cache=cache,
+                                     chaos=chaos, obs=obs)
+
     failures: list[tuple[int, str]] = []
-    with PredicateCoalescer(
-            est.hist,
-            CoalescerConfig(max_batch=max_batch, window_ms=window_ms,
-                            max_queue=max_queue),
-            cache=cache, chaos=chaos, obs=obs) as coal:
+    with serving as coal:
 
         def run_one(job):
             _, qi, q = job
@@ -464,7 +503,27 @@ def main(argv=None) -> None:
                     help="deterministic fault injection on the probe path, "
                          "e.g. 'seed=1,fail=0.3,delay=0.2,delay-ms=5,"
                          "kill-at=3' — seeded probe failures/delays and a "
-                         "flusher kill at the given launch ordinal")
+                         "flusher kill at the given launch ordinal; with "
+                         "--replicas also replica-scoped faults keyed by "
+                         "fleet dispatch ordinal: 'replica-kill=1@6', "
+                         "'replica-slow=2@3:25', 'partition=0@4-9'")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help=">1: serve through a replicated fleet — this many "
+                         "independent replicas (own coalescer, predicate "
+                         "cache, breaker) over the same store build, with "
+                         "cache-affinity consistent-hash routing and "
+                         "health-checked ring-successor failover; needs "
+                         "--concurrency > 1")
+    ap.add_argument("--hedge-ms", type=float, default=0.0,
+                    help=">0 with --replicas: fire a hedged duplicate at "
+                         "the key's next healthy replica when a dispatch "
+                         "hasn't landed within this budget; first "
+                         "completion wins, the loser is accounted "
+                         "hedge_cancelled")
+    ap.add_argument("--heartbeat-ms", type=float, default=50.0,
+                    help="fleet health monitor period: replicas missing "
+                         "beats for 5x this are routed around until they "
+                         "recover (0 disables the monitor)")
     ap.add_argument("--compound", action="store_true",
                     help="order multi-filter plans by conditional (joint) "
                          "selectivity through the index's one-launch "
@@ -496,6 +555,9 @@ def main(argv=None) -> None:
     if args.ingest_rate > 0 and args.concurrency <= 1:
         ap.error("--ingest-rate streams during the concurrent serve "
                  "path — it needs --concurrency > 1")
+    if args.replicas > 1 and args.concurrency <= 1:
+        ap.error("--replicas serves through the concurrent path — it "
+                 "needs --concurrency > 1")
     tracer = (Tracer(args.trace_out, sample=args.trace_sample)
               if args.trace_out else None)
     hub = ObsHub(tracer=tracer)
@@ -525,17 +587,31 @@ def main(argv=None) -> None:
             passes=args.passes, deadline_ms=args.deadline_ms,
             max_queue=args.max_queue, degraded_ok=args.degraded_ok,
             chaos_spec=args.chaos, ingest_rate=args.ingest_rate,
-            obs=hub, compound=args.compound, feedback=args.feedback)
+            obs=hub, compound=args.compound, feedback=args.feedback,
+            replicas=args.replicas, hedge_ms=args.hedge_ms,
+            heartbeat_ms=args.heartbeat_ms)
     else:
         serve_sequential(corpus, estimators, queries, seed=args.seed,
                          obs=hub, compound=args.compound,
                          feedback=args.feedback)
+    is_fleet = stats is not None and "replicas" in stats
     snap = obs_report.build_snapshot(
-        registry=hub.registry, coalescer=stats,
+        registry=hub.registry,
+        coalescer=None if is_fleet else stats,
+        fleet=stats if is_fleet else None,
         index=index.stats() if index is not None else None,
         mutable=bool(getattr(index, "is_mutable", False)))
     print()
     print(obs_report.render(snap))
+    if is_fleet:
+        # the fleet invariant is load-bearing: a serve run that fails to
+        # reconcile its counters must not exit 0
+        fl = snap["fleet"]
+        if not (fl["reconciles"]
+                and all(r["reconciles"] for r in fl["replicas"])):
+            raise SystemExit(
+                "fleet counters do not reconcile (requests != sum of "
+                "resolution buckets) — see the fleet block above")
     if args.metrics_json:
         obs_report.write_json(snap, args.metrics_json)
         print(f"metrics snapshot -> {args.metrics_json}")

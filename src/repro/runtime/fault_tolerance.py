@@ -224,6 +224,23 @@ class HeartbeatRegistry:
         now = time.time() if now is None else now
         return [h for h, t in self.last_seen.items() if now - t > self.timeout_s]
 
+    def age_s(self, host: int, now: float | None = None) -> float | None:
+        """Seconds since the host's last beat (None if it never beat)."""
+        t = self.last_seen.get(host)
+        if t is None:
+            return None
+        return (time.time() if now is None else now) - t
+
+    def fresh(self, host: int, now: float | None = None) -> bool:
+        """True while the host has beaten within ``timeout_s``.
+
+        A host that has *never* beaten is not fresh — the fleet router
+        beats every replica once at construction, so an all-False start
+        can only mean the monitor was never wired up.
+        """
+        age = self.age_s(host, now)
+        return age is not None and age <= self.timeout_s
+
 
 class FaultTolerantRunner:
     """Drives train steps with retry / restore-from-checkpoint semantics.
